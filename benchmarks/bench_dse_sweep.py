@@ -1,0 +1,77 @@
+"""Figs. 8 & 9: algorithmic DSE over A = {H, NL, B} — Pareto-optimal
+architectures are at least partially Bayesian (the paper's headline claim).
+
+Builds the lookup table the optimization framework (§IV) searches over.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+
+
+AE_GRID = [      # (hidden, num_layers, placement)
+    (16, 1, "NN"), (16, 1, "YY"), (16, 1, "YN"),
+    (8, 1, "NN"), (8, 1, "YY"),
+    (16, 2, "NNNN"), (16, 2, "YNYN"),
+]
+
+CLF_GRID = [
+    (8, 1, "N"), (8, 1, "Y"),
+    (8, 2, "NN"), (8, 2, "YN"),
+    (8, 3, "NYN"), (8, 3, "YNY"), (8, 3, "YNN"), (8, 3, "NNN"),
+]
+
+
+def build_tables():
+    def build():
+        ae_rows = []
+        for h, nl, b in AE_GRID:
+            cfg, params = common.train_autoencoder(b, hidden=h, num_layers=nl)
+            m = common.eval_autoencoder(cfg, params)
+            ae_rows.append({"hidden": h, "num_layers": nl, "placement": b, **m})
+        clf_rows = []
+        for h, nl, b in CLF_GRID:
+            cfg, params = common.train_classifier(b, hidden=h, num_layers=nl)
+            m = common.eval_classifier(cfg, params)
+            clf_rows.append({"hidden": h, "num_layers": nl, "placement": b, **m})
+        return {"anomaly": ae_rows, "classification": clf_rows}
+    return common.cached_json("dse_lookup.json", build)
+
+
+def run():
+    tables = build_tables()
+    # Fig. 8: anomaly detection ROC summary
+    best_bayes, best_point = None, None
+    for row in tables["anomaly"]:
+        tgt = best_point if set(row["placement"]) == {"N"} else best_bayes
+        if set(row["placement"]) == {"N"}:
+            if best_point is None or row["auc"] > best_point["auc"]:
+                best_point = row
+        else:
+            if best_bayes is None or row["auc"] > best_bayes["auc"]:
+                best_bayes = row
+        common.emit(
+            f"fig8.anomaly.H{row['hidden']}.NL{row['num_layers']}.B{row['placement']}",
+            0.0, f"auc={row['auc']:.3f};ap={row['ap']:.3f};acc={row['accuracy']:.3f}")
+    common.emit("fig8.summary", 0.0,
+                f"bayes_auc={best_bayes['auc']:.3f};point_auc={best_point['auc']:.3f};"
+                f"pareto_bayesian={best_bayes['auc'] >= best_point['auc']}")
+    # Fig. 9: classification
+    bb, bp = None, None
+    for row in tables["classification"]:
+        if set(row["placement"]) == {"N"}:
+            if bp is None or row["accuracy"] > bp["accuracy"]:
+                bp = row
+        else:
+            if bb is None or row["accuracy"] > bb["accuracy"]:
+                bb = row
+        common.emit(
+            f"fig9.clf.H{row['hidden']}.NL{row['num_layers']}.B{row['placement']}",
+            0.0, f"acc={row['accuracy']:.3f};ap={row['ap']:.3f};"
+                 f"ar={row['ar']:.3f};entropy={row['entropy']:.3f}")
+    common.emit("fig9.summary", 0.0,
+                f"bayes_acc={bb['accuracy']:.3f};point_acc={bp['accuracy']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

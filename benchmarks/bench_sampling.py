@@ -1,0 +1,27 @@
+"""Fig. 10: metric change with the number of MC samples S ∈ {1, 10, 30, 100}
+— S beyond ~30 gives diminishing returns (the paper's hardware sizing input).
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+from benchmarks.bench_dse_sweep import build_tables  # noqa: F401 (table cache)
+
+
+def run():
+    cfg_c, params_c = common.train_classifier("YNY", hidden=8, num_layers=3)
+    cfg_a, params_a = common.train_autoencoder("YY", hidden=16, num_layers=1)
+    prev = None
+    for s in (1, 10, 30, 100):
+        m = common.eval_classifier(cfg_c, params_c, n_samples=s, n_test=512)
+        a = common.eval_autoencoder(cfg_a, params_a, n_samples=s, n_test=512)
+        gain = (m["accuracy"] - prev) if prev is not None else 0.0
+        prev = m["accuracy"]
+        common.emit(f"fig10.S{s}", 0.0,
+                    f"clf_acc={m['accuracy']:.3f};clf_entropy={m['entropy']:.3f};"
+                    f"ae_auc={a['auc']:.3f};ae_nll={a['nll']:.3f};"
+                    f"acc_gain_vs_prev={gain:+.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,173 @@
+"""Shared benchmark utilities: timing, quick training, the DSE lookup table."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autoencoder as ae
+from repro.core import bayesian, classifier as clf, mcd, uncertainty as unc
+from repro.data import ecg
+from repro.train import optimizer, trainer
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time (µs) of a jitted call (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+_DATA = None
+
+
+def data():
+    global _DATA
+    if _DATA is None:
+        _DATA = ecg.make_ecg5000(0)
+    return _DATA
+
+
+def train_classifier(placement: str, hidden: int = 8, num_layers: int = 2,
+                     steps: int = 120, p: float = 0.125, seed: int = 0,
+                     lr: float = 3e-3, dtype=jnp.float32):
+    tx, ty, _, _ = data()
+    cfg = clf.ClassifierConfig(
+        hidden=hidden, num_layers=num_layers,
+        mcd=mcd.MCDConfig(p=p, placement=placement, n_samples=30, seed=seed))
+    params = clf.init(jax.random.key(seed), cfg, dtype)
+
+    def loss(prm, batch, step):
+        x, y = batch
+        rows = jnp.arange(x.shape[0], dtype=jnp.uint32)
+        logits = clf.apply(prm, x, rows, cfg)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1)), {}
+
+    tr = trainer.Trainer(loss, params,
+                         trainer.TrainConfig(adamw=optimizer.AdamWConfig(lr=lr),
+                                             log_every=0))
+    pipe = ecg.Pipeline(tx, ty, batch_size=64, seed=seed)
+    batches = (tuple(map(jnp.asarray, b))
+               for e in range(200) for b in pipe.epoch(e))
+    tr.run(batches, steps)
+    return cfg, tr.params
+
+
+def train_autoencoder(placement: str, hidden: int = 16, num_layers: int = 1,
+                      steps: int = 120, p: float = 0.125, seed: int = 0,
+                      lr: float = 3e-3, dtype=jnp.float32):
+    tx, ty, _, _ = data()
+    normal = jnp.asarray(tx[ty == 0])
+    cfg = ae.AutoencoderConfig(
+        hidden=hidden, num_layers=num_layers,
+        mcd=mcd.MCDConfig(p=p, placement=placement, n_samples=30, seed=seed))
+    params = ae.init(jax.random.key(seed), cfg, dtype)
+
+    def loss(prm, batch, step):
+        x = batch
+        rows = jnp.arange(x.shape[0], dtype=jnp.uint32)
+        mean, log_var = ae.apply(prm, x, rows, cfg)
+        return jnp.mean(ae.gaussian_nll(mean, log_var, x)), {}
+
+    tr = trainer.Trainer(loss, params,
+                         trainer.TrainConfig(adamw=optimizer.AdamWConfig(lr=lr),
+                                             log_every=0))
+    n = normal.shape[0]
+    batches = (normal[(i * 64) % max(n - 64, 1):][:64] for i in range(10_000))
+    tr.run(batches, steps)
+    return cfg, tr.params
+
+
+def eval_classifier(cfg, params, n_samples: int | None = None,
+                    n_test: int = 1024):
+    _, _, ex, ey = data()
+    x, y = jnp.asarray(ex[:n_test]), jnp.asarray(ey[:n_test])
+    mcfg = cfg.mcd if n_samples is None else cfg.mcd.replace(n_samples=n_samples)
+    logits = bayesian.predict(lambda p, x_, r: clf.apply(p, x_, r, cfg),
+                              params, x, mcfg)
+    s = unc.classification_summary(logits)
+    probs = np.asarray(s.probs)
+    yn = np.asarray(y)
+    pred = probs.argmax(-1)
+    acc = float((pred == yn).mean())
+    # macro average precision / recall
+    ap, ar = [], []
+    for c in range(probs.shape[-1]):
+        tp = float(((pred == c) & (yn == c)).sum())
+        fp = float(((pred == c) & (yn != c)).sum())
+        fn = float(((pred != c) & (yn == c)).sum())
+        ap.append(tp / (tp + fp) if tp + fp else 0.0)
+        ar.append(tp / (tp + fn) if tp + fn else 0.0)
+    noise = jax.random.normal(jax.random.key(5), x.shape)
+    s_noise = unc.classification_summary(
+        bayesian.predict(lambda p, x_, r: clf.apply(p, x_, r, cfg),
+                         params, noise, mcfg))
+    return {"accuracy": acc, "ap": float(np.mean(ap)), "ar": float(np.mean(ar)),
+            "entropy": float(np.asarray(s_noise.predictive_entropy).mean())}
+
+
+def eval_autoencoder(cfg, params, n_samples: int | None = None,
+                     n_test: int = 768):
+    _, _, ex, ey = data()
+    x = jnp.asarray(ex[:n_test])
+    yn = np.asarray(ey[:n_test]) != 0          # anomaly = positive
+    mcfg = cfg.mcd if n_samples is None else cfg.mcd.replace(n_samples=n_samples)
+    means, log_vars = bayesian.predict(
+        lambda p, x_, r: ae.apply(p, x_, r, cfg), params, x, mcfg)
+    s = unc.regression_summary(means, log_vars)
+    score = np.asarray(unc.rmse(s, x))         # higher = more anomalous
+    auc = _auc(yn, score)
+    # accuracy / AP at the ROC-optimal cutoff (paper §V-A1)
+    order = np.argsort(-score)
+    tp = np.cumsum(yn[order])
+    fp = np.cumsum(~yn[order])
+    tpr = tp / max(yn.sum(), 1)
+    fpr = fp / max((~yn).sum(), 1)
+    youden = np.argmax(tpr - fpr)
+    thr = score[order][youden]
+    pred = score >= thr
+    acc = float((pred == yn).mean())
+    prec = float((pred & yn).sum() / max(pred.sum(), 1))
+    return {"auc": auc, "accuracy": acc, "ap": prec,
+            "rmse": float(score.mean()),
+            "nll": float(np.asarray(unc.regression_nll(s, x)).mean())}
+
+
+def _auc(y: np.ndarray, score: np.ndarray) -> float:
+    order = np.argsort(score)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(score) + 1)
+    pos = y.sum()
+    neg = len(y) - pos
+    if pos == 0 or neg == 0:
+        return 0.5
+    return float((ranks[y].sum() - pos * (pos + 1) / 2) / (pos * neg))
+
+
+def cached_json(name: str, builder):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    out = builder()
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out

@@ -1,0 +1,70 @@
+"""Roofline report: reads the dry-run JSONL records and emits the
+EXPERIMENTS.md §Roofline table (and the CSV lines for benchmarks.run)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+
+
+def load(path: str):
+    full = os.path.join(common.RESULTS_DIR, path)
+    if not os.path.exists(full):
+        return []
+    recs = {}
+    for line in open(full):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r   # last write wins
+    return list(recs.values())
+
+
+def markdown_table(recs) -> str:
+    rows = ["| arch | shape | mesh | t_compute (s) | t_memory (s) | "
+            "t_collective (s) | bottleneck | MODEL_FLOPs/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skipped | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | — | — | — | — | — |")
+            continue
+        frac = r.get("roofline_fraction",
+                     r.get("t_compute", 0)
+                     / max(r.get("t_compute", 0), r.get("t_memory", 1e-30),
+                           r.get("t_collective", 0)))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('t_compute', 0):.3e} | {r.get('t_memory', 0):.3e} | "
+            f"{r.get('t_collective', 0):.3e} | {r.get('bottleneck', '—')} | "
+            f"{r.get('useful_flops_ratio', 0):.3f} | {frac:.3f} |")
+    return "\n".join(rows)
+
+
+def run():
+    recs = load("baseline_pod.jsonl")
+    ok = [r for r in recs if r["status"] == "ok"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        t = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        common.emit(f"roofline.{r['arch']}.{r['shape']}", t * 1e6,
+                    f"bottleneck={r['bottleneck']};"
+                    f"frac={r.get('roofline_fraction', 0):.3f};"
+                    f"useful={r.get('useful_flops_ratio', 0):.3f}")
+    mp = load("baseline_multipod.jsonl")
+    n_ok = sum(r["status"] == "ok" for r in mp)
+    n_skip = sum(r["status"] == "skipped" for r in mp)
+    common.emit("dryrun.multipod", 0.0,
+                f"ok={n_ok};skipped={n_skip};"
+                f"errors={len(mp) - n_ok - n_skip};cells={len(mp)}")
+    common.emit("dryrun.pod", 0.0,
+                f"ok={len(ok)};skipped={sum(r['status']=='skipped' for r in recs)};"
+                f"errors={len(recs)-len(ok)-sum(r['status']=='skipped' for r in recs)};"
+                f"cells={len(recs)}")
+
+
+if __name__ == "__main__":
+    run()

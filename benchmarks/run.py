@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark line.
+
+  fig8/fig9    bench_dse_sweep       (algorithmic DSE, Pareto)
+  fig10        bench_sampling        (metrics vs S)
+  table1/2     bench_quantization    (fp32 vs bf16 vs int8)
+  table3       bench_resource_model  (DSP + TPU memory model accuracy)
+  table4       bench_latency         (CPU measured + FPGA/TPU modeled)
+  table5/6     bench_opt_modes       (optimization framework outputs)
+  kernels      bench_kernels         (fused vs unfused)
+  roofline     roofline              (dry-run derived terms, all 40 cells)
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_dse_sweep, bench_kernels, bench_latency,
+                            bench_opt_modes, bench_quantization,
+                            bench_resource_model, bench_sampling, roofline)
+    benches = [
+        ("dse_sweep", bench_dse_sweep),
+        ("sampling", bench_sampling),
+        ("quantization", bench_quantization),
+        ("resource_model", bench_resource_model),
+        ("latency", bench_latency),
+        ("opt_modes", bench_opt_modes),
+        ("kernels", bench_kernels),
+        ("roofline", roofline),
+    ]
+    failed = 0
+    for name, mod in benches:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.run()
+        except Exception:
+            failed += 1
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: train the paper's Bayesian recurrent autoencoder on
+ECG5000-compatible data and detect anomalies with uncertainty (paper §V-A1 +
+Fig. 1), including checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python examples/anomaly_detection.py [--steps 300]
+"""
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autoencoder as ae
+from repro.core import bayesian, mcd, uncertainty as unc
+from repro.data import ecg
+from repro.train import optimizer, trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="ecg_ae_")
+
+    # --- data: train on NORMAL beats only (reconstruction-based detection)
+    tx, ty, ex, ey = ecg.make_ecg5000(seed=0)
+    normal = jnp.asarray(tx[ty == 0])
+
+    # --- paper's best anomaly architecture: H=16, NL=2, B=YNYN
+    cfg = ae.AutoencoderConfig(
+        hidden=16, num_layers=2,
+        mcd=mcd.MCDConfig(p=0.125, placement="YNYN", n_samples=30, seed=0))
+    params = ae.init(jax.random.key(0), cfg)
+
+    def loss(p, batch, step):
+        rows = jnp.arange(batch.shape[0], dtype=jnp.uint32)
+        mean, log_var = ae.apply(p, batch, rows, cfg)
+        return jnp.mean(ae.gaussian_nll(mean, log_var, batch)), {}
+
+    tcfg = trainer.TrainConfig(
+        adamw=optimizer.AdamWConfig(lr=3e-3),     # clip 3.0 / wd 1e-4 (paper)
+        ckpt_dir=ckpt_dir, ckpt_every=100, log_every=50)
+    tr = trainer.Trainer(loss, params, tcfg)      # auto-resumes if restarted
+    n = normal.shape[0]
+    batches = (normal[(i * 64) % max(n - 64, 1):][:64] for i in range(10 ** 6))
+    tr.run(batches, args.steps)
+    print(f"trained to step {tr.step} (checkpoints in {ckpt_dir})")
+
+    # --- Bayesian anomaly scoring on the test set
+    x = jnp.asarray(ex[:1024])
+    is_anom = np.asarray(ey[:1024]) != 0
+    means, log_vars = bayesian.predict(
+        lambda p, xb, rows: ae.apply(p, xb, rows, cfg), params, x, cfg.mcd)
+    s = unc.regression_summary(means, log_vars)
+    score = np.asarray(unc.rmse(s, x))
+    total_unc = np.asarray(s.total.mean(axis=(1, 2)))
+
+    # ROC-AUC by rank statistic
+    order = np.argsort(score)
+    ranks = np.empty(len(score)); ranks[order] = np.arange(1, len(score) + 1)
+    pos = is_anom.sum(); neg = len(score) - pos
+    auc = (ranks[is_anom].sum() - pos * (pos + 1) / 2) / (pos * neg)
+
+    print(f"\nreconstruction RMSE:  normal={score[~is_anom].mean():.3f}  "
+          f"anomalous={score[is_anom].mean():.3f}")
+    morph = np.asarray(ey[:1024]) == 1          # Fig. 1-style morphology case
+    print(f"total uncertainty:    normal={total_unc[~is_anom].mean():.4f}  "
+          f"morphology-anomaly={total_unc[morph].mean():.4f}"
+          f"   (Fig. 1 behaviour strengthens with --steps ≥ 300)")
+    print(f"anomaly ROC-AUC: {auc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

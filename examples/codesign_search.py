@@ -1,0 +1,52 @@
+"""The co-design framework end-to-end (paper §IV / Fig. 7), both targets.
+
+FPGA target: scan reuse factors under the ZC706 DSP budget for the paper's
+best models.  TPU target: scan mesh factorizations under the 16 GB HBM
+budget for an assigned zoo architecture.
+
+    PYTHONPATH=src python examples/codesign_search.py
+"""
+
+from repro.configs import get_config
+from repro.dse import fpga_model as fm
+from repro.dse import search, tpu_model
+from repro.models.config import SHAPES
+
+# ---------------------------------------------------------------- FPGA side
+print("=== FPGA DSE (paper §IV): reuse factors under the DSP budget ===")
+table = [
+    search.Candidate(arch=fm.RNNArch(8, 1, "N"), n_samples=1,
+                     metrics={"accuracy": 0.90, "ap": 0.62, "entropy": 0.15}),
+    search.Candidate(arch=fm.RNNArch(8, 3, "YNY"),
+                     metrics={"accuracy": 0.92, "ap": 0.69, "entropy": 0.30}),
+    search.Candidate(arch=fm.RNNArch(8, 3, "YNN"),
+                     metrics={"accuracy": 0.89, "ap": 0.59, "entropy": 0.60}),
+]
+for mode in ("Opt-Latency", "Opt-Accuracy", "Opt-Entropy"):
+    got = search.optimize(table, mode, batch=50)
+    print(f"{mode:14s} → H={got.arch.hidden} NL={got.arch.num_layers} "
+          f"B={got.arch.placement} S={got.n_samples} "
+          f"R=({got.hw.r_x},{got.hw.r_h},{got.hw.r_d}) "
+          f"lat={got.latency_s*1e3:.2f} ms "
+          f"DSPs={fm.dsp_usage(got.arch, got.hw):.0f}/900")
+
+# ----------------------------------------------------------------- TPU side
+print("\n=== TPU DSE: mesh factorizations under the 16 GB HBM budget ===")
+for arch in ("llama3-8b", "olmoe-1b-7b", "jamba-1.5-large-398b"):
+    cfg = get_config(arch)
+    rows = tpu_model.search_hw(cfg, SHAPES["train_4k"], chips=256)
+    best = next((r for r in rows if r["feasible"]), None)
+    if best is None:
+        rows2 = tpu_model.search_hw(cfg, SHAPES["train_4k"], chips=256, pod=2)
+        best = next((r for r in rows2 if r["feasible"]), None)
+        pods = 2
+    else:
+        pods = 1
+    if best is None:
+        print(f"{arch:24s} infeasible even at 2 pods")
+        continue
+    hw = best["hw"]
+    print(f"{arch:24s} → pods={pods} mesh=({hw.data}×{hw.model}) "
+          f"mb={hw.microbatches} fsdp={hw.fsdp} "
+          f"mem={best['mem']/1e9:.1f} GB t_step={best['t_step']:.2f}s "
+          f"bound={'C' if best['t_compute']==best['t_step'] else 'M/X'}")

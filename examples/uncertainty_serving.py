@@ -1,0 +1,60 @@
+"""Serve a zoo LM with Bayesian uncertainty per generated token.
+
+Shows the paper's technique as a first-class serving feature on a modern
+architecture: S MCD chains folded into the batch, masks tied across decode
+steps, per-token predictive entropy + mutual information.
+
+    PYTHONPATH=src python examples/uncertainty_serving.py --arch olmoe-1b-7b
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALIASES, get_config
+from repro.models import backbone
+from repro.serve.engine import BayesianEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ALIASES), default="olmoe-1b-7b")
+    ap.add_argument("--samples", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)     # CPU-sized miniature
+    cfg = cfg.replace(mcd=cfg.mcd.replace(n_samples=args.samples, p=0.1))
+    params = backbone.init_params(jax.random.key(0), cfg, jnp.float32)
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8),
+                                       dtype=np.int32))
+    kw = {}
+    if cfg.family == "audio":
+        kw["frames"] = jnp.asarray(rng.normal(
+            size=(2, cfg.encoder_seq, cfg.d_model)).astype(np.float32))
+    if cfg.family == "vlm":
+        kw["patches"] = jnp.asarray(rng.normal(
+            size=(2, cfg.num_patches, cfg.d_model)).astype(np.float32))
+
+    eng = BayesianEngine(params, cfg, max_len=64)
+    res = eng.generate(prompts, args.new_tokens, **kw)
+
+    print(f"{cfg.name}: S={args.samples} chains, masks tied per chain across "
+          f"all decode steps (recomputed from the counter-RNG — zero state)")
+    for b in range(2):
+        print(f"\nrequest {b}:")
+        for t in range(args.new_tokens):
+            tok = int(res.tokens[b, t])
+            ent = float(res.predictive_entropy[b, t])
+            mi = float(res.mutual_information[b, t])
+            flag = "  <-- high epistemic" if mi > 0.3 else ""
+            print(f"  step {t:2d}: token={tok:6d}  H={ent:5.3f}  "
+                  f"MI={mi:6.4f}{flag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro — Bayesian RNN/NN inference & training at TPU pod scale.
+
+Reproduction + scale-out of Ferianc et al. (2021), "Optimizing Bayesian
+Recurrent Neural Networks on an FPGA-based Accelerator".  See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,19 @@
+"""deepseek-7b [dense] — llama-arch, MHA (GQA kv=32). [arXiv:2401.02954]"""
+
+from repro.core.mcd import MCDConfig
+from repro.models.config import ArchConfig, uniform_stages
+
+CONFIG = ArchConfig(
+    name="deepseek-7b", family="dense",
+    stages=uniform_stages("attn.mlp", 30),
+    d_model=4096, num_heads=32, num_kv_heads=32, d_ff=11008,
+    vocab_size=102400, rope_theta=10000.0,
+    mcd=MCDConfig(p=0.1, placement="Y", n_samples=8),
+)
+
+REDUCED = CONFIG.replace(
+    name="deepseek-7b-reduced",
+    stages=uniform_stages("attn.mlp", 2),
+    d_model=64, num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+    vocab_size=256,
+)

@@ -1,0 +1,25 @@
+"""internvl2-26b [vlm] — InternLM2-20B backbone; InternViT frontend is a STUB.
+
+input_specs() provides precomputed patch embeddings [B, 1024, 6144] prepended
+to the text stream; assigned seq_len counts total backbone positions.
+[arXiv:2404.16821]
+"""
+
+from repro.core.mcd import MCDConfig
+from repro.models.config import ArchConfig, uniform_stages
+
+CONFIG = ArchConfig(
+    name="internvl2-26b", family="vlm",
+    stages=uniform_stages("attn.mlp", 48),
+    d_model=6144, num_heads=48, num_kv_heads=8, d_ff=16384,
+    vocab_size=92553, rope_theta=1000000.0,
+    num_patches=1024,
+    mcd=MCDConfig(p=0.1, placement="Y", n_samples=8),
+)
+
+REDUCED = CONFIG.replace(
+    name="internvl2-reduced",
+    stages=uniform_stages("attn.mlp", 2),
+    d_model=64, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+    vocab_size=256, num_patches=4,
+)

@@ -1,0 +1,19 @@
+"""qwen3-32b [dense] — GQA kv=8, qk_norm, head_dim=128. [hf:Qwen/Qwen3-8B]"""
+
+from repro.core.mcd import MCDConfig
+from repro.models.config import ArchConfig, uniform_stages
+
+CONFIG = ArchConfig(
+    name="qwen3-32b", family="dense",
+    stages=uniform_stages("attn.mlp", 64),
+    d_model=5120, num_heads=64, num_kv_heads=8, head_dim=128, d_ff=25600,
+    vocab_size=151936, qk_norm=True, rope_theta=1000000.0,
+    mcd=MCDConfig(p=0.1, placement="Y", n_samples=8),
+)
+
+REDUCED = CONFIG.replace(
+    name="qwen3-32b-reduced",
+    stages=uniform_stages("attn.mlp", 2),
+    d_model=64, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+    vocab_size=256,
+)

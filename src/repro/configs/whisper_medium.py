@@ -1,0 +1,29 @@
+"""whisper-medium [audio] — enc-dec backbone; conv frontend is a STUB.
+
+24 encoder + 24 decoder layers; input_specs() provides precomputed frame
+embeddings [B, 1500, 1024] (the post-conv mel frame count of the published
+frontend).  Assigned shapes apply to the decoder token stream.
+[arXiv:2212.04356]
+"""
+
+from repro.core.mcd import MCDConfig
+from repro.models.config import ArchConfig, uniform_stages
+
+CONFIG = ArchConfig(
+    name="whisper-medium", family="audio",
+    stages=uniform_stages("dec_attn.cross.mlp", 24),
+    encoder_stages=uniform_stages("enc_attn.mlp", 24),
+    encoder_seq=1500,
+    d_model=1024, num_heads=16, num_kv_heads=16, d_ff=4096,
+    vocab_size=51865, rope_theta=10000.0,
+    mcd=MCDConfig(p=0.1, placement="Y", n_samples=8),
+)
+
+REDUCED = CONFIG.replace(
+    name="whisper-reduced",
+    stages=uniform_stages("dec_attn.cross.mlp", 2),
+    encoder_stages=uniform_stages("enc_attn.mlp", 2),
+    encoder_seq=16,
+    d_model=64, num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+    vocab_size=256,
+)

@@ -1,0 +1,16 @@
+"""Core library: the paper's contribution (MCD Bayesian recurrent inference).
+
+Public surface:
+  MCDConfig, parse_placement       — algorithmic Bayesian parameters (p, B, S)
+  predict                          — S-sample predictive engine
+  AutoencoderConfig / ClassifierConfig + init/apply — the paper's two models
+  regression_summary / classification_summary — uncertainty decomposition
+"""
+
+from repro.core.mcd import MCDConfig, parse_placement, placement_str  # noqa: F401
+from repro.core.bayesian import predict  # noqa: F401
+from repro.core.autoencoder import AutoencoderConfig  # noqa: F401
+from repro.core.classifier import ClassifierConfig  # noqa: F401
+from repro.core.uncertainty import (  # noqa: F401
+    regression_summary, classification_summary,
+)

@@ -1,0 +1,93 @@
+"""Recurrent autoencoder for anomaly detection (paper §III-C, Fig. 6a).
+
+Encoder: NL cascaded LSTMs, last layer hidden size H/2 (the bottleneck —
+"reduced dimensionality R^{H/2} in order to learn to convey only the most
+relevant information").  The bottleneck h_T is repeated T times ("effectively
+achieved by caching it for exactly T time steps") and decoded by NL LSTMs of
+hidden size H, followed by a temporal dense layer applied at every step.
+
+The head is heteroscedastic (mean + log-variance per feature) so the model
+expresses *aleatoric* uncertainty; *epistemic* uncertainty comes from the S
+MCD passes — together they are the paper's Fig. 1 "total uncertainty".
+MCD placement B indexes the 2·NL LSTM layers encoder-first (paper's "YNYN").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear, mcd, rnn
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoencoderConfig:
+    input_dim: int = 1
+    hidden: int = 16          # H
+    num_layers: int = 2       # NL (per encoder / per decoder)
+    mcd: mcd.MCDConfig = dataclasses.field(
+        default_factory=lambda: mcd.MCDConfig(placement="YNYN"))
+    heteroscedastic: bool = True
+
+    @property
+    def encoder_hiddens(self) -> tuple[int, ...]:
+        return tuple([self.hidden] * (self.num_layers - 1) + [self.hidden // 2])
+
+    @property
+    def decoder_hiddens(self) -> tuple[int, ...]:
+        return tuple([self.hidden] * self.num_layers)
+
+
+def init(key: jax.Array, cfg: AutoencoderConfig, dtype=jnp.float32) -> dict[str, Any]:
+    k_enc, k_dec, k_head = jax.random.split(key, 3)
+    out_dim = 2 * cfg.input_dim if cfg.heteroscedastic else cfg.input_dim
+    return {
+        "encoder": rnn.init_stack(k_enc, cfg.input_dim, cfg.encoder_hiddens, dtype),
+        "decoder": rnn.init_stack(k_dec, cfg.hidden // 2, cfg.decoder_hiddens, dtype),
+        "head": linear.init_dense(k_head, cfg.hidden, out_dim, dtype),
+    }
+
+
+def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
+          cfg: AutoencoderConfig):
+    """Forward pass for one set of MCD masks.
+
+    Args:
+      x_seq: [B, T, I] input sequences.
+      rows: [B] global (sample·batch) row ids keying the mask streams.
+    Returns:
+      (mean [B, T, I], log_var [B, T, I] or None)
+    """
+    T = x_seq.shape[1]
+    enc_masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.input_dim,
+                                       cfg.encoder_hiddens, layer_offset=0,
+                                       dtype=x_seq.dtype)
+    dec_masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.hidden // 2,
+                                       cfg.decoder_hiddens,
+                                       layer_offset=cfg.num_layers,
+                                       dtype=x_seq.dtype)
+    # Encode → bottleneck h_T ∈ R^{H/2}; the decoder starts only after the
+    # encoder finishes (paper: latency = 2 × Lat_design for the AE).
+    _, (h_T, _) = rnn.run_stack(params["encoder"], x_seq, enc_masks,
+                                cfg.mcd.p, return_sequence=False)
+    # Repeat the encoding T times (cached-replay in hardware).
+    dec_in = jnp.broadcast_to(h_T[:, None, :], (h_T.shape[0], T, h_T.shape[1]))
+    dec_out, _ = rnn.run_stack(params["decoder"], dec_in, dec_masks, cfg.mcd.p)
+    y = linear.dense(params["head"], dec_out)
+    if cfg.heteroscedastic:
+        mean, log_var = jnp.split(y, 2, axis=-1)
+        return mean, jnp.clip(log_var, -10.0, 10.0)
+    return y, None
+
+
+def gaussian_nll(mean: jax.Array, log_var: jax.Array | None,
+                 target: jax.Array) -> jax.Array:
+    """Per-example Gaussian NLL (the paper's Fig. 1 fit metric)."""
+    if log_var is None:
+        return 0.5 * jnp.mean((mean - target) ** 2, axis=(-2, -1))
+    inv_var = jnp.exp(-log_var)
+    return 0.5 * jnp.mean((mean - target) ** 2 * inv_var + log_var
+                          + jnp.log(2.0 * jnp.pi), axis=(-2, -1))

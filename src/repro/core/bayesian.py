@@ -1,0 +1,49 @@
+"""S-sample Bayesian predictive engine (the paper's MC sampling loop).
+
+On the FPGA, the S MC samples stream through the pipeline back-to-back
+(sample-wise pipelining, Fig. 4/5) so weights are fetched once.  The TPU
+equivalent: **fold the S samples into the batch axis** — one forward pass over
+[S·B, ...] reuses each HBM weight fetch S times, multiplying arithmetic
+intensity by S.  This is the single most important performance property of the
+whole design: Bayesian inference at *higher* MFU than pointwise inference of
+the same batch, because the weight traffic amortizes.
+
+Two execution strategies:
+  * ``fold``  — tile to [S·B] and run once (throughput-optimal; default).
+  * ``scan``  — lax.map over samples (memory-constrained fallback; activations
+    for one sample at a time — the FPGA's sequential-sample behaviour).
+
+Both produce bit-identical masks (counter RNG keyed by global row id), so the
+choice is purely a memory/throughput trade-off the DSE framework can flip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcd
+
+
+def predict(apply_fn, params, x: jax.Array, cfg: mcd.MCDConfig,
+            *, strategy: str = "fold"):
+    """Run S stochastic forward passes; returns pytree with leading [S, B].
+
+    ``apply_fn(params, x, rows)`` must accept a row-id vector aligned with
+    the batch axis of ``x`` (see :func:`repro.core.mcd.sample_rows`).
+    """
+    batch = x.shape[0]
+    s = max(1, cfg.n_samples if cfg.any_bayesian else 1)
+    if strategy == "fold":
+        x_tiled = jnp.broadcast_to(x[None], (s, *x.shape)).reshape(
+            s * batch, *x.shape[1:])
+        rows = mcd.sample_rows(batch, s)
+        out = apply_fn(params, x_tiled, rows)
+        return jax.tree.map(
+            lambda y: y.reshape(s, batch, *y.shape[1:]), out)
+    elif strategy == "scan":
+        def one(sample_id):
+            rows = sample_id * batch + jnp.arange(batch, dtype=jnp.uint32)
+            return apply_fn(params, x, rows)
+        return jax.lax.map(one, jnp.arange(s, dtype=jnp.uint32))
+    raise ValueError(f"unknown strategy {strategy!r}")

@@ -1,0 +1,111 @@
+"""LSTM / GRU cells with the paper's per-gate MCD mask views.
+
+Paper §II-A decouples the input and hidden state per gate
+(x^i, x^f, x^g, x^o = x;  h^i, ... = h) precisely so that MCD can mask each
+view independently.  We keep that decoupling: weights are stored as
+``[4, in, hidden]`` stacks (gate axis first) and the masked views are applied
+per-gate before the gate matmuls.
+
+On the FPGA each gate had its own MVM unit (Fig. 2).  On TPU the four gate
+matmuls are a single ``[B,4,I] × [4,I,H]`` batched contraction — one MXU pass,
+the fusion analogue of the paper's 1:1 DSP unrolling.  A Pallas-fused version
+of the full step (masks + matmuls + nonlinearities + cell update) lives in
+``repro.kernels.mcd_lstm``; this module is the composable/jnp path and the
+numerical ground truth for it.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcd
+
+
+class LSTMParams(NamedTuple):
+    wx: jax.Array  # [4, in_dim, hidden]
+    wh: jax.Array  # [4, hidden, hidden]
+    b: jax.Array   # [4, hidden]
+
+
+def init_lstm(key: jax.Array, in_dim: int, hidden: int,
+              dtype=jnp.float32) -> LSTMParams:
+    kx, kh = jax.random.split(key)
+    sx = (6.0 / (in_dim + hidden)) ** 0.5
+    sh = (6.0 / (2 * hidden)) ** 0.5
+    wx = jax.random.uniform(kx, (4, in_dim, hidden), dtype, -sx, sx)
+    wh = jax.random.uniform(kh, (4, hidden, hidden), dtype, -sh, sh)
+    b = jnp.zeros((4, hidden), dtype)
+    # forget-gate bias 1.0 (standard recurrent practice)
+    b = b.at[1].set(jnp.ones((hidden,), dtype))
+    return LSTMParams(wx, wh, b)
+
+
+def lstm_step(params: LSTMParams, h: jax.Array, c: jax.Array, x: jax.Array,
+              zx: jax.Array | None, zh: jax.Array | None, p: float,
+              compute_dtype=None):
+    """One LSTM time step with per-gate MCD masks (paper's Eq. block + DX units).
+
+    Args:
+      h, c: [B, H] carry.  x: [B, I] input at time t.
+      zx: [B, 4, I] or None; zh: [B, 4, H] or None — keep-masks tied across T.
+      p: dropout probability (for inverted scaling).
+    Returns:
+      (h_new, c_new), each [B, H].  c is accumulated in fp32 (the paper keeps
+      c in 32-bit while everything else is 16-bit — same policy here).
+    """
+    cd = compute_dtype or x.dtype
+    wx, wh, b = params
+    # Per-gate masked views: [B, 4, I] and [B, 4, H].
+    xg = jnp.broadcast_to(x[:, None, :], (x.shape[0], 4, x.shape[1])).astype(cd)
+    hg = jnp.broadcast_to(h[:, None, :], (h.shape[0], 4, h.shape[1])).astype(cd)
+    xg = mcd.apply_mask(xg, zx, p)
+    hg = mcd.apply_mask(hg, zh, p)
+    gates = (jnp.einsum("bgi,gih->bgh", xg, wx.astype(cd),
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bgh,ghk->bgk", hg, wh.astype(cd),
+                          preferred_element_type=jnp.float32)
+             + b.astype(jnp.float32))
+    i = jax.nn.sigmoid(gates[:, 0])
+    f = jax.nn.sigmoid(gates[:, 1])
+    g = jnp.tanh(gates[:, 2])
+    o = jax.nn.sigmoid(gates[:, 3])
+    c_new = f * c.astype(jnp.float32) + i * g           # fp32 cell state
+    h_new = (o * jnp.tanh(c_new)).astype(h.dtype)
+    return h_new, c_new.astype(c.dtype)
+
+
+class GRUParams(NamedTuple):
+    wx: jax.Array  # [3, in_dim, hidden]
+    wh: jax.Array  # [3, hidden, hidden]
+    b: jax.Array   # [3, hidden]
+
+
+def init_gru(key: jax.Array, in_dim: int, hidden: int,
+             dtype=jnp.float32) -> GRUParams:
+    kx, kh = jax.random.split(key)
+    sx = (6.0 / (in_dim + hidden)) ** 0.5
+    sh = (6.0 / (2 * hidden)) ** 0.5
+    return GRUParams(
+        jax.random.uniform(kx, (3, in_dim, hidden), dtype, -sx, sx),
+        jax.random.uniform(kh, (3, hidden, hidden), dtype, -sh, sh),
+        jnp.zeros((3, hidden), dtype))
+
+
+def gru_step(params: GRUParams, h: jax.Array, x: jax.Array,
+             zx: jax.Array | None, zh: jax.Array | None, p: float):
+    """GRU step with per-gate masks (paper §III-A notes GRU drops in directly)."""
+    wx, wh, b = params
+    xg = jnp.broadcast_to(x[:, None, :], (x.shape[0], 3, x.shape[1]))
+    hg = jnp.broadcast_to(h[:, None, :], (h.shape[0], 3, h.shape[1]))
+    xg = mcd.apply_mask(xg, zx, p)
+    hg = mcd.apply_mask(hg, zh, p)
+    gx = jnp.einsum("bgi,gih->bgh", xg, wx, preferred_element_type=jnp.float32)
+    gh = jnp.einsum("bgh,ghk->bgk", hg, wh, preferred_element_type=jnp.float32)
+    r = jax.nn.sigmoid(gx[:, 0] + gh[:, 0] + b[0])
+    zt = jax.nn.sigmoid(gx[:, 1] + gh[:, 1] + b[1])
+    n = jnp.tanh(gx[:, 2] + r * gh[:, 2] + b[2])
+    h_new = (1.0 - zt) * n + zt * h.astype(jnp.float32)
+    return h_new.astype(h.dtype)

@@ -1,0 +1,41 @@
+"""Recurrent classifier (paper §III-C, Fig. 6b): encoder + dense + softmax."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear, mcd, rnn
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierConfig:
+    input_dim: int = 1
+    hidden: int = 8           # H
+    num_layers: int = 3       # NL (encoder only — fully pipelined in hardware)
+    num_classes: int = 4
+    mcd: mcd.MCDConfig = dataclasses.field(
+        default_factory=lambda: mcd.MCDConfig(placement="YNY"))
+
+
+def init(key: jax.Array, cfg: ClassifierConfig, dtype=jnp.float32) -> dict[str, Any]:
+    k_enc, k_head = jax.random.split(key)
+    hiddens = (cfg.hidden,) * cfg.num_layers
+    return {
+        "encoder": rnn.init_stack(k_enc, cfg.input_dim, hiddens, dtype),
+        "head": linear.init_dense(k_head, cfg.hidden, cfg.num_classes, dtype),
+    }
+
+
+def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
+          cfg: ClassifierConfig) -> jax.Array:
+    """Logits [B, num_classes] for one set of MCD masks."""
+    hiddens = (cfg.hidden,) * cfg.num_layers
+    masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.input_dim, hiddens,
+                                   dtype=x_seq.dtype)
+    _, (h_T, _) = rnn.run_stack(params["encoder"], x_seq, masks, cfg.mcd.p,
+                                return_sequence=False)
+    return linear.dense(params["head"], h_T)

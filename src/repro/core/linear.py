@@ -1,0 +1,33 @@
+"""Dense layer (the paper's single-MVM temporal dense unit) with MCD hook."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcd
+
+
+class DenseParams(NamedTuple):
+    w: jax.Array  # [in, out]
+    b: jax.Array  # [out]
+
+
+def init_dense(key: jax.Array, in_dim: int, out_dim: int,
+               dtype=jnp.float32) -> DenseParams:
+    s = (6.0 / (in_dim + out_dim)) ** 0.5
+    return DenseParams(jax.random.uniform(key, (in_dim, out_dim), dtype, -s, s),
+                       jnp.zeros((out_dim,), dtype))
+
+
+def dense(params: DenseParams, x: jax.Array, mask: jax.Array | None = None,
+          p: float = 0.0) -> jax.Array:
+    """y = (x ⊙ z / (1-p)) @ W + b; mask broadcasts over leading/time axes."""
+    if mask is not None and mask.ndim == x.ndim - 1:
+        mask = mask[..., None, :]  # tie across the time axis
+    x = mcd.apply_mask(x, mask, p)
+    return jnp.einsum("...i,io->...o", x, params.w.astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype) \
+        + params.b.astype(x.dtype)

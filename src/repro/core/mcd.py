@@ -1,0 +1,143 @@
+"""Monte-Carlo-Dropout engine (Gal & Ghahramani, as deployed by the paper).
+
+Semantics reproduced exactly from paper §II-B:
+
+* A Bernoulli *keep*-mask ``z ~ Bern(1 - p)`` is sampled **once per MC sample
+  per layer** and **tied across all T time steps** of that sample.
+* For LSTM layers the input ``x_t`` and hidden state ``h_{t-1}`` each get a
+  **separate mask per gate** (z_x^{i,f,g,o} ∈ R^I, z_h^{i,f,g,o} ∈ R^H).
+* Dropout may be enabled per layer (placement string ``B``, e.g. ``"YNYN"``),
+  giving partially-Bayesian architectures.
+* The prediction is the average of S stochastic forward passes.
+
+Systems note (the paper's memory-challenge, solved the TPU way): masks are
+never *stored* anywhere.  Because :mod:`repro.core.prng` is a stateless
+counter RNG, a mask is a pure function of ``(seed, sample, layer, site, gate,
+batch-row, feature)`` and is **recomputed in-register wherever it is needed**
+— inside the fused Pallas kernel, inside each TP/EP shard, and at every decode
+step of a serving request (tying across decode steps = tying across T).  The
+paper needed a SIPO+FIFO to buffer pre-sampled bits; on TPU the recompute is
+~10 VPU ops and replaces that on-chip memory entirely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prng
+
+# Stream-id namespaces (stable constants — part of the checkpoint contract:
+# changing them changes every mask in a restarted run).
+KIND_X = 0        # LSTM input-side gate masks
+KIND_H = 1        # LSTM hidden-side gate masks
+KIND_FEAT = 2     # generic per-site feature mask (transformer/ssm blocks)
+
+GATES = ("i", "f", "g", "o")
+
+
+def parse_placement(b: str | Sequence[bool]) -> tuple[bool, ...]:
+    """Parse the paper's B-string (``"YNYN"``) into per-layer booleans."""
+    if isinstance(b, str):
+        bad = set(b.upper()) - {"Y", "N"}
+        if bad:
+            raise ValueError(f"placement must be Y/N string, got {b!r}")
+        return tuple(c == "Y" for c in b.upper())
+    return tuple(bool(x) for x in b)
+
+
+def placement_str(b: Sequence[bool]) -> str:
+    return "".join("Y" if x else "N" for x in b)
+
+
+@dataclasses.dataclass(frozen=True)
+class MCDConfig:
+    """Algorithmic parameters of the Bayesian architecture (paper's A/B/S).
+
+    Attributes:
+      p: dropout probability (paper hardware fixed 0.125; we allow any p).
+      placement: per-layer Bayesian on/off (paper's B, e.g. "YNYN").
+      n_samples: S, number of MC forward passes at inference.
+      seed: base seed for the counter RNG.  Together with (sample, layer,
+        site) it fully determines every mask — restart-reproducible.
+    """
+    p: float = 0.125
+    placement: tuple[bool, ...] = ()
+    n_samples: int = 30
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.p < 1.0:
+            raise ValueError(f"p must be in [0,1), got {self.p}")
+        object.__setattr__(self, "placement", parse_placement(self.placement))
+
+    def bayesian(self, layer: int) -> bool:
+        """Is layer Bayesian?  The B-string cycles (e.g. "YN" = alternating)."""
+        if not self.placement:
+            return False
+        return self.placement[layer % len(self.placement)]
+
+    @property
+    def any_bayesian(self) -> bool:
+        return any(self.placement)
+
+    def replace(self, **kw) -> "MCDConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def mask_key(seed, layer: int, kind: int, gate: int = 0) -> jax.Array:
+    """uint32 stream key for one mask site."""
+    return prng.fold_ids(seed, layer, kind, gate)
+
+
+def feature_mask(seed, layer: int, rows: jax.Array, n_feat: int,
+                 p: float, *, kind: int = KIND_FEAT, gate: int = 0,
+                 dtype=jnp.float32) -> jax.Array:
+    """Keep-mask of shape ``rows.shape + (n_feat,)`` tied across time.
+
+    ``rows`` carries the global (sample·batch) row index of each element so
+    that every MC sample / batch row draws an independent mask while remaining
+    a pure function of its coordinates (sharding- and restart-stable).
+    """
+    key = mask_key(seed, layer, kind, gate)
+    rows = jnp.asarray(rows, jnp.uint32)[..., None]
+    cols = jnp.arange(n_feat, dtype=jnp.uint32)
+    idx = rows * jnp.uint32(n_feat) + cols
+    bits = prng._mix32(jnp.asarray(key, jnp.uint32) ^ prng._mix32(idx))
+    return (bits >= prng.bernoulli_keep_threshold(p)).astype(dtype)
+
+
+def lstm_gate_masks(seed, layer: int, rows: jax.Array, in_dim: int,
+                    hidden_dim: int, p: float, dtype=jnp.float32):
+    """The paper's eight per-gate masks for one LSTM layer.
+
+    Returns ``(z_x, z_h)`` with shapes ``rows.shape + (4, in_dim)`` and
+    ``rows.shape + (4, hidden_dim)`` — one mask per gate (i, f, g, o), tied
+    across all T time steps (no time dimension).
+    """
+    zx = jnp.stack([feature_mask(seed, layer, rows, in_dim, p, kind=KIND_X,
+                                 gate=g, dtype=dtype) for g in range(4)], axis=-2)
+    zh = jnp.stack([feature_mask(seed, layer, rows, hidden_dim, p, kind=KIND_H,
+                                 gate=g, dtype=dtype) for g in range(4)], axis=-2)
+    return zx, zh
+
+
+def apply_mask(x: jax.Array, mask: jax.Array | None, p: float) -> jax.Array:
+    """Inverted-dropout application ``x · z / (1-p)`` (broadcasts over time)."""
+    if mask is None or p == 0.0:
+        return x
+    scale = jnp.asarray(1.0 / (1.0 - p), x.dtype)
+    return x * mask.astype(x.dtype) * scale
+
+
+def sample_rows(batch: int, n_samples: int) -> jax.Array:
+    """Global row ids for S MC samples folded into the batch axis.
+
+    Row id = ``s * batch + b`` — each (sample, batch-element) pair gets an
+    independent mask stream; reshaping [S·B, ...] → [S, B, ...] after the
+    forward pass recovers the per-sample axis.
+    """
+    return jnp.arange(n_samples * batch, dtype=jnp.uint32)

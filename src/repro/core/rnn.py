@@ -1,0 +1,77 @@
+"""Cascaded LSTM stacks with time-step scanning and MCD mask pre-sampling.
+
+Structure mirrors the paper's pipelined cascade (Fig. 5): layer i's output at
+time t feeds layer i+1 at time t — on the FPGA that is wave pipelining; under
+XLA it is a fused scan body where all layers advance one step per iteration
+(the scan carries every layer's (h, c)).  This "wavefront" scan is
+mathematically identical to running layers sequentially but exposes the same
+cross-layer parallelism the paper's II-balancing exploits, and it keeps the
+HLO small (one scan) for pod-scale compilation.
+
+Mask pre-sampling (paper Fig. 4 "overlap"): all masks for a forward pass are
+produced *before* the scan from the counter RNG — since they are tied across
+T they carry no time dimension, and since the RNG is stateless the
+"pre-sampling" costs a few VPU ops, not on-chip FIFO memory.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cells, mcd
+
+
+def init_stack(key: jax.Array, in_dim: int, hiddens: Sequence[int],
+               dtype=jnp.float32) -> list[cells.LSTMParams]:
+    params = []
+    dims = [in_dim, *hiddens]
+    for i, (d_in, d_h) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        params.append(cells.init_lstm(sub, d_in, d_h, dtype))
+    return params
+
+
+def sample_stack_masks(cfg: mcd.MCDConfig, rows: jax.Array, in_dim: int,
+                       hiddens: Sequence[int], *, layer_offset: int = 0,
+                       dtype=jnp.float32):
+    """Pre-sample (z_x, z_h) per layer; None where the layer is pointwise."""
+    masks = []
+    dims = [in_dim, *hiddens]
+    for i, (d_in, d_h) in enumerate(zip(dims[:-1], dims[1:])):
+        layer = layer_offset + i
+        if cfg.any_bayesian and cfg.bayesian(layer) and cfg.p > 0.0:
+            masks.append(mcd.lstm_gate_masks(cfg.seed, layer, rows, d_in, d_h,
+                                             cfg.p, dtype=dtype))
+        else:
+            masks.append((None, None))
+    return masks
+
+
+def run_stack(params: Sequence[cells.LSTMParams], x_seq: jax.Array,
+              masks, p: float, *, return_sequence: bool = True):
+    """Run a cascaded LSTM stack over a [B, T, I] sequence.
+
+    Returns (outputs [B, T, H_last] if return_sequence else None,
+             (h_T, c_T) of the last layer).
+    """
+    batch = x_seq.shape[0]
+    dtype = x_seq.dtype
+    carries = [(jnp.zeros((batch, pl.wh.shape[1]), dtype),
+                jnp.zeros((batch, pl.wh.shape[1]), dtype)) for pl in params]
+    xs = jnp.swapaxes(x_seq, 0, 1)  # [T, B, I] time-major for scan
+
+    def step(carry, x_t):
+        new_carry = []
+        inp = x_t
+        for (h, c), layer_params, (zx, zh) in zip(carry, params, masks):
+            h, c = cells.lstm_step(layer_params, h, c, inp, zx, zh, p)
+            new_carry.append((h, c))
+            inp = h
+        return new_carry, (inp if return_sequence else jnp.zeros((0,), dtype))
+
+    final_carry, ys = jax.lax.scan(step, carries, xs)
+    out = jnp.swapaxes(ys, 0, 1) if return_sequence else None
+    return out, final_carry[-1]

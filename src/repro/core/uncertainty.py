@@ -1,0 +1,88 @@
+"""Uncertainty decomposition & metrics (paper Fig. 1, Tables I/II/V/VI).
+
+Regression (autoencoder):   total = aleatoric + epistemic where
+  aleatoric  = E_s[σ²_s(x)]        (mean predicted variance)
+  epistemic  = Var_s[μ_s(x)]       (variance of predicted means over S)
+Classification:  predictive entropy H[E_s p_s]  (paper's nats metric),
+  expected entropy E_s H[p_s] (aleatoric), mutual information (epistemic).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RegressionSummary(NamedTuple):
+    mean: jax.Array        # [B, T, I] predictive mean
+    aleatoric: jax.Array   # [B, T, I] E_s[σ²]
+    epistemic: jax.Array   # [B, T, I] Var_s[μ]
+    total: jax.Array       # [B, T, I]
+
+
+def regression_summary(means: jax.Array,
+                       log_vars: jax.Array | None) -> RegressionSummary:
+    """means/log_vars: [S, B, T, I] stacked MC passes."""
+    mu = jnp.mean(means, axis=0)
+    epistemic = jnp.var(means, axis=0)
+    aleatoric = (jnp.mean(jnp.exp(log_vars), axis=0) if log_vars is not None
+                 else jnp.zeros_like(mu))
+    return RegressionSummary(mu, aleatoric, epistemic, aleatoric + epistemic)
+
+
+def regression_nll(summary: RegressionSummary, target: jax.Array) -> jax.Array:
+    """Gaussian NLL of the moment-matched predictive distribution, per example."""
+    var = jnp.maximum(summary.total, 1e-8)
+    return 0.5 * jnp.mean((summary.mean - target) ** 2 / var + jnp.log(var)
+                          + jnp.log(2.0 * jnp.pi), axis=(-2, -1))
+
+
+def rmse(summary: RegressionSummary, target: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.mean((summary.mean - target) ** 2, axis=(-2, -1)))
+
+
+def l1(summary: RegressionSummary, target: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.abs(summary.mean - target), axis=(-2, -1))
+
+
+class ClassificationSummary(NamedTuple):
+    probs: jax.Array               # [B, C] mean predictive probabilities
+    predictive_entropy: jax.Array  # [B] H[E_s p_s]  (total, nats)
+    expected_entropy: jax.Array    # [B] E_s H[p_s]  (aleatoric)
+    mutual_information: jax.Array  # [B] epistemic (BALD)
+
+
+def _entropy(p: jax.Array, axis: int = -1) -> jax.Array:
+    return -jnp.sum(p * jnp.log(jnp.clip(p, 1e-12, 1.0)), axis=axis)
+
+
+def classification_summary(logits: jax.Array) -> ClassificationSummary:
+    """logits: [S, B, C] stacked MC passes."""
+    probs_s = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.mean(probs_s, axis=0)
+    pred_h = _entropy(probs)
+    exp_h = jnp.mean(_entropy(probs_s), axis=0)
+    return ClassificationSummary(probs, pred_h, exp_h, pred_h - exp_h)
+
+
+def accuracy(probs: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(probs, -1) == labels).astype(jnp.float32))
+
+
+def expected_calibration_error(probs: jax.Array, labels: jax.Array,
+                               n_bins: int = 10) -> jax.Array:
+    """ECE — calibration quality of the Bayesian predictive distribution."""
+    conf = jnp.max(probs, -1)
+    correct = (jnp.argmax(probs, -1) == labels).astype(jnp.float32)
+    bins = jnp.clip((conf * n_bins).astype(jnp.int32), 0, n_bins - 1)
+    ece = jnp.float32(0.0)
+    n = probs.shape[0]
+    for b in range(n_bins):
+        in_bin = (bins == b).astype(jnp.float32)
+        cnt = jnp.sum(in_bin)
+        acc_b = jnp.where(cnt > 0, jnp.sum(correct * in_bin) / jnp.maximum(cnt, 1), 0.0)
+        conf_b = jnp.where(cnt > 0, jnp.sum(conf * in_bin) / jnp.maximum(cnt, 1), 0.0)
+        ece += (cnt / n) * jnp.abs(acc_b - conf_b)
+    return ece

@@ -1,0 +1,1 @@
+"""Design-space exploration: the paper co-design framework (FPGA + TPU)."""

@@ -1,0 +1,99 @@
+"""The optimization framework (paper §IV, Fig. 7): lookup table + modes.
+
+Flow (exactly the paper's):
+  1. user gives hardware constraints + metric requirements + focus mode
+  2. algorithmic DSE over A = {H, NL, B} against a benchmarked lookup table
+  3. quantization (fp32 → bf16/int8 here; 16-bit fixed point on the FPGA)
+  4. hardware-parameter optimization against the resource model
+     (reuse factors / DSP budget on FPGA; mesh split / HBM budget on TPU)
+  5. latency estimate from the latency model; filter by minimum requirements
+
+Modes: Opt-Latency, Opt-Accuracy, Opt-Precision, Opt-Recall, Opt-AUC,
+Opt-Entropy (paper Tables V/VI).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.dse import fpga_model
+
+MAXIMIZE = {"accuracy", "auc", "ap", "ar", "entropy", "precision", "recall"}
+MINIMIZE = {"latency", "nll", "rmse"}
+
+MODES = {
+    "Opt-Latency": "latency",
+    "Opt-Accuracy": "accuracy",
+    "Opt-Precision": "ap",
+    "Opt-Recall": "ar",
+    "Opt-AUC": "auc",
+    "Opt-Entropy": "entropy",
+}
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One row of the lookup table: a benchmarked (A, metrics) pair."""
+    arch: fpga_model.RNNArch
+    metrics: dict[str, float]          # algorithmic metrics (benchmarked)
+    n_samples: int = 30
+    hw: Any = None                     # filled by the hardware stage
+    latency_s: float | None = None
+
+    def score(self, metric: str) -> float:
+        if metric == "latency":
+            return self.latency_s if self.latency_s is not None else float("inf")
+        return self.metrics.get(metric, float("-inf"))
+
+
+def optimize(table: list[Candidate], mode: str, *,
+             dsp_total: int = fpga_model.DSP_TOTAL_ZC706,
+             batch: int = 1,
+             requirements: dict[str, float] | None = None,
+             latency_model: Callable | None = None) -> Candidate | None:
+    """Greedy DSE per the paper: algorithmic pick → hw fit → filter → best.
+
+    ``latency_model(arch, hw, batch, n_samples)`` defaults to the paper's
+    §IV-C model; pass a TPU-roofline-backed callable for the TPU flow.
+    """
+    metric = MODES.get(mode, mode)
+    lat_fn = latency_model or fpga_model.latency_s
+    survivors = []
+    for cand in table:
+        # Opt-Latency trades Bayesian sampling away (paper: S=1, B=N…N)
+        n_samples = 1 if metric == "latency" and not any(
+            c == "Y" for c in cand.arch.placement) else cand.n_samples
+        hw = fpga_model.best_reuse_factors(cand.arch, dsp_total)
+        if hw is None:
+            continue                     # does not fit the chip at any reuse
+        lat = lat_fn(cand.arch, hw, batch=batch, n_samples=n_samples)
+        cand = dataclasses.replace(cand, hw=hw, latency_s=lat,
+                                   n_samples=n_samples)
+        ok = True
+        for req_metric, req_value in (requirements or {}).items():
+            v = cand.score(req_metric)
+            ok &= (v <= req_value) if req_metric in MINIMIZE else (v >= req_value)
+        if ok:
+            survivors.append(cand)
+    if not survivors:
+        return None
+    reverse = metric not in MINIMIZE
+    survivors.sort(key=lambda c: c.score(metric), reverse=reverse)
+    return survivors[0]
+
+
+def pareto_front(table: list[Candidate], x_metric: str,
+                 y_metric: str) -> list[Candidate]:
+    """Pareto-optimal candidates (paper Fig. 8/9: most are partially Bayesian)."""
+    pts = [(c.score(x_metric), c.score(y_metric), c) for c in table]
+    front = []
+    for x, y, c in pts:
+        dominated = any(
+            (x2 <= x and y2 >= y and (x2 < x or y2 > y))
+            if x_metric in MINIMIZE else
+            (x2 >= x and y2 >= y and (x2 > x or y2 > y))
+            for x2, y2, _ in pts)
+        if not dominated:
+            front.append(c)
+    return front

@@ -1,0 +1,196 @@
+"""TPU-side analytic performance model — the roofline replaces DSPs/II.
+
+Napkin-math formulas per block kind (flops, HBM bytes, collective bytes per
+device) as a function of the architecture config and the hardware
+configuration (mesh split, microbatches, fsdp, remat).  The same three-term
+roofline as :mod:`repro.launch.analysis` — validated against the probe-based
+measurements in EXPERIMENTS.md §Roofline (this model is the cheap inner loop
+of the DSE; the probes are the ground truth).
+
+Hardware knobs here = the paper's reuse factors: they trade parallelism
+(lower latency) against per-chip residency (HBM instead of DSPs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS, active_params
+from repro.models.config import ArchConfig, ShapeCell
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuHwConfig:
+    """Hardware half of the DSE space (TPU analogue of R_x/R_h/R_d)."""
+    data: int = 16
+    model: int = 16
+    pod: int = 1
+    microbatches: int = 1
+    fsdp: bool = False
+    remat: bool = True
+
+    @property
+    def chips(self) -> int:
+        return self.data * self.model * self.pod
+
+    @property
+    def dp(self) -> int:
+        return self.data * self.pod
+
+
+def step_model(cfg: ArchConfig, cell: ShapeCell, hw: TpuHwConfig) -> dict:
+    """Analytic per-device (flops, bytes, collective bytes) for one step."""
+    n_active = active_params(cfg)
+    n_total = _total_params(cfg)
+    D = cfg.d_model
+    if cell.kind == "train":
+        tokens_local = cell.global_batch * cell.seq_len / hw.dp
+        flops = 6.0 * n_active * tokens_local
+        flops += _attention_flops(cfg, cell.seq_len, cell.global_batch,
+                                  causal_factor=2.0, bwd=True) / hw.chips
+        if hw.remat:
+            flops *= 4.0 / 3.0          # one extra forward
+        # bytes: weights (re-read per microbatch) + activation stream + moments
+        act = tokens_local * D * 2 * 8 * cfg.num_layers
+        weights = n_total * 2 / hw.model / (hw.dp if hw.fsdp else 1)
+        bytes_hbm = (weights * 3 * hw.microbatches     # w read fwd+bwd(+remat)
+                     + act                             # activations
+                     + n_total / hw.model * 16)        # moments r/w fp32
+        # collectives: grad reduce (2× params) + TP activation all-reduces
+        coll = 2 * n_total * 4 / hw.model / (hw.dp if hw.fsdp else 1)
+        coll += 2 * 2 * tokens_local * D * 2 * cfg.num_layers  # 2 AR/layer ×2 ring
+        if hw.fsdp:
+            coll += n_total * 2 / hw.model * 2          # weight all-gathers
+    elif cell.kind == "prefill":
+        tokens_local = cell.global_batch * cell.seq_len / hw.dp
+        flops = 2.0 * n_active * tokens_local
+        flops += _attention_flops(cfg, cell.seq_len, cell.global_batch,
+                                  causal_factor=2.0, bwd=False) / hw.chips
+        weights = n_total * 2 / hw.model / (hw.dp if hw.fsdp else 1)
+        act = tokens_local * D * 2 * 8 * cfg.num_layers
+        bytes_hbm = weights + act
+        coll = 2 * 2 * tokens_local * D * 2 * cfg.num_layers
+    else:  # decode
+        bsz = max(cell.global_batch / hw.dp, 1)
+        flops = 2.0 * n_active * cell.global_batch / hw.chips
+        flops += _decode_attention_flops(cfg, cell.seq_len,
+                                         cell.global_batch) / hw.chips
+        weights = n_total * 2 / hw.model / (hw.dp if hw.fsdp else 1)
+        cache = _cache_bytes(cfg, cell.seq_len) * cell.global_batch / hw.chips
+        bytes_hbm = weights + cache
+        coll = 2 * bsz * D * 2 * 2 * cfg.num_layers
+    return {"flops": flops, "bytes": bytes_hbm, "coll": coll,
+            "t_compute": flops / PEAK_FLOPS, "t_memory": bytes_hbm / HBM_BW,
+            "t_collective": coll / ICI_BW,
+            "t_step": max(flops / PEAK_FLOPS, bytes_hbm / HBM_BW,
+                          coll / ICI_BW)}
+
+
+def memory_model(cfg: ArchConfig, cell: ShapeCell, hw: TpuHwConfig) -> float:
+    """Per-device HBM residency (bytes) — the TPU resource model (vs 16 GB)."""
+    n_total = _total_params(cfg)
+    shard = hw.model * (hw.dp if hw.fsdp else 1)
+    mem = n_total * 2 / shard                        # bf16 params
+    if cell.kind == "train":
+        mem += n_total * 2 / shard                   # grads
+        mem += n_total * 8 / (hw.model * hw.dp)      # ZeRO moments fp32
+        tokens_local = cell.global_batch * cell.seq_len / hw.dp / hw.microbatches
+        per_layer = tokens_local * cfg.d_model * 2
+        mem += per_layer * (cfg.num_layers if hw.remat else 8 * cfg.num_layers)
+    else:
+        mem += _cache_bytes(cfg, cell.seq_len) * cell.global_batch / hw.chips
+    return mem
+
+
+def _total_params(cfg: ArchConfig) -> float:
+    """All parameters (MoE: every expert), for memory/weight traffic."""
+    n = active_params(cfg)
+    if cfg.moe is not None:
+        moe_layers = sum(st.repeat for st in cfg.stages
+                         for k in st.pattern if k.endswith("moe"))
+        act_e = cfg.moe.top_k + cfg.moe.num_shared
+        n += moe_layers * 3 * cfg.d_model * cfg.moe.d_ff_expert \
+            * (cfg.moe.num_experts - act_e + cfg.moe.num_shared * 0)
+    return n
+
+
+def _attention_layers(cfg: ArchConfig) -> int:
+    return sum(st.repeat for st in cfg.stages
+               for k in st.pattern if k.split(".")[0] in ("attn", "dec_attn", "mla"))
+
+
+def _attention_flops(cfg: ArchConfig, seq: int, batch: int, *,
+                     causal_factor: float, bwd: bool) -> float:
+    """Global score+value flops (full S² blocks; ÷2 if block-skipping)."""
+    n_attn = _attention_layers(cfg)
+    hd = cfg.head_dim if cfg.mla is None else (cfg.mla.nope_head_dim
+                                               + cfg.mla.rope_head_dim)
+    per_layer = 2.0 * 2.0 * batch * seq * seq * cfg.num_heads * hd
+    if bwd:
+        per_layer *= 2.5
+    # SSD chunk-quadratic term for mamba mixers
+    ssm_layers = sum(st.repeat for st in cfg.stages
+                     for k in st.pattern if k.split(".")[0] == "mamba")
+    ssd = 0.0
+    if ssm_layers and cfg.ssm is not None:
+        q = cfg.ssm.chunk
+        d_inner = cfg.ssm.expand * cfg.d_model
+        ssd = 2.0 * 2.0 * batch * seq * q * (d_inner + cfg.ssm.d_state)
+        if bwd:
+            ssd *= 2.5
+    return per_layer * n_attn + ssd * ssm_layers
+
+
+def _decode_attention_flops(cfg: ArchConfig, seq: int, batch: int) -> float:
+    n_attn = _attention_layers(cfg)
+    if cfg.mla is not None:
+        per = 2.0 * batch * seq * cfg.num_heads * (cfg.mla.kv_lora_rank * 2)
+    else:
+        per = 2.0 * 2.0 * batch * seq * cfg.num_heads * cfg.head_dim
+    return per * n_attn
+
+
+def _cache_bytes(cfg: ArchConfig, seq: int) -> float:
+    """KV/state bytes per sequence."""
+    total = 0.0
+    for st in cfg.stages:
+        for k in st.pattern:
+            mixer = k.split(".")[0]
+            if mixer in ("attn", "dec_attn"):
+                total += st.repeat * 2 * seq * cfg.num_kv_heads * cfg.head_dim * 2
+            elif mixer == "mla":
+                total += st.repeat * seq * (cfg.mla.kv_lora_rank
+                                            + cfg.mla.rope_head_dim) * 2
+            elif mixer == "mamba":
+                d_inner = cfg.ssm.expand * cfg.d_model
+                n_heads = d_inner // cfg.ssm.head_dim
+                total += st.repeat * (n_heads * cfg.ssm.head_dim
+                                      * cfg.ssm.d_state * 4)
+    return total
+
+
+def search_hw(cfg: ArchConfig, cell: ShapeCell, *, chips: int = 256,
+              hbm_limit: float = 16e9, pod: int = 1) -> list[dict]:
+    """Enumerate mesh splits × microbatches; keep feasible, sort by t_step.
+
+    The TPU DSE inner loop: the analogue of scanning reuse factors under the
+    DSP budget (§IV-B) — scan mesh factorizations under the HBM budget.
+    """
+    out = []
+    d = 1
+    while d <= chips:
+        if chips % d == 0:
+            m = chips // d
+            for mb in (1, 2, 4, 8):
+                for fsdp in (False, True):
+                    hw = TpuHwConfig(data=d, model=m, pod=pod,
+                                     microbatches=mb, fsdp=fsdp)
+                    if cell.global_batch % max(hw.dp, 1) and cell.global_batch > 1:
+                        continue
+                    mem = memory_model(cfg, cell, hw)
+                    perf = step_model(cfg, cell, hw)
+                    out.append({"hw": hw, "mem": mem,
+                                "feasible": mem <= hbm_limit, **perf})
+        d *= 2
+    out.sort(key=lambda r: (not r["feasible"], r["t_step"]))
+    return out

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel <name>.py carries explicit BlockSpec VMEM tiling; ops.py holds
+the jit'd wrappers; ref.py the pure-jnp oracles the tests assert against
+(interpret=True on CPU; native lowering on TPU).
+
+  bernoulli_mask  counter-PRNG mask generate+apply (the paper's LFSR + DX)
+  mcd_matmul      fused MCD mask + matmul (K-tiled, fp32 VMEM accumulator)
+  mcd_lstm        fused Bayesian LSTM cell step (the paper's Fig. 2 datapath)
+  decode_attn     flash-decode attention over the KV cache (serving hot path)
+  ssd_chunk       fused Mamba2/SSD chunk scan (VMEM-resident chunk state)
+"""

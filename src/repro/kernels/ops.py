@@ -1,0 +1,76 @@
+"""jit'd high-level wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (CPU validation path); on a real TPU
+backend the kernels compile natively.  The framework's model code uses the
+pure-jnp mirrors by default (sharding-friendly under GSPMD); these wrappers
+are the TPU hot-path entry points and the unit under test in
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcd
+from repro.kernels import bernoulli_mask, mcd_lstm, mcd_matmul
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()
+
+
+def flash_decode_attention(q: jax.Array, k_cache: jax.Array,
+                           v_cache: jax.Array, pos, **kw) -> jax.Array:
+    """Fused decode attention (EXPERIMENTS.md §Perf Cell C hot path)."""
+    from repro.kernels import decode_attn
+    kw.setdefault("interpret", default_interpret())
+    return decode_attn.decode_attention(q, k_cache, v_cache, pos, **kw)
+
+
+def mcd_dense(x: jax.Array, w: jax.Array, rows: jax.Array, seed, layer: int,
+              site: int, p_drop: float, **kw) -> jax.Array:
+    """Fused masked dense: y = (x ⊙ z/(1-p)) @ W with the site-keyed stream."""
+    key = mcd.mask_key(seed, layer, mcd.KIND_FEAT, site)
+    kw.setdefault("interpret", default_interpret())
+    return mcd_matmul.mcd_matmul(x, w, rows, key, p_drop, **kw)
+
+
+def mcd_mask_apply(x: jax.Array, rows: jax.Array, seed, layer: int, site: int,
+                   p_drop: float, **kw) -> jax.Array:
+    key = mcd.mask_key(seed, layer, mcd.KIND_FEAT, site)
+    kw.setdefault("interpret", default_interpret())
+    return bernoulli_mask.masked_activation(x, rows, key, p_drop, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("p_drop", "layer", "interpret"))
+def fused_lstm_layer(wx4: jax.Array, wh4: jax.Array, b: jax.Array,
+                     x_seq: jax.Array, rows: jax.Array, seed, layer: int,
+                     p_drop: float, interpret: bool | None = None):
+    """Scan the fused cell kernel over time (paper Fig. 5 TS pipelining).
+
+    wx4: [I, 4, H]; wh4: [H, 4, H]; b: [4, H]; x_seq: [B, T, I].
+    Returns (outputs [B, T, H], (h_T, c_T)).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    B, T, _ = x_seq.shape
+    H = wh4.shape[0]
+    keys = mcd_lstm.gate_keys(seed, layer)
+    h0 = jnp.zeros((B, H), x_seq.dtype)
+    c0 = jnp.zeros((B, H), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = mcd_lstm.mcd_lstm_step(x_t, h, c, wx4, wh4, b, rows, keys,
+                                      p_drop, interpret=interpret)
+        return (h, c), h
+
+    (hT, cT), ys = jax.lax.scan(step, (h0, c0), jnp.swapaxes(x_seq, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), (hT, cT)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors its kernel's *mathematical contract* with no tiling —
+tests sweep shapes/dtypes and assert allclose between kernel (interpret=True)
+and these references.  Mask bits use the identical counter-PRNG formula, so
+agreement is exact on the mask pattern and fp-tolerance on the matmuls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prng
+
+
+def _mask(key, rows, n_feat: int, p_drop: float):
+    cols = jnp.arange(n_feat, dtype=jnp.uint32)
+    idx = rows.astype(jnp.uint32)[:, None] * jnp.uint32(n_feat) + cols
+    bits = prng._mix32(jnp.asarray(key, jnp.uint32) ^ prng._mix32(idx))
+    return bits >= prng.bernoulli_keep_threshold(p_drop)
+
+
+def masked_activation(x, rows, key, p_drop: float):
+    if p_drop == 0.0:
+        return x
+    keep = _mask(key, rows, x.shape[1], p_drop)
+    scale = jnp.asarray(1.0 / (1.0 - p_drop), x.dtype)
+    return jnp.where(keep, x * scale, jnp.zeros_like(x))
+
+
+def mcd_matmul(x, w, rows, key, p_drop: float):
+    xm = masked_activation(x, rows, key, p_drop)
+    return jnp.dot(xm, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """q: [B, H, hd]; caches: [B, S, KV, hd]; softmax over positions ≤ pos."""
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    rep = H // KV
+    qr = q.reshape(B, KV, rep, hd).astype(jnp.float32)
+    s = jnp.einsum("bgrh,bsgh->bgrs", qr, k_cache.astype(jnp.float32)) \
+        * hd ** -0.5
+    valid = jnp.arange(k_cache.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrs,bsgh->bgrh", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def mcd_lstm_step(x, h, c, wx, wh, b, rows, keys, p_drop: float):
+    """wx: [I, 4, H]; wh: [H, 4, H]; b: [4, H]; keys: [1, 8]."""
+    gates = []
+    for g in range(4):
+        if p_drop > 0.0:
+            sx = jnp.asarray(1.0 / (1.0 - p_drop), x.dtype)
+            xg = jnp.where(_mask(keys[0, g], rows, x.shape[1], p_drop),
+                           x * sx, 0.0)
+            hg = jnp.where(_mask(keys[0, 4 + g], rows, h.shape[1], p_drop),
+                           h * sx, 0.0)
+        else:
+            xg, hg = x, h
+        acc = jnp.dot(xg, wx[:, g, :], preferred_element_type=jnp.float32) \
+            + jnp.dot(hg, wh[:, g, :], preferred_element_type=jnp.float32) \
+            + b[g].astype(jnp.float32)
+        gates.append(acc)
+    i = jax.nn.sigmoid(gates[0])
+    f = jax.nn.sigmoid(gates[1])
+    g_ = jnp.tanh(gates[2])
+    o = jax.nn.sigmoid(gates[3])
+    c_new = f * c.astype(jnp.float32) + i * g_
+    h_new = (o * jnp.tanh(c_new)).astype(h.dtype)
+    return h_new, c_new.astype(c.dtype)

@@ -1,0 +1,249 @@
+"""Sharding rules: PartitionSpec pytrees mirroring the model structures.
+
+The specs are built *structurally* (mirror functions for each param group)
+rather than by path-regex — every leaf's spec is written next to the shape it
+shards, with divisibility guards, so adding an arch can't silently fall back
+to replication.
+
+Policy knobs (the hardware half of the paper's DSE space — the TPU analogue
+of reuse factors R_x/R_h/R_d):
+  * tp           — tensor-parallel axis name ("model")
+  * fsdp         — shard params+grads over the data axes too (weight
+                   all-gather per layer; required for ≥100B-param train)
+  * zero         — shard optimizer moments over the data axes (ZeRO-1)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import backbone, layers, mamba2, mla, moe
+from repro.models.config import ArchConfig, Stage
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    axes: dict                      # mesh axis name → size
+    dp: tuple[str, ...]             # data-parallel axes (("pod","data") or ("data",))
+    tp: str = "model"
+    fsdp: bool = False
+    zero: bool = True
+
+    def dp_size(self) -> int:
+        out = 1
+        for a in self.dp:
+            out *= self.axes[a]
+        return out
+
+    def tp_size(self) -> int:
+        return self.axes.get(self.tp, 1)
+
+    def tp_if(self, dim: int):
+        """tp axis if the dim is divisible, else replicate."""
+        return self.tp if dim % max(self.tp_size(), 1) == 0 else None
+
+    def dp_if(self, dim: int):
+        return self.dp if dim % max(self.dp_size(), 1) == 0 else None
+
+    def fsdp_if(self, dim: int):
+        return self.dp if (self.fsdp and dim % max(self.dp_size(), 1) == 0) else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (mirror init_* structures)
+# ---------------------------------------------------------------------------
+
+def spec_attn(cfg: ArchConfig, po: Policy) -> layers.AttnParams:
+    H, KV, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return layers.AttnParams(
+        wq=P(po.fsdp_if(D), po.tp_if(H), None),
+        wk=P(po.fsdp_if(D), po.tp_if(KV), None),
+        wv=P(po.fsdp_if(D), po.tp_if(KV), None),
+        wo=P(po.tp_if(H), None, po.fsdp_if(D)),
+        q_scale=P() if cfg.qk_norm else None,
+        k_scale=P() if cfg.qk_norm else None,
+        norm=P())
+
+
+def spec_mlp(cfg: ArchConfig, po: Policy, d_ff: int) -> layers.MLPParams:
+    D = cfg.d_model
+    return layers.MLPParams(
+        wi=P(po.fsdp_if(D), None, po.tp_if(d_ff)),
+        wo=P(po.tp_if(d_ff), po.fsdp_if(D)),
+        norm=P())
+
+
+def spec_moe(cfg: ArchConfig, po: Policy) -> moe.MoEParams:
+    D, E = cfg.d_model, cfg.moe.num_experts
+    dffe = cfg.moe.d_ff_expert
+    shared = None
+    if cfg.moe.num_shared:
+        shared = spec_mlp(cfg, po, cfg.moe.num_shared * dffe)
+    return moe.MoEParams(
+        router=P(None, None),
+        wi=P(po.tp_if(E), po.fsdp_if(D), None, None),
+        wo=P(po.tp_if(E), None, po.fsdp_if(D)),
+        shared=shared,
+        norm=P())
+
+
+def spec_mla(cfg: ArchConfig, po: Policy) -> mla.MLAParams:
+    H, D = cfg.num_heads, cfg.d_model
+    return mla.MLAParams(
+        norm=P(),
+        wq=P(po.fsdp_if(D), po.tp_if(H), None),
+        w_dkv=P(po.fsdp_if(D), None),
+        kv_norm=P(),
+        w_krope=P(None, None),
+        w_uk=P(None, po.tp_if(H), None),
+        w_uv=P(None, po.tp_if(H), None),
+        wo=P(po.tp_if(H), None, po.fsdp_if(D)))
+
+
+def spec_mamba(cfg: ArchConfig, po: Policy) -> mamba2.MambaParams:
+    D = cfg.d_model
+    d_inner, n_heads, conv_dim = mamba2.dims(D, cfg.ssm)
+    d_in_proj = 2 * d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state + n_heads
+    return mamba2.MambaParams(
+        norm=P(),
+        in_proj=P(po.fsdp_if(D), None),
+        conv_w=P(po.tp_if(conv_dim), None),
+        conv_b=P(po.tp_if(conv_dim)),
+        a_log=P(), d_skip=P(), dt_bias=P(),
+        out_norm=P(po.tp_if(d_inner)),
+        out_proj=P(po.tp_if(d_inner), po.fsdp_if(D)))
+
+
+def spec_block(kind: str, cfg: ArchConfig, po: Policy) -> dict:
+    mixer, has_cross, ffn = backbone._parse(kind)
+    out = {}
+    if mixer in ("attn", "enc_attn", "dec_attn"):
+        out["mixer"] = spec_attn(cfg, po)
+    elif mixer == "mla":
+        out["mixer"] = spec_mla(cfg, po)
+    elif mixer == "mamba":
+        out["mixer"] = spec_mamba(cfg, po)
+    if has_cross:
+        out["cross"] = spec_attn(cfg, po)
+    if ffn == "mlp":
+        out["ffn"] = spec_mlp(cfg, po, cfg.d_ff)
+    elif ffn == "moe":
+        out["ffn"] = spec_moe(cfg, po)
+    return out
+
+
+def _prepend(spec):
+    """Stacked stage params carry a leading repeat dim → prepend None."""
+    return jax.tree.map(lambda s: P(None, *s), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def spec_stage(stage: Stage, cfg: ArchConfig, po: Policy):
+    return tuple(_prepend(spec_block(kind, cfg, po)) for kind in stage.pattern)
+
+
+def param_specs(cfg: ArchConfig, po: Policy):
+    V, D = cfg.vocab_size, cfg.d_model
+    specs = {
+        "embed": layers.EmbedParams(
+            table=P(po.tp_if(V), po.fsdp_if(D)),
+            head=None if cfg.tie_embeddings else P(po.fsdp_if(D), po.tp_if(V)),
+            final_norm=P()),
+        "stages": [spec_stage(s, cfg, po) for s in cfg.stages],
+    }
+    if cfg.encoder_stages:
+        specs["encoder_stages"] = [spec_stage(s, cfg, po)
+                                   for s in cfg.encoder_stages]
+        specs["encoder_norm"] = P()
+    return specs
+
+
+def optstate_specs(pspecs, po: Policy, param_shapes):
+    """ZeRO-1: moments inherit the param spec with the data axes folded into
+    the first still-replicated, divisible dim."""
+    def fold(spec, shape):
+        if not po.zero or po.fsdp:          # fsdp already uses the dp axes
+            return spec
+        parts = list(spec)
+        while len(parts) < len(shape.shape):
+            parts.append(None)
+        for i, (axis, dim) in enumerate(zip(parts, shape.shape)):
+            if axis is None and dim % max(po.dp_size(), 1) == 0 and dim > 1:
+                parts[i] = po.dp
+                return P(*parts)
+        return spec
+
+    from repro.train.optimizer import AdamWState
+    m = jax.tree.map(fold, pspecs, param_shapes,
+                     is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(step=P(), m=m, v=m)
+
+
+# ---------------------------------------------------------------------------
+# Input / decode-state specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(batch: int, po: Policy):
+    """Shard the batch dim over dp axes when divisible (long_500k: batch 1)."""
+    return po.dp if batch % max(po.dp_size(), 1) == 0 else None
+
+
+def cache_specs(cfg: ArchConfig, po: Policy, batch: int,
+                kv_quant: bool = False):
+    """PartitionSpecs mirroring backbone.init_decode_state structure."""
+    b = batch_spec(batch, po)
+
+    def attn_cache():
+        # [repeat, B, Smax, KV, hd]: prefer head sharding; else shard the
+        # sequence (flash-decoding style — partial softmax + all-reduce).
+        if cfg.num_kv_heads % max(po.tp_size(), 1) == 0:
+            kv = P(None, b, None, po.tp, None)
+            sc = P(None, b, None, po.tp)
+        elif b is None:
+            kv = P(None, None, po.dp + (po.tp,), None, None)
+            sc = P(None, None, po.dp + (po.tp,), None)
+        else:
+            kv = P(None, b, po.tp, None, None)
+            sc = P(None, b, po.tp, None)
+        if kv_quant:
+            return (kv, sc, kv, sc)
+        return (kv, kv)
+
+    def mla_cache():
+        return mla.MLACache(c_kv=P(None, b, None, None),
+                            k_rope=P(None, b, None, None))
+
+    def mamba_cache():
+        d_inner, n_heads, conv_dim = mamba2.dims(cfg.d_model, cfg.ssm)
+        return mamba2.MambaState(
+            ssm=P(None, b, po.tp_if(n_heads), None, None),
+            conv=P(None, b, None, po.tp_if(conv_dim)))
+
+    caches, crosses = [], []
+    any_cross = False
+    for st in cfg.stages:
+        per_c, per_x = [], []
+        for kind in st.pattern:
+            mixer, has_cross, _ = backbone._parse(kind)
+            if mixer in ("attn", "dec_attn"):
+                per_c.append(attn_cache())
+            elif mixer == "mla":
+                per_c.append(mla_cache())
+            elif mixer == "mamba":
+                per_c.append(mamba_cache())
+            else:
+                per_c.append(None)
+            if has_cross:
+                any_cross = True
+                kv = P(None, b, None, po.tp_if(cfg.num_kv_heads), None)
+                per_x.append((kv, kv))
+            else:
+                per_x.append(None)
+        caches.append(tuple(per_c))
+        crosses.append(tuple(per_x))
+    return backbone.DecodeState(pos=P(), caches=caches,
+                                cross=crosses if any_cross else None)

@@ -1,0 +1,393 @@
+"""Lowering jobs: (arch × shape × mesh) → function + ShapeDtypeStruct args +
+shardings.  Everything is built with jax.eval_shape — no real allocation;
+the FULL configs only ever exist as abstract arrays on this container.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import prng
+from repro.launch import mesh as mesh_lib
+from repro.launch import shardings
+from repro.models import backbone
+from repro.models.config import ArchConfig, SHAPES, shape_applicable
+from repro.models.layers import Ctx
+from repro.train import optimizer, trainer
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(mesh, spec_tree):
+    leaf = lambda x: isinstance(x, P)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=leaf)
+
+
+@dataclasses.dataclass
+class LoweringJob:
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    kind: str                      # train | prefill | decode
+    notes: str = ""
+
+
+def make_policy(mesh, cfg: ArchConfig) -> shardings.Policy:
+    axes = mesh_lib.axis_sizes(mesh)
+    dp = mesh_lib.dp_axes(mesh)
+    # FSDP for archs whose TP-sharded params would not fit a 16 GB chip:
+    # params_bytes / tp_size > ~4 GB → shard over data too.
+    big = cfg.name.startswith(("jamba", "qwen3-32b", "internvl2"))
+    return shardings.Policy(axes=axes, dp=dp, tp="model", fsdp=big, zero=True)
+
+
+def model_input_specs(cfg: ArchConfig, batch: int, seq: int, *,
+                      with_targets: bool, po: shardings.Policy):
+    """(args-dict of ShapeDtypeStruct, specs-dict of PartitionSpec)."""
+    b = shardings.batch_spec(batch, po)
+    toks = seq
+    extras, espec = {}, {}
+    if cfg.family == "audio":
+        extras["frames"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                                jnp.bfloat16)
+        espec["frames"] = P(b, None, None)
+    if cfg.family == "vlm":
+        toks = seq - cfg.num_patches
+        extras["patches"] = _sds((batch, cfg.num_patches, cfg.d_model),
+                                 jnp.bfloat16)
+        espec["patches"] = P(b, None, None)
+    args = {"tokens": _sds((batch, toks), jnp.int32), **extras}
+    spec = {"tokens": P(b, None), **espec}
+    if with_targets:
+        args["targets"] = _sds((batch, toks), jnp.int32)
+        spec["targets"] = P(b, None)
+    return args, spec
+
+
+def _ctx_for(cfg: ArchConfig, batch: int, po: shardings.Policy):
+    b = shardings.batch_spec(batch, po)
+    ctx_arg = Ctx(rows=_sds((batch,), jnp.uint32),
+                  seed=_sds((), jnp.uint32), cfg=cfg.mcd)
+    ctx_spec = Ctx(rows=P(b), seed=P(), cfg=cfg.mcd)
+    return ctx_arg, ctx_spec
+
+
+def train_job(cfg: ArchConfig, shape_name: str, mesh,
+              microbatches: int = 1) -> LoweringJob:
+    cell = SHAPES[shape_name]
+    po = make_policy(mesh, cfg)
+    batch, seq = cell.global_batch, cell.seq_len
+
+    params_sh = jax.eval_shape(
+        functools.partial(backbone.init_params, cfg=cfg, dtype=jnp.bfloat16),
+        jax.random.key(0))
+    opt_sh = jax.eval_shape(optimizer.init, params_sh)
+    pspecs = shardings.param_specs(cfg, po)
+    ospecs = shardings.optstate_specs(pspecs, po, params_sh)
+    batch_args, batch_specs = model_input_specs(cfg, batch, seq,
+                                                with_targets=True, po=po)
+
+    tcfg = trainer.TrainConfig(microbatches=microbatches, log_every=0)
+
+    def loss(params, b, step):
+        ctx = Ctx(rows=jnp.arange(b["tokens"].shape[0], dtype=jnp.uint32),
+                  seed=prng.fold_ids(cfg.mcd.seed, step), cfg=cfg.mcd)
+        return backbone.loss_fn(params, cfg, b["tokens"], b["targets"], ctx,
+                                frames=b.get("frames"),
+                                patches=b.get("patches"))
+
+    raw_step = trainer.make_train_step(loss, tcfg)
+
+    def train_step(params, opt_state, batch_in, step):
+        err = jax.tree.map(lambda _: jnp.zeros((), jnp.float32), params)
+        params, opt_state, _, metrics = raw_step(params, opt_state, err,
+                                                 batch_in, step)
+        return params, opt_state, metrics
+
+    in_spec = (pspecs, ospecs, batch_specs, P())
+    out_spec = (pspecs, ospecs, {"loss": P(), "grad_norm": P(), "lr": P()})
+    return LoweringJob(
+        name=f"{cfg.name}:{shape_name}",
+        fn=train_step,
+        args=(params_sh, opt_sh, batch_args, _sds((), jnp.int32)),
+        in_shardings=_named(mesh, in_spec),
+        out_shardings=_named(mesh, out_spec),
+        kind="train")
+
+
+def prefill_job(cfg: ArchConfig, shape_name: str, mesh) -> LoweringJob:
+    cell = SHAPES[shape_name]
+    po = make_policy(mesh, cfg)
+    batch, seq = cell.global_batch, cell.seq_len
+    params_sh = jax.eval_shape(
+        functools.partial(backbone.init_params, cfg=cfg, dtype=jnp.bfloat16),
+        jax.random.key(0))
+    pspecs = shardings.param_specs(cfg, po)
+    batch_args, batch_specs = model_input_specs(cfg, batch, seq,
+                                                with_targets=False, po=po)
+    ctx_arg, ctx_spec = _ctx_for(cfg, batch, po)
+    state_specs = shardings.cache_specs(cfg, po, batch)
+    b = shardings.batch_spec(batch, po)
+
+    def prefill_step(params, b_in, ctx):
+        return backbone.prefill(params, cfg, b_in["tokens"], ctx, seq,
+                                frames=b_in.get("frames"),
+                                patches=b_in.get("patches"))
+
+    in_spec = (pspecs, batch_specs, ctx_spec)
+    out_spec = (P(b, None, None), state_specs)
+    return LoweringJob(
+        name=f"{cfg.name}:{shape_name}",
+        fn=prefill_step,
+        args=(params_sh, batch_args, ctx_arg),
+        in_shardings=_named(mesh, in_spec),
+        out_shardings=_named(mesh, out_spec),
+        kind="prefill")
+
+
+def decode_job(cfg: ArchConfig, shape_name: str, mesh,
+               kv_quant: bool = False) -> LoweringJob:
+    cell = SHAPES[shape_name]
+    po = make_policy(mesh, cfg)
+    batch, seq = cell.global_batch, cell.seq_len
+    params_sh = jax.eval_shape(
+        functools.partial(backbone.init_params, cfg=cfg, dtype=jnp.bfloat16),
+        jax.random.key(0))
+    pspecs = shardings.param_specs(cfg, po)
+    state_sh = jax.eval_shape(
+        functools.partial(backbone.init_decode_state, cfg, batch, seq,
+                          jnp.bfloat16, kv_quant=kv_quant))
+    state_specs = shardings.cache_specs(cfg, po, batch, kv_quant=kv_quant)
+    ctx_arg, ctx_spec = _ctx_for(cfg, batch, po)
+    b = shardings.batch_spec(batch, po)
+
+    def serve_step(params, token, state, ctx):
+        return backbone.decode_step(params, cfg, token, state, ctx)
+
+    in_spec = (pspecs, P(b, None), state_specs, ctx_spec)
+    out_spec = (P(b, None, None), state_specs)
+    return LoweringJob(
+        name=f"{cfg.name}:{shape_name}",
+        fn=serve_step,
+        args=(params_sh, _sds((batch, 1), jnp.int32), state_sh, ctx_arg),
+        in_shardings=_named(mesh, in_spec),
+        out_shardings=_named(mesh, out_spec),
+        kind="decode",
+        notes=f"KV/state length {seq}")
+
+
+# ---------------------------------------------------------------------------
+# Roofline probes — XLA's cost analysis counts while-loop bodies once, so the
+# full-cell numbers undercount scanned layers.  Probes compile each unique
+# (stage, position) block (+ head + optimizer) standalone with attention
+# scans unrolled, and the roofline composes  Σ body × repeat + head + opt.
+# Everything stays derived from compiled artifacts.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Probe:
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    multiplier: int                # how many times this body runs per step
+
+
+def _attn_blocks_for(seq: int):
+    """Probe tiling: ≤64 unrolled attention bodies regardless of seq."""
+    qb = max(512, seq // 8)
+    kb = max(1024, seq // 8)
+    return dict(q_block=qb, kv_block=kb, unroll=True)
+
+
+def probe_jobs(cfg: ArchConfig, shape_name: str, mesh,
+               kv_quant: bool = False) -> list[Probe]:
+    from repro.models import layers as L
+
+    cell = SHAPES[shape_name]
+    po = make_policy(mesh, cfg)
+    batch, seq = cell.global_batch, cell.seq_len
+    kind_step = cell.kind
+    b = shardings.batch_spec(batch, po)
+    dtype = jnp.bfloat16
+    probes: list[Probe] = []
+    ctx_arg, ctx_spec = _ctx_for(cfg, batch, po)
+    x_seq = seq if kind_step != "decode" else 1
+    x_arg = _sds((batch, x_seq, cfg.d_model), dtype)
+    x_spec = P(b, None, None)
+
+    def add_block_probes(stages, tag: str, block_seq: int):
+        xa = _sds((batch, block_seq, cfg.d_model), dtype)
+        for si, st in enumerate(stages):
+            for j, kind in enumerate(st.pattern):
+                bl_specs = shardings.spec_block(kind, cfg, po)
+                bl_shapes = jax.eval_shape(
+                    functools.partial(backbone.init_block, kind=kind, cfg=cfg,
+                                      dtype=dtype), jax.random.key(0))
+                positions = jnp.arange(block_seq)
+                bayes = cfg.mcd.bayesian(j)
+                has_cross = "cross" in kind.split(".")
+                ekv_arg = ekv_spec = None
+                if has_cross:
+                    kv = _sds((batch, cfg.encoder_seq, cfg.num_kv_heads,
+                               cfg.head_dim), dtype)
+                    ekv_arg = (kv, kv)
+                    sp = P(b, None, po.tp_if(cfg.num_kv_heads), None)
+                    ekv_spec = (sp, sp)
+
+                if kind_step == "train":
+                    def fn(p, x, ekv, ctx, _kind=kind, _pos=positions,
+                           _by=bayes):
+                        # checkpointed to match the remat policy of the real
+                        # train step (backward recomputes block internals)
+                        @jax.checkpoint
+                        def f(p_, x_):
+                            out, aux, _ = backbone._block_forward(
+                                p_, _kind, cfg, x_, _pos, ctx, 0, _by,
+                                enc_kv=ekv)
+                            return jnp.sum(out.astype(jnp.float32)) + aux
+                        return jax.grad(f, argnums=(0, 1))(p, x)
+                else:
+                    def fn(p, x, ekv, ctx, _kind=kind, _pos=positions,
+                           _by=bayes):
+                        out, aux, _ = backbone._block_forward(
+                            p, _kind, cfg, x, _pos, ctx, 0, _by, enc_kv=ekv)
+                        return out
+
+                probes.append(Probe(
+                    name=f"{tag}{si}.{j}:{kind}",
+                    fn=fn, args=(bl_shapes, xa, ekv_arg, ctx_arg),
+                    in_shardings=_named(mesh, (bl_specs, x_spec, ekv_spec,
+                                               ctx_spec)),
+                    multiplier=st.repeat))
+
+    def add_decode_block_probes():
+        state_sh = jax.eval_shape(
+            functools.partial(backbone.init_decode_state, cfg, batch, seq,
+                              dtype, kv_quant=kv_quant))
+        state_specs = shardings.cache_specs(cfg, po, batch,
+                                            kv_quant=kv_quant)
+        for si, st in enumerate(cfg.stages):
+            for j, kind in enumerate(st.pattern):
+                bl_specs = shardings.spec_block(kind, cfg, po)
+                bl_shapes = jax.eval_shape(
+                    functools.partial(backbone.init_block, kind=kind, cfg=cfg,
+                                      dtype=dtype), jax.random.key(0))
+                # unstacked cache slice for this block
+                cache_sh = jax.tree.map(lambda a: _sds(a.shape[1:], a.dtype),
+                                        state_sh.caches[si][j])
+                cache_sp = jax.tree.map(
+                    lambda s: P(*s[1:]), state_specs.caches[si][j],
+                    is_leaf=lambda x: isinstance(x, P))
+                cross_sh = cross_sp = None
+                if state_sh.cross is not None and state_sh.cross[si][j] is not None:
+                    cross_sh = jax.tree.map(
+                        lambda a: _sds(a.shape[1:], a.dtype),
+                        state_sh.cross[si][j])
+                    cross_sp = jax.tree.map(
+                        lambda s: P(*s[1:]), state_specs.cross[si][j],
+                        is_leaf=lambda x: isinstance(x, P))
+                bayes = cfg.mcd.bayesian(j)
+
+                def fn(p, x, cache, cross, pos, ctx, _kind=kind, _by=bayes):
+                    return backbone._block_decode(p, _kind, cfg, x, cache,
+                                                  pos, ctx, 0, _by,
+                                                  cross_kv=cross)
+
+                probes.append(Probe(
+                    name=f"dec{si}.{j}:{kind}",
+                    fn=fn,
+                    args=(bl_shapes, x_arg, cache_sh, cross_sh,
+                          _sds((), jnp.int32), ctx_arg),
+                    in_shardings=_named(mesh, (bl_specs, x_spec, cache_sp,
+                                               cross_sp, P(), ctx_spec)),
+                    multiplier=st.repeat))
+
+    # --- blocks ---
+    if kind_step == "decode":
+        add_decode_block_probes()
+    else:
+        add_block_probes(cfg.stages, "blk", seq)
+        if cfg.encoder_stages:
+            add_block_probes(cfg.encoder_stages, "enc", cfg.encoder_seq)
+
+    # --- embedding + head ---
+    embed_sh = jax.eval_shape(
+        functools.partial(layers_init_embed_shapes, cfg, dtype),
+        jax.random.key(0))
+    embed_sp = shardings.param_specs(cfg, po)["embed"]
+    toks = _sds((batch, x_seq), jnp.int32)
+    if kind_step == "train":
+        def head_fn(ep, tokens, targets):
+            # embed fwd+bwd + logits/xent fwd+bwd in one probe
+            def f(ep_):
+                x = L.embed(ep_, tokens)
+                return backbone._chunked_xent(ep_, x, targets)
+            return jax.grad(f)(ep)
+        probes.append(Probe(
+            name="head:embed+xent",
+            fn=head_fn,
+            args=(embed_sh, toks, _sds((batch, x_seq), jnp.int32)),
+            in_shardings=_named(mesh, (embed_sp, P(b, None), P(b, None))),
+            multiplier=1))
+    else:
+        out_positions = x_seq if kind_step == "prefill" else 1
+
+        def head_fn(ep, tokens):
+            x = L.embed(ep, tokens)
+            return L.logits(ep, x)
+        probes.append(Probe(
+            name="head:embed+logits",
+            fn=head_fn,
+            args=(embed_sh, _sds((batch, out_positions), jnp.int32)),
+            in_shardings=_named(mesh, (embed_sp, P(b, None))),
+            multiplier=1))
+
+    # --- optimizer update (train only) ---
+    if kind_step == "train":
+        params_sh = jax.eval_shape(
+            functools.partial(backbone.init_params, cfg=cfg, dtype=dtype),
+            jax.random.key(0))
+        opt_sh = jax.eval_shape(optimizer.init, params_sh)
+        pspecs = shardings.param_specs(cfg, po)
+        ospecs = shardings.optstate_specs(pspecs, po, params_sh)
+        grads_sh = jax.tree.map(lambda a: _sds(a.shape, jnp.float32), params_sh)
+        tcfg = trainer.TrainConfig()
+
+        def opt_fn(params, grads, state):
+            return optimizer.apply(tcfg.adamw, params, grads, state)
+        probes.append(Probe(
+            name="opt:adamw",
+            fn=opt_fn, args=(params_sh, grads_sh, opt_sh),
+            in_shardings=_named(mesh, (pspecs, pspecs, ospecs)),
+            multiplier=1))
+    return probes
+
+
+def layers_init_embed_shapes(cfg: ArchConfig, dtype, key):
+    from repro.models import layers as L
+    return L.init_embed(key, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings,
+                        dtype)
+
+
+def make_job(cfg: ArchConfig, shape_name: str, mesh) -> LoweringJob | None:
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        return None
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return train_job(cfg, shape_name, mesh)
+    if kind == "prefill":
+        return prefill_job(cfg, shape_name, mesh)
+    return decode_job(cfg, shape_name, mesh)

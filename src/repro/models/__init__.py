@@ -1,0 +1,4 @@
+"""Assigned-architecture model zoo (see repro.models.backbone for the engine)."""
+
+from repro.models.config import ArchConfig, ShapeCell, SHAPES, shape_applicable  # noqa: F401
+from repro.models import backbone  # noqa: F401

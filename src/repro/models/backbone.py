@@ -1,0 +1,497 @@
+"""Generic stage-scanned backbone: one engine for all 10 assigned archs.
+
+A model = embedding + a sequence of *stages*; each stage scans a repeated
+period of blocks (see ``config.Stage``).  Scanning stacked parameters keeps
+the HLO one-period-sized regardless of depth — a 72-layer Jamba compiles the
+same program as a 8-layer one — which is what makes 512-device dry-runs
+tractable and is also how the II-balanced cascade of the paper shows up here:
+every scan step advances the whole period wavefront.
+
+Three entry points per model:
+  forward      — full-sequence (train / prefill shapes)
+  prefill      — forward + cache/state construction for serving
+  decode_step  — single-token with KV caches / SSM states
+
+MCD: Bayesian placement (B) is static per pattern position (cycling the
+B-string); mask *values* vary per layer via the traced layer index folded
+into the counter-RNG key.  Masks for decode are recomputed per step from the
+same key — tied across decode steps by construction (paper's tied-across-T).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers, mamba2, mla, moe
+from repro.models.config import ArchConfig, Stage
+
+# Trace-time activation-sharding override (§Perf: Megatron-style sequence
+# parallelism).  When set, block outputs are constrained to shard the
+# sequence dim over the TP axis — GSPMD then inserts reduce-scatter +
+# all-gather pairs instead of full all-reduces (≈2× less TP traffic).
+_ACT_OVERRIDE: dict = {}
+
+
+@contextlib.contextmanager
+def activation_sharding(spec=None):
+    old = dict(_ACT_OVERRIDE)
+    _ACT_OVERRIDE.update(spec=spec)
+    try:
+        yield
+    finally:
+        _ACT_OVERRIDE.clear()
+        _ACT_OVERRIDE.update(old)
+
+
+def _constrain_act(x):
+    spec = _ACT_OVERRIDE.get("spec")
+    if spec is None or x.shape[1] == 1:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# --------------------------------------------------------------------------
+# Block kinds
+# --------------------------------------------------------------------------
+
+def _parse(kind: str) -> tuple[str, bool, str | None]:
+    """kind string → (mixer, has_cross, ffn|None)."""
+    parts = kind.split(".")
+    mixer = parts[0]
+    has_cross = "cross" in parts[1:]
+    ffn = parts[-1] if parts[-1] in ("mlp", "moe") else None
+    return mixer, has_cross, ffn
+
+
+def init_block(key, kind: str, cfg: ArchConfig, dtype) -> dict[str, Any]:
+    mixer, has_cross, ffn = _parse(kind)
+    keys = jax.random.split(key, 3)
+    p: dict[str, Any] = {}
+    if mixer in ("attn", "enc_attn", "dec_attn"):
+        p["mixer"] = layers.init_attn(keys[0], cfg.d_model, cfg.num_heads,
+                                      cfg.num_kv_heads, cfg.head_dim,
+                                      cfg.qk_norm, dtype)
+    elif mixer == "mla":
+        p["mixer"] = mla.init_mla(keys[0], cfg.d_model, cfg.num_heads,
+                                  cfg.mla, dtype)
+    elif mixer == "mamba":
+        p["mixer"] = mamba2.init_mamba(keys[0], cfg.d_model, cfg.ssm, dtype)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+    if has_cross:
+        p["cross"] = layers.init_attn(keys[1], cfg.d_model, cfg.num_heads,
+                                      cfg.num_kv_heads, cfg.head_dim,
+                                      cfg.qk_norm, dtype)
+    if ffn == "mlp":
+        p["ffn"] = layers.init_mlp(keys[2], cfg.d_model, cfg.d_ff, dtype)
+    elif ffn == "moe":
+        p["ffn"] = moe.init_moe(keys[2], cfg.d_model, cfg.moe, dtype)
+    return p
+
+
+def _block_forward(p, kind: str, cfg: ArchConfig, x, positions, ctx: layers.Ctx,
+                   layer_id, bayes: bool, enc_kv=None, return_cache=False):
+    """One block, full-sequence.  Returns (x, aux, cache|None)."""
+    mixer, has_cross, ffn = _parse(kind)
+    aux = jnp.float32(0.0)
+    cache = None
+    causal = mixer != "enc_attn"
+    if mixer in ("attn", "enc_attn", "dec_attn"):
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_ATTN,
+                             cfg.d_model, x.dtype)
+        res = layers.attention_forward(p["mixer"], x, positions,
+                                       cfg.rope_theta, causal=causal,
+                                       mask_in=m, p_drop=ctx.cfg.p,
+                                       return_kv=return_cache)
+        if return_cache:
+            res, cache = res
+        x = x + res
+    elif mixer == "mla":
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_ATTN,
+                             cfg.d_model, x.dtype)
+        res = mla.mla_forward(p["mixer"], x, positions, cfg.rope_theta,
+                              cfg.mla, m, ctx.cfg.p, return_cache=return_cache)
+        if return_cache:
+            res, cache = res
+        x = x + res
+    elif mixer == "mamba":
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_MIXER,
+                             cfg.d_model, x.dtype)
+        res = mamba2.mamba_forward(p["mixer"], x, cfg.ssm, m, ctx.cfg.p,
+                                   cfg.d_model, return_state=return_cache)
+        if return_cache:
+            res, cache = res
+        x = x + res
+    if has_cross:
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_CROSS,
+                             cfg.d_model, x.dtype)
+        ek, ev = enc_kv
+        x = x + layers.cross_attention(p["cross"], x, ek, ev, m, ctx.cfg.p)
+    if ffn == "mlp":
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_MLP,
+                             cfg.d_model, x.dtype)
+        x = x + layers.mlp_forward(p["ffn"], x, m, ctx.cfg.p)
+    elif ffn == "moe":
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_MLP,
+                             cfg.d_model, x.dtype)
+        y, a = moe.moe_forward(p["ffn"], x, cfg.moe, m, ctx.cfg.p)
+        x = x + y
+        aux = aux + a
+    x = _constrain_act(x)
+    return x, aux, cache
+
+
+def _block_decode(p, kind: str, cfg: ArchConfig, x, cache, pos,
+                  ctx: layers.Ctx, layer_id, bayes: bool, cross_kv=None):
+    """One block, single-token.  Returns (x, new_cache)."""
+    mixer, has_cross, ffn = _parse(kind)
+    if mixer in ("attn", "dec_attn"):
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_ATTN,
+                             cfg.d_model, x.dtype)
+        res, cache = layers.attention_decode(p["mixer"], x, cache, pos,
+                                             cfg.rope_theta, m, ctx.cfg.p)
+        x = x + res
+    elif mixer == "mla":
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_ATTN,
+                             cfg.d_model, x.dtype)
+        res, cache = mla.mla_decode(p["mixer"], x, cache, pos, cfg.rope_theta,
+                                    cfg.mla, m, ctx.cfg.p)
+        x = x + res
+    elif mixer == "mamba":
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_MIXER,
+                             cfg.d_model, x.dtype)
+        res, cache = mamba2.mamba_decode(p["mixer"], x, cache, cfg.ssm, m,
+                                         ctx.cfg.p, cfg.d_model)
+        x = x + res
+    if has_cross:
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_CROSS,
+                             cfg.d_model, x.dtype)
+        ek, ev = cross_kv
+        x = x + layers.cross_attention(p["cross"], x, ek, ev, m, ctx.cfg.p)
+    if ffn == "mlp":
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_MLP,
+                             cfg.d_model, x.dtype)
+        x = x + layers.mlp_forward(p["ffn"], x, m, ctx.cfg.p)
+    elif ffn == "moe":
+        m = layers.site_mask(ctx, bayes, layer_id, layers.SITE_MLP,
+                             cfg.d_model, x.dtype)
+        y, _ = moe.moe_forward(p["ffn"], x, cfg.moe, m, ctx.cfg.p)
+        x = x + y
+    return x, cache
+
+
+def _block_cache_spec(kind: str, cfg: ArchConfig, batch: int, max_len: int,
+                      enc_len: int, dtype, kv_quant: bool = False):
+    """Zero-initialized cache for one block (None for cache-free blocks)."""
+    mixer, has_cross, _ = _parse(kind)
+    cache = None
+    if mixer in ("attn", "dec_attn"):
+        if kv_quant:
+            kv = jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           jnp.int8)
+            sc = jnp.zeros((batch, max_len, cfg.num_kv_heads), jnp.bfloat16)
+            cache = (kv, sc, kv, sc)
+        else:
+            kv = jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dtype)
+            cache = (kv, kv)
+    elif mixer == "mla":
+        cache = mla.init_cache(batch, max_len, cfg.mla, dtype)
+    elif mixer == "mamba":
+        cache = mamba2.init_state(batch, cfg.d_model, cfg.ssm, dtype)
+    cross = None
+    if has_cross:
+        kv = jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+        cross = (kv, kv)
+    return cache, cross
+
+
+# --------------------------------------------------------------------------
+# Stages
+# --------------------------------------------------------------------------
+
+def init_stage(key, stage: Stage, cfg: ArchConfig, dtype):
+    """Per-position stacked params: tuple over pattern, leaves [repeat, ...]."""
+    out = []
+    for j, kind in enumerate(stage.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, j), stage.repeat)
+        out.append(jax.vmap(lambda k: init_block(k, kind, cfg, dtype))(keys))
+    return tuple(out)
+
+
+def _stage_bayes(cfg: ArchConfig, layer_offset: int, stage: Stage) -> tuple[bool, ...]:
+    return tuple(cfg.mcd.bayesian(layer_offset + j)
+                 for j in range(len(stage.pattern)))
+
+
+def run_stage_forward(stage_params, stage: Stage, cfg: ArchConfig, x,
+                      positions, ctx: layers.Ctx, layer_offset: int,
+                      enc_kv_stacked=None, collect_caches: bool = False,
+                      remat: bool = False):
+    """Scan a stage over its repeats.  Returns (x, aux, caches|None).
+
+    ``remat=True`` checkpoints each scan body (one period of layers): the
+    backward pass recomputes block internals instead of saving them —
+    activation memory drops from O(layers × intermediates) to
+    O(layers × d_model) + one period of recompute workspace.
+    """
+    period = len(stage.pattern)
+    bayes = _stage_bayes(cfg, layer_offset, stage)
+
+    def body(carry, xs):
+        x, aux = carry
+        params_slice, ekv, ridx = xs
+        caches = []
+        for j, kind in enumerate(stage.pattern):
+            layer_id = layer_offset + ridx * period + j
+            x, a, c = _block_forward(params_slice[j], kind, cfg, x, positions,
+                                     ctx, layer_id, bayes[j],
+                                     enc_kv=ekv[j] if ekv is not None else None,
+                                     return_cache=collect_caches)
+            aux = aux + a
+            caches.append(c)
+        return (x, aux), (tuple(caches) if collect_caches else 0)
+
+    if remat:
+        body = jax.checkpoint(body)
+    ridx = jnp.arange(stage.repeat, dtype=jnp.uint32)
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (stage_params, enc_kv_stacked, ridx))
+    return x, aux, (caches if collect_caches else None)
+
+
+def run_stage_decode(stage_params, stage: Stage, cfg: ArchConfig, x, caches,
+                     cross_kvs, pos, ctx: layers.Ctx, layer_offset: int):
+    period = len(stage.pattern)
+    bayes = _stage_bayes(cfg, layer_offset, stage)
+
+    def body(carry, xs):
+        x = carry
+        params_slice, cache_slice, cross_slice, ridx = xs
+        new_caches = []
+        for j, kind in enumerate(stage.pattern):
+            layer_id = layer_offset + ridx * period + j
+            x, c = _block_decode(params_slice[j], kind, cfg, x, cache_slice[j],
+                                 pos, ctx, layer_id, bayes[j],
+                                 cross_kv=cross_slice[j] if cross_slice is not None else None)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    ridx = jnp.arange(stage.repeat, dtype=jnp.uint32)
+    x, new_caches = jax.lax.scan(
+        body, x, (stage_params, caches, cross_kvs, ridx))
+    return x, new_caches
+
+
+# --------------------------------------------------------------------------
+# Model-level API
+# --------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    pos: jax.Array                  # scalar int32: next position to write
+    caches: Any                     # per-stage stacked caches
+    cross: Any                      # per-stage stacked cross K/V (or None)
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict[str, Any]:
+    keys = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": layers.init_embed(keys[0], cfg.vocab_size, cfg.d_model,
+                                   cfg.tie_embeddings, dtype),
+        "stages": [init_stage(jax.random.fold_in(keys[1], i), s, cfg, dtype)
+                   for i, s in enumerate(cfg.stages)],
+    }
+    if cfg.encoder_stages:
+        params["encoder_stages"] = [
+            init_stage(jax.random.fold_in(keys[2], i), s, cfg, dtype)
+            for i, s in enumerate(cfg.encoder_stages)]
+        params["encoder_norm"] = layers.init_rmsnorm(cfg.d_model, dtype)
+    return params
+
+
+def _encoder_forward(params, cfg: ArchConfig, frames, ctx: layers.Ctx):
+    """Whisper encoder over stub frame embeddings [B, enc_seq, D]."""
+    x = frames
+    positions = jnp.arange(frames.shape[1])
+    offset = 10_000  # encoder layers use a distinct mask-stream namespace
+    for sp, st in zip(params["encoder_stages"], cfg.encoder_stages):
+        x, _, _ = run_stage_forward(sp, st, cfg, x, positions, ctx, offset)
+        offset += st.num_layers
+    return layers.rmsnorm(params["encoder_norm"], x)
+
+
+def _stacked_cross_kv(params, cfg: ArchConfig, enc_out):
+    """Precompute per-(stage, position, repeat) cross K/V from encoder output."""
+    out = []
+    for sp, st in zip(params["stages"], cfg.stages):
+        per_pos = []
+        for j, kind in enumerate(st.pattern):
+            if "cross" in kind.split("."):
+                kv = jax.vmap(lambda p: layers.cross_kv(p, enc_out))(sp[j]["cross"])
+            else:
+                kv = None
+            per_pos.append(kv)
+        out.append(tuple(per_pos))
+    return out
+
+
+def forward(params, cfg: ArchConfig, tokens, ctx: layers.Ctx, *,
+            frames=None, patches=None, collect_caches: bool = False,
+            remat: bool = False, return_hidden: bool = False):
+    """Full-sequence forward.  Returns (logits, aux, caches)."""
+    x = layers.embed(params["embed"], tokens)
+    if patches is not None:                       # VLM: prepend patch embeds
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    enc_stacked_all = None
+    if cfg.encoder_stages:
+        enc_out = _encoder_forward(params, cfg, frames, ctx)
+        enc_stacked_all = _stacked_cross_kv(params, cfg, enc_out)
+    positions = jnp.arange(x.shape[1])
+    aux = jnp.float32(0.0)
+    offset = 0
+    all_caches = []
+    for i, (sp, st) in enumerate(zip(params["stages"], cfg.stages)):
+        ekv = enc_stacked_all[i] if enc_stacked_all is not None else None
+        x, a, caches = run_stage_forward(sp, st, cfg, x, positions, ctx, offset,
+                                         enc_kv_stacked=ekv,
+                                         collect_caches=collect_caches,
+                                         remat=remat)
+        aux = aux + a
+        offset += st.num_layers
+        all_caches.append(caches)
+    out = x if return_hidden else layers.logits(params["embed"], x)
+    if collect_caches:
+        return out, aux, (all_caches, enc_stacked_all)
+    return out, aux, None
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16, kv_quant: bool = False) -> DecodeState:
+    """Zero decode state (stacked caches per stage/pattern position)."""
+    caches, crosses = [], []
+    any_cross = False
+    for st in cfg.stages:
+        per_pos_c, per_pos_x = [], []
+        for kind in st.pattern:
+            c, cr = _block_cache_spec(kind, cfg, batch, max_len,
+                                      cfg.encoder_seq, dtype,
+                                      kv_quant=kv_quant)
+            # stack over repeats
+            per_pos_c.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (st.repeat, *a.shape)), c)
+                if c is not None else None)
+            if cr is not None:
+                any_cross = True
+                per_pos_x.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (st.repeat, *a.shape)), cr))
+            else:
+                per_pos_x.append(None)
+        caches.append(tuple(per_pos_c))
+        crosses.append(tuple(per_pos_x))
+    return DecodeState(pos=jnp.int32(0), caches=caches,
+                       cross=crosses if any_cross else None)
+
+
+def _pad_cache_to(cache, kind: str, max_len: int):
+    """Pad sequence-indexed caches ([repeat, B, S, ...]) up to max_len."""
+    mixer, _, _ = _parse(kind)
+    if cache is None:
+        return None
+    if mixer in ("attn", "dec_attn"):
+        def pad(a):
+            return jnp.pad(a, ((0, 0), (0, 0), (0, max_len - a.shape[2]),
+                               (0, 0), (0, 0)))
+        return (pad(cache[0]), pad(cache[1]))
+    if mixer == "mla":
+        def pad(a):
+            return jnp.pad(a, ((0, 0), (0, 0), (0, max_len - a.shape[2]),
+                               (0, 0)))
+        return mla.MLACache(pad(cache.c_kv), pad(cache.k_rope))
+    return cache  # mamba state: no sequence axis
+
+
+def prefill(params, cfg: ArchConfig, tokens, ctx: layers.Ctx, max_len: int, *,
+            frames=None, patches=None):
+    """Process the prompt, return (last-position logits, DecodeState).
+
+    The MCD masks drawn here (keyed by ctx.rows/seed) are the *same* masks
+    every subsequent decode_step recomputes — tied across the whole request,
+    the serving analogue of the paper's tied-across-T requirement.
+    """
+    hidden, _, (caches, crosses) = forward(params, cfg, tokens, ctx,
+                                           frames=frames, patches=patches,
+                                           collect_caches=True,
+                                           return_hidden=True)
+    lg = layers.logits(params["embed"], hidden[:, -1:])
+    padded = []
+    for st, stage_caches in zip(cfg.stages, caches):
+        per_pos = tuple(_pad_cache_to(stage_caches[j], kind, max_len)
+                        for j, kind in enumerate(st.pattern))
+        padded.append(per_pos)
+    any_cross = crosses is not None
+    seq = tokens.shape[1] + (patches.shape[1] if patches is not None else 0)
+    return lg[:, -1:], DecodeState(pos=jnp.int32(seq), caches=padded,
+                                   cross=crosses if any_cross else None)
+
+
+def decode_step(params, cfg: ArchConfig, token, state: DecodeState,
+                ctx: layers.Ctx):
+    """One decode step.  token: [B, 1] → (logits [B, 1, V], new state)."""
+    x = layers.embed(params["embed"], token)
+    offset = 0
+    new_caches = []
+    for i, (sp, st) in enumerate(zip(params["stages"], cfg.stages)):
+        cross = state.cross[i] if state.cross is not None else None
+        x, nc = run_stage_decode(sp, st, cfg, x, state.caches[i], cross,
+                                 state.pos, ctx, offset)
+        offset += st.num_layers
+        new_caches.append(nc)
+    lg = layers.logits(params["embed"], x)
+    return lg, DecodeState(pos=state.pos + 1, caches=new_caches,
+                           cross=state.cross)
+
+
+def _chunked_xent(embed_params, hidden, targets, chunk: int = 512):
+    """Cross-entropy without materializing full fp32 log-probs for backward.
+
+    Scans sequence chunks with remat: each chunk's [B, c, V] logits exist
+    only inside its (recomputed) segment — peak memory O(B·c·V), not
+    O(B·S·V).
+    """
+    B, S, D = hidden.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    hs = hidden.reshape(B, S // c, c, D).swapaxes(0, 1)
+    ts = targets.reshape(B, S // c, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def one(carry, xs):
+        h, t = xs
+        lg = layers.logits(embed_params, h).astype(jnp.float32)
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(logp, t[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(one, jnp.float32(0.0), (hs, ts))
+    return total / (B * S)
+
+
+def loss_fn(params, cfg: ArchConfig, tokens, targets, ctx: layers.Ctx, *,
+            frames=None, patches=None, remat: bool = True,
+            xent_chunk: int = 512):
+    """Next-token cross-entropy + MoE aux.  targets = tokens shifted."""
+    hidden, aux, _ = forward(params, cfg, tokens, ctx, frames=frames,
+                             patches=patches, remat=remat, return_hidden=True)
+    if patches is not None:
+        hidden = hidden[:, patches.shape[1]:]    # loss over text positions only
+    nll = _chunked_xent(params["embed"], hidden, targets, xent_chunk)
+    return nll + aux, {"nll": nll, "aux": aux}

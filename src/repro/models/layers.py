@@ -1,0 +1,387 @@
+"""Transformer building blocks with MCD hooks (GQA attention, SwiGLU, RoPE).
+
+MCD placement note: inside scanned stages the Bayesian on/off decision (B) is
+static per *pattern position* (mask presence must be layout-static under
+``lax.scan``), while mask *values* still differ per layer — the traced layer
+index is folded into the counter-RNG key.  The paper's small ECG models keep
+exact per-layer placement via ``repro.core.rnn``.
+
+Attention is blockwise (online-softmax over KV chunks) so activation memory
+stays linear in sequence length — the pure-JAX mirror of the Pallas flash
+tiling, and the form whose HLO the dry-run rooflines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcd
+from repro.core.mcd import MCDConfig
+
+# MCD site ids (folded into the RNG key as the `gate` field).
+SITE_ATTN = 0
+SITE_MLP = 1
+SITE_MIXER = 2
+SITE_CROSS = 3
+
+
+@jax.tree_util.register_pytree_node_class
+class Ctx:
+    """Per-forward MCD context: who am I (rows), which draw (seed).
+
+    ``rows``/``seed`` are traced arrays; ``cfg``/``deterministic`` are static
+    pytree aux data so a Ctx passes straight through jit boundaries.
+    """
+
+    def __init__(self, rows, seed, cfg: MCDConfig, deterministic: bool = False):
+        self.rows = rows
+        self.seed = seed
+        self.cfg = cfg
+        self.deterministic = deterministic
+
+    def tree_flatten(self):
+        return (self.rows, self.seed), (self.cfg, self.deterministic)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        rows, seed = children
+        return cls(rows, seed, aux[0], aux[1])
+
+    @staticmethod
+    def disabled(batch: int) -> "Ctx":
+        return Ctx(jnp.zeros((batch,), jnp.uint32), 0, MCDConfig(p=0.0),
+                   deterministic=True)
+
+
+def site_mask(ctx: Ctx, bayesian: bool, layer_id, site: int, n_feat: int,
+              dtype) -> jax.Array | None:
+    """[B, n_feat] keep-mask tied across sequence positions, or None."""
+    if ctx.deterministic or not bayesian or ctx.cfg.p == 0.0:
+        return None
+    return mcd.feature_mask(ctx.seed, layer_id, ctx.rows, n_feat, ctx.cfg.p,
+                            kind=mcd.KIND_FEAT, gate=site, dtype=dtype)
+
+
+def apply_site_mask(x: jax.Array, mask: jax.Array | None, p: float) -> jax.Array:
+    """x: [B, S, D]; mask [B, D] broadcasts over S (tied across positions)."""
+    if mask is None:
+        return x
+    return mcd.apply_mask(x, mask[:, None, :], p)
+
+
+# --------------------------------------------------------------------------
+# Normalization / RoPE / embeddings
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * scale.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; x: [..., S, H, hd], positions: [S] or [B, S]."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    if x.ndim == cos.ndim + 1:      # positions lacked a batch dim
+        cos, sin = cos[None], sin[None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+class AttnParams(NamedTuple):
+    wq: jax.Array   # [D, H, hd]
+    wk: jax.Array   # [D, KV, hd]
+    wv: jax.Array   # [D, KV, hd]
+    wo: jax.Array   # [H, hd, D]
+    q_scale: jax.Array | None   # qk_norm scales, [hd]
+    k_scale: jax.Array | None
+    norm: jax.Array             # pre-norm scale [D]
+
+
+def init_attn(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool, dtype) -> AttnParams:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return AttnParams(
+        wq=jax.random.normal(kq, (d_model, n_heads, head_dim), dtype) * s,
+        wk=jax.random.normal(kk, (d_model, n_kv, head_dim), dtype) * s,
+        wv=jax.random.normal(kv, (d_model, n_kv, head_dim), dtype) * s,
+        wo=jax.random.normal(ko, (n_heads, head_dim, d_model), dtype) * s,
+        q_scale=jnp.ones((head_dim,), dtype) if qk_norm else None,
+        k_scale=jnp.ones((head_dim,), dtype) if qk_norm else None,
+        norm=init_rmsnorm(d_model, dtype))
+
+
+def _qk_normalize(q, k, p: AttnParams):
+    if p.q_scale is not None:
+        q = rmsnorm(p.q_scale, q)
+        k = rmsnorm(p.k_scale, k)
+    return q, k
+
+
+import contextlib
+
+_ATTN_OVERRIDE: dict = {}
+
+
+@contextlib.contextmanager
+def attention_override(**kw):
+    """Trace-time override of attention tiling (used by roofline probes:
+    bigger blocks + unroll=True make XLA's cost analysis count every
+    iteration, since HLO while-bodies are otherwise counted once)."""
+    old = dict(_ATTN_OVERRIDE)
+    _ATTN_OVERRIDE.update(kw)
+    try:
+        yield
+    finally:
+        _ATTN_OVERRIDE.clear()
+        _ATTN_OVERRIDE.update(old)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, q_block: int = 512,
+                        kv_block: int = 1024) -> jax.Array:
+    """Online-softmax attention, linear activation memory.
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd] (GQA: H = KV · rep).
+    Scans query blocks; each query block scans KV blocks carrying the running
+    (max, denom, acc) — the jnp mirror of flash tiling.
+    """
+    q_block = _ATTN_OVERRIDE.get("q_block", q_block)
+    kv_block = _ATTN_OVERRIDE.get("kv_block", kv_block)
+    unroll = _ATTN_OVERRIDE.get("unroll", 1)
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]              # may differ from hd (MLA)
+    rep = H // KV
+
+    def fit(size, want):           # largest divisor of size ≤ want
+        b = min(want, size)
+        while size % b:
+            b -= 1
+        return b
+
+    qb = fit(Sq, q_block)
+    kb = fit(Skv, kv_block)
+    scale = hd ** -0.5
+    qr = q.reshape(B, Sq // qb, qb, KV, rep, hd)
+    kr = k.reshape(B, Skv // kb, kb, KV, hd)
+    vr = v.reshape(B, Skv // kb, kb, KV, hdv)
+
+    def q_step(_, qi_idx):
+        qi, iq = qi_idx            # qi: [B, qb, KV, rep, hd]
+        minit = jnp.full((B, KV, rep, qb), -jnp.inf, jnp.float32)
+        linit = jnp.zeros((B, KV, rep, qb), jnp.float32)
+        ainit = jnp.zeros((B, KV, rep, qb, hdv), jnp.float32)
+
+        def kv_step(carry, kv_idx):
+            m, l, acc = carry
+            kj, vj, jk = kv_idx    # kj/vj: [B, kb, KV, hd]
+            s = jnp.einsum("bqgrh,bkgh->bgrqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = iq * qb + jax.lax.broadcasted_iota(
+                    jnp.int32, (qb, kb), 0)
+                kpos = jk * kb + jax.lax.broadcasted_iota(
+                    jnp.int32, (qb, kb), 1)
+                s = jnp.where(qpos >= kpos, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgh->bgrqh", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (minit, linit, ainit),
+            (jnp.swapaxes(kr, 0, 1), jnp.swapaxes(vr, 0, 1),
+             jnp.arange(Skv // kb)), unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out           # [B, KV, rep, qb, hd]
+
+    _, outs = jax.lax.scan(
+        q_step, None,
+        (jnp.swapaxes(qr, 0, 1), jnp.arange(Sq // qb)), unroll=unroll)
+    # outs: [nq, B, KV, rep, qb, hdv] → [B, Sq, H, hdv]
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 2, 3, 1, 4, 5)
+    return out.reshape(B, KV * rep, Sq, hdv).swapaxes(1, 2).astype(q.dtype)
+
+
+def attention_forward(p: AttnParams, x: jax.Array, positions: jax.Array,
+                      theta: float, *, causal: bool,
+                      mask_in: jax.Array | None, p_drop: float,
+                      return_kv: bool = False):
+    """Full-sequence attention (train / prefill). x: [B, S, D]."""
+    h = rmsnorm(p.norm, x)
+    h = apply_site_mask(h, mask_in, p_drop)
+    q = jnp.einsum("bsd,dnh->bsnh", h, p.wq.astype(h.dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", h, p.wk.astype(h.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", h, p.wv.astype(h.dtype))
+    q, k = _qk_normalize(q, k, p)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    o = blockwise_attention(q, k, v, causal=causal)
+    out = jnp.einsum("bsnh,nhd->bsd", o, p.wo.astype(o.dtype))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _quantize_kv(kv: jax.Array):
+    """Per-(batch, token, head) symmetric int8: [B, 1, KV, hd] → (i8, scale)."""
+    scale = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1,
+                    keepdims=False) / 127.0                # [B, 1, KV]
+    q = jnp.clip(jnp.round(kv.astype(jnp.float32)
+                           / jnp.maximum(scale, 1e-8)[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def attention_decode(p: AttnParams, x: jax.Array, cache, pos: jax.Array,
+                     theta: float, mask_in: jax.Array | None, p_drop: float):
+    """Single-token decode with KV cache.
+
+    x: [B, 1, D]; cache: (k, v) with [B, Smax, KV, hd] — or the int8 form
+    (k_i8, k_scale, v_i8, v_scale) (§Perf: halves cache HBM traffic, the
+    dominant decode roofline term).  Returns (out [B, 1, D], new cache).
+    """
+    B, _, D = x.shape
+    quant = len(cache) == 4
+    h = rmsnorm(p.norm, x)
+    h = apply_site_mask(h, mask_in, p_drop)
+    q = jnp.einsum("bsd,dnh->bsnh", h, p.wq.astype(h.dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", h, p.wk.astype(h.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", h, p.wv.astype(h.dtype))
+    q, k = _qk_normalize(q, k, p)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = rope(q, posv, theta)
+    k = rope(k, posv, theta)
+
+    def upd(buf, val, axis=1):
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, val.astype(buf.dtype), pos, axis=axis)
+
+    if quant:
+        k8, ks, v8, vs = cache
+        kq, kqs = _quantize_kv(k)
+        vq, vqs = _quantize_kv(v)
+        cache = (upd(k8, kq), upd(ks, kqs), upd(v8, vq), upd(vs, vqs))
+        k_eff = cache[0].astype(jnp.bfloat16) \
+            * cache[1][..., None].astype(jnp.bfloat16)
+        v_eff = cache[2].astype(jnp.bfloat16) \
+            * cache[3][..., None].astype(jnp.bfloat16)
+    else:
+        cache = (upd(cache[0], k), upd(cache[1], v))
+        k_eff, v_eff = cache
+    KV = k_eff.shape[2]
+    rep = q.shape[2] // KV
+    qr = q.reshape(B, KV, rep, q.shape[-1])
+    s = jnp.einsum("bgrh,bkgh->bgrk", qr.astype(k_eff.dtype), k_eff,
+                   preferred_element_type=jnp.float32) * (q.shape[-1] ** -0.5)
+    valid = jnp.arange(k_eff.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrk,bkgh->bgrh", w.astype(v_eff.dtype), v_eff,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, -1, q.shape[-1]).astype(x.dtype)
+    return jnp.einsum("bsnh,nhd->bsd", o, p.wo.astype(o.dtype)), cache
+
+
+def cross_attention(p: AttnParams, x: jax.Array, enc_k: jax.Array,
+                    enc_v: jax.Array, mask_in: jax.Array | None,
+                    p_drop: float) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    h = rmsnorm(p.norm, x)
+    h = apply_site_mask(h, mask_in, p_drop)
+    q = jnp.einsum("bsd,dnh->bsnh", h, p.wq.astype(h.dtype))
+    if p.q_scale is not None:
+        q = rmsnorm(p.q_scale, q)
+    o = blockwise_attention(q, enc_k, enc_v, causal=False)
+    return jnp.einsum("bsnh,nhd->bsd", o, p.wo.astype(o.dtype))
+
+
+def cross_kv(p: AttnParams, enc_out: jax.Array):
+    k = jnp.einsum("bsd,dnh->bsnh", enc_out, p.wk.astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", enc_out, p.wv.astype(enc_out.dtype))
+    if p.k_scale is not None:
+        k = rmsnorm(p.k_scale, k)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+class MLPParams(NamedTuple):
+    wi: jax.Array   # [D, 2, dff] (gate ‖ up)
+    wo: jax.Array   # [dff, D]
+    norm: jax.Array
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> MLPParams:
+    ki, ko = jax.random.split(key)
+    return MLPParams(
+        wi=jax.random.normal(ki, (d_model, 2, d_ff), dtype) * d_model ** -0.5,
+        wo=jax.random.normal(ko, (d_ff, d_model), dtype) * d_ff ** -0.5,
+        norm=init_rmsnorm(d_model, dtype))
+
+
+def mlp_forward(p: MLPParams, x: jax.Array, mask_in: jax.Array | None,
+                p_drop: float) -> jax.Array:
+    h = rmsnorm(p.norm, x)
+    h = apply_site_mask(h, mask_in, p_drop)
+    gu = jnp.einsum("bsd,dcf->bscf", h, p.wi.astype(h.dtype),
+                    preferred_element_type=jnp.float32)
+    act = jax.nn.silu(gu[..., 0, :]) * gu[..., 1, :]
+    return jnp.einsum("bsf,fd->bsd", act.astype(h.dtype), p.wo.astype(h.dtype))
+
+
+# --------------------------------------------------------------------------
+# Embeddings / head
+# --------------------------------------------------------------------------
+
+class EmbedParams(NamedTuple):
+    table: jax.Array        # [V, D]
+    head: jax.Array | None  # [D, V] (None → tied)
+    final_norm: jax.Array
+
+
+def init_embed(key, vocab: int, d_model: int, tie: bool, dtype) -> EmbedParams:
+    ke, kh = jax.random.split(key)
+    return EmbedParams(
+        table=jax.random.normal(ke, (vocab, d_model), dtype) * 0.02,
+        head=None if tie else jax.random.normal(kh, (d_model, vocab), dtype) * d_model ** -0.5,
+        final_norm=init_rmsnorm(d_model, dtype))
+
+
+def embed(p: EmbedParams, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p.table, tokens, axis=0)
+
+
+def logits(p: EmbedParams, x: jax.Array) -> jax.Array:
+    h = rmsnorm(p.final_norm, x)
+    w = p.table.T if p.head is None else p.head
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype),
+                      preferred_element_type=jnp.float32)

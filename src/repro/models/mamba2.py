@@ -1,0 +1,224 @@
+"""Mamba2 (SSD — state-space duality) mixer, TPU-adapted.
+
+Training/prefill uses the *chunked* SSD algorithm: quadratic attention-like
+matmuls **within** a chunk (MXU-dense, [Q×Q] with Q=256) and a linear
+recurrence **across** chunks (lax.scan) — exactly the Mamba2 paper's
+block-decomposition, which is the right shape for a systolic array (big dense
+tiles, tiny sequential state hop).  Decode is the O(1)-per-token recurrent
+update on state [B, H, P, N].
+
+MCD hook: one feature mask on the block input (site=SITE_MIXER), tied across
+all sequence positions / decode steps — the SSM state recurrence is precisely
+the paper's h_{t-1} mask-tying case (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import SSMConfig
+
+
+class MambaParams(NamedTuple):
+    norm: jax.Array          # [D] pre-norm
+    in_proj: jax.Array       # [D, 2*d_inner + 2*G*N + H]
+    conv_w: jax.Array        # [conv_dim, d_conv] depthwise
+    conv_b: jax.Array        # [conv_dim]
+    a_log: jax.Array         # [H]
+    d_skip: jax.Array        # [H]
+    dt_bias: jax.Array       # [H]
+    out_norm: jax.Array      # [d_inner] gated-output RMSNorm
+    out_proj: jax.Array      # [d_inner, D]
+
+
+def dims(d_model: int, cfg: SSMConfig):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    conv_dim = d_inner + 2 * cfg.n_groups * cfg.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba(key, d_model: int, cfg: SSMConfig, dtype) -> MambaParams:
+    d_inner, n_heads, conv_dim = dims(d_model, cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_in_proj = 2 * d_inner + 2 * cfg.n_groups * cfg.d_state + n_heads
+    return MambaParams(
+        norm=layers.init_rmsnorm(d_model, dtype),
+        in_proj=jax.random.normal(k1, (d_model, d_in_proj), dtype) * d_model ** -0.5,
+        conv_w=jax.random.normal(k2, (conv_dim, cfg.d_conv), dtype) * 0.1,
+        conv_b=jnp.zeros((conv_dim,), dtype),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        d_skip=jnp.ones((n_heads,), jnp.float32),
+        dt_bias=jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, n_heads))).astype(jnp.float32),
+        out_norm=layers.init_rmsnorm(d_inner, dtype),
+        out_proj=jax.random.normal(k3, (d_inner, d_model), dtype) * d_inner ** -0.5)
+
+
+def _split_in_proj(proj: jax.Array, d_model: int, cfg: SSMConfig):
+    d_inner, n_heads, _ = dims(d_model, cfg)
+    gn = cfg.n_groups * cfg.d_state
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:2 * d_inner + 2 * gn]
+    dt = proj[..., 2 * d_inner + 2 * gn:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Causal depthwise conv via shift-and-add (d_conv taps). xbc: [B, L, C]."""
+    d_conv = w.shape[1]
+    out = xbc * w[:, -1]
+    for i in range(1, d_conv):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i or None, :][:, :xbc.shape[1], :]
+        out = out + shifted * w[:, -1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+                 cm: jax.Array, d_skip: jax.Array, chunk: int,
+                 h0: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    x: [B, L, H, P]; dt: [B, L, H] (post-softplus); a: [H] (negative);
+    bm, cm: [B, L, G, N].  Returns (y [B, L, H, P], h_final [B, H, P, N]).
+    """
+    B, L, H, P = x.shape
+    G, N = bm.shape[2], bm.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // Q
+    xc = x.reshape(B, nc, Q, H, P)
+    dtc = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    bc = bm.reshape(B, nc, Q, G, N)
+    cc = cm.reshape(B, nc, Q, G, N)
+
+    l = dtc * a[None, None, None, :]                 # log-decay per step
+    cs = jnp.cumsum(l, axis=2)                       # inclusive cumsum over Q
+    dtx = (dtc[..., None] * xc.astype(jnp.float32))  # [B,nc,Q,H,P]
+
+    # --- intra-chunk (quadratic within Q; MXU-dense) ----------------------
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))      # [B,nc,G,Q,Q]
+    cs_h = cs.transpose(0, 1, 3, 2)                  # [B,nc,H,Q]
+    decay = jnp.exp(cs_h[..., :, None] - cs_h[..., None, :])  # [B,nc,H,Q,Q]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, None], decay, 0.0)
+    dh = decay.reshape(B, nc, G, rep, Q, Q)
+    dtx_h = dtx.reshape(B, nc, Q, G, rep, P)
+    y_intra = jnp.einsum("bcgqk,bcgrqk,bckgrp->bcqgrp", scores, dh, dtx_h)
+
+    # --- chunk states ------------------------------------------------------
+    dec_end = jnp.exp(cs[..., -1:, :] - cs)          # [B,nc,Q,H]
+    dec_end_h = dec_end.reshape(B, nc, Q, G, rep)
+    s_chunk = jnp.einsum("bckgn,bckgr,bckgrp->bcgrpn", bc.astype(jnp.float32),
+                         dec_end_h, dtx_h)           # [B,nc,G,rep,P,N]
+    s_chunk = s_chunk.reshape(B, nc, H, P, N)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])           # [B,nc,H]
+
+    # --- inter-chunk recurrence (lax.scan over chunks) ---------------------
+    def step(h, inp):
+        s_c, dec_c = inp                              # [B,H,P,N], [B,H]
+        h_new = h * dec_c[..., None, None] + s_c
+        return h_new, h                               # emit state *before* chunk
+
+    h_init = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_final, h_prevs = jax.lax.scan(
+        step, h_init, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)             # [B,nc,H,P,N]
+
+    cin = jnp.exp(cs)                                 # decay-in within chunk
+    cin_h = cin.reshape(B, nc, Q, G, rep)
+    cc_h = cc.astype(jnp.float32)
+    y_inter = jnp.einsum("bcqgn,bcqgr,bcgrpn->bcqgrp", cc_h, cin_h,
+                         h_prevs.reshape(B, nc, G, rep, P, N))
+
+    y = (y_intra + y_inter).reshape(B, Lp, H, P) \
+        + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y[:, :L].astype(x.dtype), h_final
+
+
+def mamba_forward(p: MambaParams, x: jax.Array, cfg: SSMConfig,
+                  mask_in: jax.Array | None, p_drop: float,
+                  d_model: int, return_state: bool = False):
+    """Full-sequence mamba block. x: [B, L, D] → [B, L, D]."""
+    d_inner, n_heads, _ = dims(d_model, cfg)
+    h = layers.rmsnorm(p.norm, x)
+    h = layers.apply_site_mask(h, mask_in, p_drop)
+    proj = jnp.einsum("bld,de->ble", h, p.in_proj.astype(h.dtype))
+    z, xbc_raw, dt = _split_in_proj(proj, d_model, cfg)
+    xbc = _causal_conv(xbc_raw, p.conv_w.astype(xbc_raw.dtype),
+                       p.conv_b.astype(xbc_raw.dtype))
+    gn = cfg.n_groups * cfg.d_state
+    xs = xbc[..., :d_inner].reshape(*xbc.shape[:2], n_heads, cfg.head_dim)
+    bm = xbc[..., d_inner:d_inner + gn].reshape(*xbc.shape[:2], cfg.n_groups, cfg.d_state)
+    cm = xbc[..., d_inner + gn:].reshape(*xbc.shape[:2], cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)
+    a = -jnp.exp(p.a_log)
+    y, h_final = _ssd_chunked(xs, dt, a, bm, cm, p.d_skip, cfg.chunk)
+    y = y.reshape(*y.shape[:2], d_inner)
+    y = layers.rmsnorm(p.out_norm, y * jax.nn.silu(z))
+    out = jnp.einsum("ble,ed->bld", y, p.out_proj.astype(y.dtype))
+    if return_state:
+        conv_state = xbc_raw[:, -(cfg.d_conv - 1):, :]
+        return out, MambaState(ssm=h_final, conv=conv_state)
+    return out
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array    # [B, H, P, N] fp32
+    conv: jax.Array   # [B, d_conv-1, conv_dim]
+
+
+def init_state(batch: int, d_model: int, cfg: SSMConfig, dtype) -> MambaState:
+    d_inner, n_heads, conv_dim = dims(d_model, cfg)
+    return MambaState(
+        ssm=jnp.zeros((batch, n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype))
+
+
+def mamba_decode(p: MambaParams, x: jax.Array, state: MambaState,
+                 cfg: SSMConfig, mask_in: jax.Array | None, p_drop: float,
+                 d_model: int):
+    """One-token recurrent update. x: [B, 1, D] → (y [B, 1, D], state)."""
+    d_inner, n_heads, conv_dim = dims(d_model, cfg)
+    h = layers.rmsnorm(p.norm, x)
+    h = layers.apply_site_mask(h, mask_in, p_drop)
+    proj = jnp.einsum("bld,de->ble", h, p.in_proj.astype(h.dtype))
+    z, xbc, dt = _split_in_proj(proj, d_model, cfg)
+    xbc = xbc[:, 0]                                    # [B, conv_dim]
+    # conv state update
+    w = p.conv_w.astype(xbc.dtype)
+    hist = jnp.concatenate([state.conv, xbc[:, None, :]], axis=1)  # [B,d_conv,C]
+    conv_out = jnp.einsum("bwc,cw->bc", hist, w) + p.conv_b.astype(xbc.dtype)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+    gn = cfg.n_groups * cfg.d_state
+    xs = conv_out[..., :d_inner].reshape(-1, n_heads, cfg.head_dim)
+    bm = conv_out[..., d_inner:d_inner + gn].reshape(-1, cfg.n_groups, cfg.d_state)
+    cm = conv_out[..., d_inner + gn:].reshape(-1, cfg.n_groups, cfg.d_state)
+    dt_v = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p.dt_bias)  # [B,H]
+    a = -jnp.exp(p.a_log)
+    decay = jnp.exp(dt_v * a)                          # [B,H]
+    rep = n_heads // cfg.n_groups
+    bm_h = jnp.repeat(bm, rep, axis=1)                 # [B,H,N]
+    cm_h = jnp.repeat(cm, rep, axis=1)
+    upd = (dt_v[..., None] * xs.astype(jnp.float32))[..., None] \
+        * bm_h[:, :, None, :].astype(jnp.float32)      # [B,H,P,N]
+    ssm = state.ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, cm_h.astype(jnp.float32)) \
+        + p.d_skip[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = layers.rmsnorm(p.out_norm, y * jax.nn.silu(z))
+    out = jnp.einsum("ble,ed->bld", y, p.out_proj.astype(y.dtype))
+    return out, MambaState(ssm=ssm, conv=new_conv)

@@ -1,0 +1,121 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with absorbed decode.
+
+Prefill/train: expand the compressed latent c_kv into per-head K/V and run
+standard attention.  Decode: the **absorbed** form — queries are projected
+into the 512-d latent space and attention runs directly against the cached
+latents, so the KV cache per token is (kv_lora_rank + rope_dim) = 576 values
+instead of 2·H·128 = 4096 (the MLA memory win, which is what makes
+decode_32k × batch 128 fit).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import MLAConfig
+
+
+class MLAParams(NamedTuple):
+    norm: jax.Array       # [D]
+    wq: jax.Array         # [D, H, nope+rope]
+    w_dkv: jax.Array      # [D, kv_lora]
+    kv_norm: jax.Array    # [kv_lora]
+    w_krope: jax.Array    # [D, rope_dim]
+    w_uk: jax.Array       # [kv_lora, H, nope]
+    w_uv: jax.Array       # [kv_lora, H, v_dim]
+    wo: jax.Array         # [H, v_dim, D]
+
+
+def init_mla(key, d_model: int, n_heads: int, cfg: MLAConfig, dtype) -> MLAParams:
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    qdim = cfg.nope_head_dim + cfg.rope_head_dim
+    return MLAParams(
+        norm=layers.init_rmsnorm(d_model, dtype),
+        wq=jax.random.normal(ks[0], (d_model, n_heads, qdim), dtype) * s,
+        w_dkv=jax.random.normal(ks[1], (d_model, cfg.kv_lora_rank), dtype) * s,
+        kv_norm=layers.init_rmsnorm(cfg.kv_lora_rank, dtype),
+        w_krope=jax.random.normal(ks[2], (d_model, cfg.rope_head_dim), dtype) * s,
+        w_uk=jax.random.normal(ks[3], (cfg.kv_lora_rank, n_heads,
+                                       cfg.nope_head_dim), dtype) * cfg.kv_lora_rank ** -0.5,
+        w_uv=jax.random.normal(ks[4], (cfg.kv_lora_rank, n_heads,
+                                       cfg.v_head_dim), dtype) * cfg.kv_lora_rank ** -0.5,
+        wo=jax.random.normal(ks[5], (n_heads, cfg.v_head_dim, d_model), dtype) * s)
+
+
+def mla_forward(p: MLAParams, x: jax.Array, positions: jax.Array,
+                theta: float, cfg: MLAConfig, mask_in: jax.Array | None,
+                p_drop: float, return_cache: bool = False):
+    """Full-sequence MLA (train / prefill). x: [B, S, D]."""
+    h = layers.rmsnorm(p.norm, x)
+    h = layers.apply_site_mask(h, mask_in, p_drop)
+    q = jnp.einsum("bsd,dnh->bsnh", h, p.wq.astype(h.dtype))
+    q_nope = q[..., :cfg.nope_head_dim]
+    q_rope = layers.rope(q[..., cfg.nope_head_dim:], positions, theta)
+    c_kv = layers.rmsnorm(p.kv_norm,
+                          jnp.einsum("bsd,dl->bsl", h, p.w_dkv.astype(h.dtype)))
+    k_rope = layers.rope(
+        jnp.einsum("bsd,dr->bsr", h, p.w_krope.astype(h.dtype))[:, :, None, :],
+        positions, theta)[:, :, 0, :]
+    k_nope = jnp.einsum("bsl,lnh->bsnh", c_kv, p.w_uk.astype(h.dtype))
+    v = jnp.einsum("bsl,lnv->bsnv", c_kv, p.w_uv.astype(h.dtype))
+    H = q.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_rope.shape[:2], H, cfg.rope_head_dim))], -1)
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    o = layers.blockwise_attention(qf, k, v, causal=True)
+    out = jnp.einsum("bsnv,nvd->bsd", o, p.wo.astype(o.dtype))
+    if return_cache:
+        return out, MLACache(c_kv=c_kv, k_rope=k_rope)
+    return out
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array     # [B, Smax, kv_lora]
+    k_rope: jax.Array   # [B, Smax, rope_dim]
+
+
+def init_cache(batch: int, max_len: int, cfg: MLAConfig, dtype) -> MLACache:
+    return MLACache(jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                    jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype))
+
+
+def mla_decode(p: MLAParams, x: jax.Array, cache: MLACache, pos: jax.Array,
+               theta: float, cfg: MLAConfig, mask_in: jax.Array | None,
+               p_drop: float):
+    """Absorbed single-token decode. x: [B, 1, D]."""
+    B = x.shape[0]
+    h = layers.rmsnorm(p.norm, x)
+    h = layers.apply_site_mask(h, mask_in, p_drop)
+    q = jnp.einsum("bsd,dnh->bsnh", h, p.wq.astype(h.dtype))[:, 0]   # [B,H,qdim]
+    q_nope, q_rope = q[..., :cfg.nope_head_dim], q[..., cfg.nope_head_dim:]
+    posv = jnp.full((1,), pos, jnp.int32)
+    q_rope = layers.rope(q_rope[:, None], posv, theta)[:, 0]
+    c_kv_new = layers.rmsnorm(
+        p.kv_norm, jnp.einsum("bsd,dl->bsl", h, p.w_dkv.astype(h.dtype)))
+    k_rope_new = layers.rope(
+        jnp.einsum("bsd,dr->bsr", h, p.w_krope.astype(h.dtype))[:, :, None, :],
+        posv, theta)[:, :, 0, :]
+    cache = MLACache(
+        jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_kv_new.astype(cache.c_kv.dtype), pos, 1),
+        jax.lax.dynamic_update_slice_in_dim(cache.k_rope, k_rope_new.astype(cache.k_rope.dtype), pos, 1))
+    # Absorb W_uk into the query: attention runs in latent space.
+    q_lat = jnp.einsum("bnh,lnh->bnl", q_nope, p.w_uk.astype(q.dtype))  # [B,H,L]
+    scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+    s = (jnp.einsum("bnl,btl->bnt", q_lat, cache.c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bnr,btr->bnt", q_rope, cache.k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(cache.c_kv.shape[1]) <= pos
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bnt,btl->bnl", w.astype(cache.c_kv.dtype), cache.c_kv,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    o = jnp.einsum("bnl,lnv->bnv", ctx_lat, p.w_uv.astype(x.dtype))
+    out = jnp.einsum("bnv,nvd->bd", o, p.wo.astype(x.dtype))[:, None, :]
+    return out, cache

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN: sort-based dispatch with static capacity.
+
+Design constraints (pod-scale):
+  * **Linear FLOPs** — no GShard one-hot dispatch einsum (quadratic in local
+    tokens).  Tokens are argsorted by expert id; per-expert slots are computed
+    from exclusive-cumsum offsets; expert compute is a dense batched einsum
+    over [E, C, D] with static capacity C — MXU-friendly, static-shaped,
+    GSPMD/EP-shardable (expert axis sharded over "model"/"expert" mesh axes).
+  * **Capacity dropping** — tokens beyond C per expert are dropped (standard);
+    combine weights renormalized over surviving routes.
+  * **Deterministic router under MCD** — the router sees the *unmasked*
+    activations; only the expert inputs are masked.  Routing noise would
+    conflate with epistemic uncertainty (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.config import MoEConfig
+
+# Trace-time sharding override (§Perf hillclimb): without explicit
+# constraints GSPMD replicates the dispatch buffers and the expert einsum
+# runs with *global* capacity per device (~dp× flop bloat).  Constraining
+# x_exp/y_exp to (expert→tp, capacity→dp) shards both axes.
+_MOE_OVERRIDE: dict = {}
+
+
+@contextlib.contextmanager
+def moe_sharding(expert_axis=None, token_axes=None, groups: int = 1):
+    """groups > 1 → group-local dispatch: tokens are routed within each of
+    ``groups`` shards (aligned with the DP axes), so dispatch never moves
+    tokens across data shards — only the expert-axis all-to-all remains
+    (per-group capacity, standard in EP systems)."""
+    old = dict(_MOE_OVERRIDE)
+    _MOE_OVERRIDE.update(expert_axis=expert_axis, token_axes=token_axes,
+                         groups=groups)
+    try:
+        yield
+    finally:
+        _MOE_OVERRIDE.clear()
+        _MOE_OVERRIDE.update(old)
+
+
+def _constrain(x, spec):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):   # no mesh in context (unit tests)
+        return x
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array        # [D, E]
+    wi: jax.Array            # [E, D, 2, dffe]
+    wo: jax.Array            # [E, dffe, D]
+    shared: layers.MLPParams | None
+    norm: jax.Array
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype) -> MoEParams:
+    kr, ki, ko, ks = jax.random.split(key, 4)
+    e, dffe = cfg.num_experts, cfg.d_ff_expert
+    shared = None
+    if cfg.num_shared:
+        shared = layers.init_mlp(ks, d_model, cfg.num_shared * dffe, dtype)
+    return MoEParams(
+        router=jax.random.normal(kr, (d_model, e), jnp.float32) * d_model ** -0.5,
+        wi=jax.random.normal(ki, (e, d_model, 2, dffe), dtype) * d_model ** -0.5,
+        wo=jax.random.normal(ko, (e, dffe, d_model), dtype) * dffe ** -0.5,
+        shared=shared,
+        norm=layers.init_rmsnorm(d_model, dtype))
+
+
+def capacity(num_tokens: int, cfg: MoEConfig) -> int:
+    c = math.ceil(num_tokens * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)   # round up to a multiple of 8 (lane-friendly)
+
+
+def _dispatch(flat, flat_router, router_w, cfg: MoEConfig, C: int):
+    """Route one token group: returns (x_exp [E,C,D], slot_token,
+    slot_weight, counts, probs).  Pure function — vmapped over groups."""
+    T, D = flat.shape
+    E, K = cfg.num_experts, cfg.top_k
+    logits = jnp.einsum("td,de->te", flat_router.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)       # renormalize top-k
+
+    # ---- sort-based dispatch --------------------------------------------
+    eids = gate_idx.reshape(-1)                            # [T·K]
+    tids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)   # [T·K]
+    wvals = gate_vals.reshape(-1)
+    order = jnp.argsort(eids)                              # stable in jnp
+    eids_s, tids_s, w_s = eids[order], tids[order], wvals[order]
+    counts = jnp.bincount(eids, length=E)                  # [E]
+    starts = jnp.cumsum(counts) - counts                   # exclusive cumsum
+    pos_in_e = jnp.arange(T * K, dtype=jnp.int32) - starts[eids_s]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, eids_s * C + pos_in_e, E * C)   # overflow → waste slot
+
+    # slot → token map (+1 sentinel row of zeros for dropped slots)
+    slot_token = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(
+        jnp.where(keep, tids_s, T))[:E * C]
+    slot_weight = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, w_s, 0.0))[:E * C]
+    x_pad = jnp.concatenate([flat, jnp.zeros((1, D), flat.dtype)], 0)
+    x_exp = x_pad[slot_token].reshape(E, C, D)
+    return x_exp, slot_token, slot_weight, counts, probs
+
+
+def moe_forward(p: MoEParams, x: jax.Array, cfg: MoEConfig,
+                mask_in: jax.Array | None, p_drop: float):
+    """x: [B, S, D] → (y [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    h = layers.rmsnorm(p.norm, x)
+    hm = layers.apply_site_mask(h, mask_in, p_drop)
+    T = B * S
+    E, K = cfg.num_experts, cfg.top_k
+    ea = _MOE_OVERRIDE.get("expert_axis")
+    ta = _MOE_OVERRIDE.get("token_axes")
+    G = _MOE_OVERRIDE.get("groups", 1) or 1
+    if T % G:
+        G = 1
+    Tg = T // G
+    C = capacity(Tg, cfg)
+
+    flat = hm.reshape(G, Tg, D)
+    flat_router = h.reshape(G, Tg, D)           # router: unmasked, fp32
+    if G > 1:
+        flat = _constrain(flat, P(ta, None, None))
+        flat_router = _constrain(flat_router, P(ta, None, None))
+    x_exp, slot_token, slot_weight, counts, probs = jax.vmap(
+        lambda f, fr: _dispatch(f, fr, p.router, cfg, C))(flat, flat_router)
+
+    # ---- expert compute (dense, static, EP-shardable over E) ------------
+    if ea or ta:
+        x_exp = _constrain(x_exp, P(ta if G > 1 else None, ea,
+                                    None if G > 1 else ta, None))
+    gu = jnp.einsum("gecd,edhf->gechf", x_exp, p.wi.astype(x_exp.dtype),
+                    preferred_element_type=jnp.float32)
+    act = jax.nn.silu(gu[..., 0, :]) * gu[..., 1, :]
+    y_exp = jnp.einsum("gecf,efd->gecd", act.astype(x_exp.dtype),
+                       p.wo.astype(x_exp.dtype))
+    if ea or ta:
+        y_exp = _constrain(y_exp, P(ta if G > 1 else None, ea,
+                                    None if G > 1 else ta, None))
+
+    # ---- combine (scatter-add per group) ---------------------------------
+    def combine(y_e, st, sw):
+        return jnp.zeros((Tg + 1, D), jnp.float32).at[st].add(
+            y_e.reshape(E * C, D).astype(jnp.float32) * sw[:, None])[:Tg]
+
+    y_flat = jax.vmap(combine)(y_exp, slot_token, slot_weight)
+    if G > 1:
+        y_flat = _constrain(y_flat, P(ta, None, None))
+    y = y_flat.reshape(B, S, D).astype(x.dtype)
+
+    if p.shared is not None:
+        y = y + layers.mlp_forward(p.shared, x, mask_in, p_drop)
+
+    # Switch-style load-balance aux loss (global over groups).
+    f = jnp.sum(counts, 0).astype(jnp.float32) / jnp.maximum(T * K, 1)
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(f * pmean)
+    return y, aux

@@ -1,0 +1,95 @@
+"""Uncertainty-aware batched serving — the paper's raison d'être, at LM scale.
+
+A Bayesian request is served as S MC chains folded into the batch axis
+(`repro.core.bayesian` semantics): one weight fetch feeds all S chains, and
+every chain recomputes its own tied mask at each decode step from the counter
+RNG — the serving state carries only (seed, row ids), not masks (the paper's
+SIPO/FIFO buffer, for free).
+
+At each step the S chains' logits are aggregated into the Bayesian
+predictive distribution; the *mean* distribution picks the next token
+(greedy/temperature), the same token is fed back to every chain, and the
+per-token uncertainty decomposition (predictive entropy / expected entropy /
+mutual information) is emitted alongside — the LM analogue of the paper's
+Fig. 1 shaded band.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mcd
+from repro.core.uncertainty import classification_summary
+from repro.models import backbone
+from repro.models.config import ArchConfig
+from repro.models.layers import Ctx
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: Any                 # [B, n_new]
+    predictive_entropy: Any     # [B, n_new]  total uncertainty (nats)
+    mutual_information: Any     # [B, n_new]  epistemic part
+    mean_probs_last: Any        # [B, vocab]
+
+
+class BayesianEngine:
+    """Static-batch S-sample serving engine for any zoo architecture."""
+
+    def __init__(self, params, cfg: ArchConfig, *, max_len: int = 512,
+                 seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.seed = seed
+        self._decode = jax.jit(
+            lambda p, t, s, ctx: backbone.decode_step(p, cfg, t, s, ctx))
+        self._prefill = jax.jit(
+            lambda p, t, ctx, **kw: backbone.prefill(p, cfg, t, ctx,
+                                                     max_len, **kw),
+            static_argnames=())
+
+    def _ctx(self, batch: int, s: int) -> Ctx:
+        rows = mcd.sample_rows(batch, s)
+        return Ctx(rows=rows, seed=self.seed, cfg=self.cfg.mcd,
+                   deterministic=not self.cfg.mcd.any_bayesian)
+
+    def generate(self, prompts: jax.Array, n_new: int, *,
+                 frames=None, patches=None) -> GenerationResult:
+        """prompts: [B, S] → greedy decode n_new tokens with uncertainty."""
+        cfg = self.cfg
+        B = prompts.shape[0]
+        s = max(1, cfg.mcd.n_samples if cfg.mcd.any_bayesian else 1)
+        ctx = self._ctx(B, s)
+        tiled = jnp.broadcast_to(prompts[None], (s, *prompts.shape)).reshape(
+            s * B, -1)
+        kw = {}
+        if frames is not None:
+            kw["frames"] = jnp.broadcast_to(
+                frames[None], (s, *frames.shape)).reshape(s * B, *frames.shape[1:])
+        if patches is not None:
+            kw["patches"] = jnp.broadcast_to(
+                patches[None], (s, *patches.shape)).reshape(s * B, *patches.shape[1:])
+        logits, state = self._prefill(self.params, tiled, ctx, **kw)
+
+        toks, ents, mis = [], [], []
+        probs = None
+        for _ in range(n_new):
+            summ = classification_summary(
+                logits[:, 0].reshape(s, B, -1).astype(jnp.float32))
+            probs = summ.probs
+            next_tok = jnp.argmax(summ.probs, axis=-1).astype(prompts.dtype)
+            toks.append(next_tok)
+            ents.append(summ.predictive_entropy)
+            mis.append(summ.mutual_information)
+            fed = jnp.broadcast_to(next_tok[None], (s, B)).reshape(s * B, 1)
+            logits, state = self._decode(self.params, fed, state, ctx)
+        return GenerationResult(
+            tokens=jnp.stack(toks, axis=1),
+            predictive_entropy=jnp.stack(ents, axis=1),
+            mutual_information=jnp.stack(mis, axis=1),
+            mean_probs_last=probs)

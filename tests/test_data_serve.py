@@ -1,0 +1,79 @@
+"""Data pipeline determinism + serving engine behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import ecg
+from repro.models import backbone
+from repro.serve.engine import BayesianEngine
+
+
+class TestEcgData:
+    def test_shapes_and_split(self):
+        tx, ty, ex, ey = ecg.make_ecg5000(0)
+        assert tx.shape == (500, 140, 1) and ex.shape == (4500, 140, 1)
+        assert set(np.unique(ty)) <= {0, 1, 2, 3}
+
+    def test_normalization(self):
+        tx, *_ = ecg.make_ecg5000(0)
+        np.testing.assert_allclose(tx.mean(axis=1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(tx.std(axis=1), 1.0, atol=1e-3)
+
+    def test_deterministic(self):
+        a = ecg.make_ecg5000(7)[0]
+        b = ecg.make_ecg5000(7)[0]
+        np.testing.assert_array_equal(a, b)
+
+    def test_pipeline_epoch_deterministic(self):
+        tx, ty, *_ = ecg.make_ecg5000(0)
+        p = ecg.Pipeline(tx, ty, batch_size=32, seed=1)
+        a = next(iter(p.epoch(3)))[0]
+        b = next(iter(p.epoch(3)))[0]
+        np.testing.assert_array_equal(a, b)
+        c = next(iter(p.epoch(4)))[0]
+        assert not np.array_equal(a, c)
+
+    def test_class_morphologies_distinct(self):
+        tx, ty, *_ = ecg.make_ecg5000(0)
+        mean0 = tx[ty == 0].mean(0)[:, 0]
+        mean1 = tx[ty == 1].mean(0)[:, 0]
+        assert np.abs(mean0 - mean1).max() > 0.5
+
+
+class TestServingEngine:
+    def test_uncertainty_outputs(self):
+        cfg = get_config("qwen3-1.7b", reduced=True)
+        params = backbone.init_params(jax.random.key(0), cfg, jnp.float32)
+        eng = BayesianEngine(params, cfg, max_len=24)
+        res = eng.generate(jnp.ones((2, 6), jnp.int32), 4)
+        assert res.tokens.shape == (2, 4)
+        ent = np.asarray(res.predictive_entropy)
+        mi = np.asarray(res.mutual_information)
+        assert (ent >= -1e-5).all() and (ent <= np.log(cfg.vocab_size) + 1e-4).all()
+        assert (mi >= -1e-4).all()
+        assert (mi <= ent + 1e-4).all()      # epistemic ≤ total
+
+    def test_masks_tied_across_decode_steps(self):
+        """Same engine+seed → identical generation (stateless mask recompute)."""
+        cfg = get_config("qwen3-1.7b", reduced=True)
+        params = backbone.init_params(jax.random.key(0), cfg, jnp.float32)
+        a = BayesianEngine(params, cfg, max_len=24, seed=5).generate(
+            jnp.ones((1, 6), jnp.int32), 4)
+        b = BayesianEngine(params, cfg, max_len=24, seed=5).generate(
+            jnp.ones((1, 6), jnp.int32), 4)
+        np.testing.assert_array_equal(np.asarray(a.tokens),
+                                      np.asarray(b.tokens))
+        np.testing.assert_allclose(np.asarray(a.predictive_entropy),
+                                   np.asarray(b.predictive_entropy),
+                                   rtol=1e-6)
+
+    def test_pointwise_engine_zero_mi(self):
+        cfg = get_config("qwen3-1.7b", reduced=True)
+        cfg = cfg.replace(mcd=cfg.mcd.replace(placement="N"))
+        params = backbone.init_params(jax.random.key(0), cfg, jnp.float32)
+        res = BayesianEngine(params, cfg, max_len=24).generate(
+            jnp.ones((1, 6), jnp.int32), 3)
+        np.testing.assert_allclose(np.asarray(res.mutual_information), 0.0,
+                                   atol=1e-6)

@@ -1,0 +1,113 @@
+"""Co-design framework: resource/latency models + optimization modes."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.dse import fpga_model as fm
+from repro.dse import search, tpu_model
+from repro.models.config import SHAPES
+
+
+AE = fm.RNNArch(hidden=16, num_layers=2, placement="YNYN",
+                kind="autoencoder", output_dim=1)
+CLF = fm.RNNArch(hidden=8, num_layers=3, placement="YNY", kind="classifier")
+
+
+class TestFpgaModels:
+    def test_latency_matches_paper_estimates(self):
+        """§V-C: 42.25 ms (AE) and 25.77 ms (classifier) at batch 50, S=30."""
+        lat_ae = fm.latency_s(AE, fm.HwConfig(16, 5, 16), batch=50,
+                              n_samples=30) * 1e3
+        lat_clf = fm.latency_s(CLF, fm.HwConfig(12, 1, 1), batch=50,
+                               n_samples=30) * 1e3
+        assert abs(lat_ae - 42.25) / 42.25 < 0.03
+        assert abs(lat_clf - 25.77) / 25.77 < 0.03
+
+    def test_dsp_formula_structure(self):
+        """Higher reuse → fewer DSPs (the paper's parallelism trade-off)."""
+        lo = fm.dsp_usage(CLF, fm.HwConfig(1, 1, 1))
+        hi = fm.dsp_usage(CLF, fm.HwConfig(16, 16, 16))
+        assert hi < lo
+        assert fm.dsp_usage(CLF, fm.HwConfig(12, 1, 1)) == pytest.approx(
+            941.3, abs=0.5)   # paper's estimate 915; see bench notes
+
+    @given(rx=st.integers(1, 32), rh=st.integers(1, 32))
+    @settings(max_examples=20, deadline=None)
+    def test_latency_monotone_in_reuse(self, rx, rh):
+        base = fm.latency_s(CLF, fm.HwConfig(rx, rh, 1))
+        worse = fm.latency_s(CLF, fm.HwConfig(rx + 1, rh, 1))
+        assert worse >= base
+
+    def test_best_reuse_fits(self):
+        hw = fm.best_reuse_factors(CLF)
+        assert hw is not None and fm.fits(CLF, hw)
+
+
+class TestSearch:
+    def _table(self):
+        return [
+            search.Candidate(
+                arch=fm.RNNArch(8, 1, "N"), n_samples=1,
+                metrics={"accuracy": 0.90, "ap": 0.62, "ar": 0.66,
+                         "entropy": 0.15}),
+            search.Candidate(
+                arch=fm.RNNArch(8, 3, "YNY"),
+                metrics={"accuracy": 0.92, "ap": 0.69, "ar": 0.64,
+                         "entropy": 0.30}),
+            search.Candidate(
+                arch=fm.RNNArch(8, 3, "YNN"),
+                metrics={"accuracy": 0.89, "ap": 0.59, "ar": 0.64,
+                         "entropy": 0.60}),
+        ]
+
+    def test_modes_pick_per_priority(self):
+        table = self._table()
+        assert search.optimize(table, "Opt-Accuracy").arch.placement == "YNY"
+        assert search.optimize(table, "Opt-Entropy").arch.placement == "YNN"
+        lat = search.optimize(table, "Opt-Latency")
+        assert lat.arch.num_layers == 1     # paper: latency trades depth away
+
+    def test_requirements_filter(self):
+        got = search.optimize(self._table(), "Opt-Latency",
+                              requirements={"accuracy": 0.91})
+        assert got.arch.placement == "YNY"
+
+    def test_infeasible_returns_none(self):
+        huge = [search.Candidate(arch=fm.RNNArch(2048, 3, "Y"), metrics={})]
+        assert search.optimize(huge, "Opt-Latency") is None
+
+    def test_pareto_front_nonempty(self):
+        front = search.pareto_front(self._table(), "entropy", "accuracy")
+        assert front
+
+
+class TestTpuModel:
+    def test_memory_decreases_with_chips(self):
+        cfg = get_config("llama3-8b")
+        cell = SHAPES["train_4k"]
+        m256 = tpu_model.memory_model(cfg, cell,
+                                      tpu_model.TpuHwConfig(data=16, model=16))
+        m512 = tpu_model.memory_model(
+            cfg, cell, tpu_model.TpuHwConfig(data=16, model=16, pod=2))
+        assert m512 < m256
+
+    def test_search_feasible_configs_exist(self):
+        cfg = get_config("qwen3-1.7b")
+        out = tpu_model.search_hw(cfg, SHAPES["train_4k"])
+        assert out and out[0]["feasible"]
+        assert out[0]["t_step"] <= out[-1]["t_step"] or not out[-1]["feasible"]
+
+    def test_jamba_train_needs_more_than_one_pod(self):
+        """398B AdamW does not fit 256 × 16 GB — the multi-pod motivation."""
+        cfg = get_config("jamba-1.5-large-398b")
+        out = tpu_model.search_hw(cfg, SHAPES["train_4k"], chips=256)
+        assert not any(r["feasible"] for r in out)
+        out2 = tpu_model.search_hw(cfg, SHAPES["train_4k"], chips=256, pod=2)
+        assert any(r["feasible"] for r in out2)
+
+    def test_decode_is_memory_or_collective_bound(self):
+        cfg = get_config("llama3-8b")
+        r = tpu_model.step_model(cfg, SHAPES["decode_32k"],
+                                 tpu_model.TpuHwConfig())
+        assert max(r["t_memory"], r["t_collective"]) > r["t_compute"]

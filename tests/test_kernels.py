@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cells, mcd
+from repro.kernels import bernoulli_mask, mcd_lstm, mcd_matmul, ops, ref
+
+KEY = mcd.mask_key(7, 3, mcd.KIND_FEAT, 1)
+
+
+class TestBernoulliMaskKernel:
+    @pytest.mark.parametrize("shape,blocks", [
+        ((32, 128), (32, 128)),
+        ((64, 256), (16, 64)),
+        ((128, 512), (32, 128)),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("p", [0.125, 0.5])
+    def test_matches_ref_exactly(self, shape, blocks, dtype, p):
+        rows = jnp.arange(shape[0], dtype=jnp.uint32) + 17
+        x = jax.random.normal(jax.random.key(0), shape, dtype)
+        out = bernoulli_mask.masked_activation(
+            x, rows, KEY, p, block_b=blocks[0], block_f=blocks[1])
+        expect = ref.masked_activation(x, rows, KEY, p)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+    def test_tiling_invariance(self):
+        """Same bits regardless of block decomposition (counter-PRNG law)."""
+        rows = jnp.arange(64, dtype=jnp.uint32)
+        x = jnp.ones((64, 256), jnp.float32)
+        a = bernoulli_mask.masked_activation(x, rows, KEY, 0.25,
+                                             block_b=64, block_f=256)
+        b = bernoulli_mask.masked_activation(x, rows, KEY, 0.25,
+                                             block_b=16, block_f=64)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestMcdMatmulKernel:
+    @pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+        (32, 64, 32, 32, 64, 32),
+        (64, 256, 128, 32, 64, 64),
+        (128, 128, 256, 64, 128, 128),
+    ])
+    @pytest.mark.parametrize("p", [0.0, 0.125])
+    def test_matches_ref(self, m, k, n, bm, bk, bn, p):
+        rows = jnp.arange(m, dtype=jnp.uint32)
+        x = jax.random.normal(jax.random.key(1), (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.key(2), (k, n), jnp.float32)
+        out = mcd_matmul.mcd_matmul(x, w, rows, KEY, p, block_m=bm,
+                                    block_n=bn, block_k=bk)
+        expect = ref.mcd_matmul(x, w, rows, KEY, p)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self):
+        rows = jnp.arange(32, dtype=jnp.uint32)
+        x = jax.random.normal(jax.random.key(1), (32, 64), jnp.bfloat16)
+        w = jax.random.normal(jax.random.key(2), (64, 32), jnp.bfloat16)
+        out = mcd_matmul.mcd_matmul(x, w, rows, KEY, 0.125,
+                                    block_m=32, block_n=32, block_k=64)
+        expect = ref.mcd_matmul(x, w, rows, KEY, 0.125)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+class TestMcdLstmKernel:
+    @pytest.mark.parametrize("b,i,h,bb,bh", [
+        (8, 32, 32, 8, 32),
+        (16, 96, 64, 8, 32),
+        (32, 64, 128, 16, 64),
+    ])
+    @pytest.mark.parametrize("p", [0.0, 0.125, 0.5])
+    def test_matches_ref(self, b, i, h, bb, bh, p):
+        ks = jax.random.split(jax.random.key(0), 6)
+        x = jax.random.normal(ks[0], (b, i))
+        hh = jax.random.normal(ks[1], (b, h))
+        c = jax.random.normal(ks[2], (b, h))
+        wx = jax.random.normal(ks[3], (i, 4, h)) * 0.1
+        wh = jax.random.normal(ks[4], (h, 4, h)) * 0.1
+        bias = jax.random.normal(ks[5], (4, h)) * 0.1
+        rows = jnp.arange(b, dtype=jnp.uint32)
+        keys = mcd_lstm.gate_keys(11, 2)
+        hk, ck = mcd_lstm.mcd_lstm_step(x, hh, c, wx, wh, bias, rows, keys, p,
+                                        block_b=bb, block_h=bh)
+        hr, cr = ref.mcd_lstm_step(x, hh, c, wx, wh, bias, rows, keys, p)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ck), np.asarray(cr),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_fused_layer_equals_core_path(self):
+        """Kernel scan over T == repro.core cells path, mask streams and all."""
+        B, T, I, H = 8, 6, 48, 32
+        ks = jax.random.split(jax.random.key(1), 4)
+        wx = jax.random.normal(ks[0], (I, 4, H)) * 0.1
+        wh = jax.random.normal(ks[1], (H, 4, H)) * 0.1
+        bias = jnp.zeros((4, H))
+        x_seq = jax.random.normal(ks[2], (B, T, I))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        _, (hT, _) = ops.fused_lstm_layer(wx, wh, bias, x_seq, rows, 11, 2,
+                                          0.125)
+        zx, zh = mcd.lstm_gate_masks(11, 2, rows, I, H, 0.125)
+        params = cells.LSTMParams(wx=jnp.moveaxis(wx, 1, 0),
+                                  wh=jnp.moveaxis(wh, 1, 0), b=bias)
+        h = jnp.zeros((B, H))
+        c = jnp.zeros((B, H))
+        for t in range(T):
+            h, c = cells.lstm_step(params, h, c, x_seq[:, t], zx, zh, 0.125)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(h),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@given(p=st.sampled_from([0.1, 0.25, 0.5]), seed=st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_kernel_mask_rate_property(p, seed):
+    """Kernel-generated masks hit the Bernoulli keep rate."""
+    rows = jnp.arange(128, dtype=jnp.uint32)
+    key = mcd.mask_key(seed, 0, mcd.KIND_FEAT, 0)
+    x = jnp.ones((128, 512), jnp.float32)
+    out = bernoulli_mask.masked_activation(x, rows, key, p)
+    keep = float((np.asarray(out) != 0).mean())
+    assert abs(keep - (1.0 - p)) < 0.03

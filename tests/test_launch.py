@@ -1,0 +1,129 @@
+"""Launch-layer machinery: job construction, analysis parsing, param
+accounting — everything that the 512-device dry-run relies on, exercised on
+the 1-device host mesh with reduced configs so it runs in CI."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import analysis, mesh as mesh_lib, specs
+from repro.models import backbone
+from repro.models.config import SHAPES
+
+
+class TestCollectiveParser:
+    HLO = """
+  %ag = bf16[2048,512]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[16,128]{1,0} all-reduce-start(%y), to_apply=%add
+  %rs = bf16[64,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = f32[8,8]{1,0} all-to-all(%w), dimensions={1}
+  %cp = bf16[4,4]{1,0} collective-permute(%v), source_target_pairs={{0,1}}
+"""
+
+    def test_kinds_and_bytes(self):
+        got = analysis.collective_bytes(self.HLO)
+        assert got["all-gather"] == 2048 * 512 * 2
+        assert got["all-reduce"] == 16 * 128 * 4
+        assert got["reduce-scatter"] == 64 * 64 * 2
+        assert got["all-to-all"] == 8 * 8 * 4
+        assert got["collective-permute"] == 4 * 4 * 2
+
+    def test_allreduce_counts_double(self):
+        r = analysis.Roofline(flops=0, bytes_hbm=0, bytes_collective=0,
+                              coll_by_kind={}, t_compute=0, t_memory=0,
+                              t_collective=0, bottleneck="memory",
+                              memory_per_device={})
+        # factor table: all-reduce weighted 2×
+        assert analysis._FACTORS["all-reduce"] == 2.0
+
+
+class TestActiveParams:
+    @pytest.mark.parametrize("arch", ["deepseek-7b", "llama3-8b",
+                                      "qwen3-1.7b", "mamba2-370m"])
+    def test_analytic_matches_actual_dense(self, arch):
+        """For non-MoE archs, analytic active_params == real leaf count."""
+        cfg = get_config(arch, reduced=True)
+        shapes = jax.eval_shape(
+            functools.partial(backbone.init_params, cfg=cfg,
+                              dtype=jnp.float32), jax.random.key(0))
+        actual = sum(np.prod(s.shape) for s in
+                     jax.tree_util.tree_leaves(shapes))
+        analytic = analysis.active_params(cfg)
+        # norms/scales are not counted analytically (≤1 % of params)
+        assert abs(actual - analytic) / actual < 0.05, (actual, analytic)
+
+    def test_moe_active_below_total(self):
+        cfg = get_config("olmoe-1b-7b")
+        shapes = jax.eval_shape(
+            functools.partial(backbone.init_params, cfg=cfg,
+                              dtype=jnp.bfloat16), jax.random.key(0))
+        total = sum(np.prod(s.shape) for s in
+                    jax.tree_util.tree_leaves(shapes))
+        active = analysis.active_params(cfg)
+        assert active < 0.4 * total      # 8 of 64 experts active
+
+    def test_llama3_param_count_published(self):
+        """Full llama3-8b config must land at ~8.0B parameters."""
+        n = analysis.active_params(get_config("llama3-8b"))
+        assert 7.5e9 < n < 8.5e9, n
+
+
+class TestJobsOnHostMesh:
+    def _mesh(self):
+        return mesh_lib.make_host_mesh()
+
+    @pytest.mark.parametrize("kind", ["train_4k", "prefill_32k", "decode_32k"])
+    def test_job_specs_build_for_all_archs(self, kind):
+        """Job construction (eval_shape + shardings) for every full config —
+        no allocation, catches spec/pytree mismatches early."""
+        mesh = self._mesh()
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            job = specs.make_job(cfg, kind, mesh)
+            assert job is not None
+            flat_args = jax.tree_util.tree_leaves(job.args)
+            assert all(hasattr(a, "shape") for a in flat_args)
+
+    def test_reduced_train_step_compiles_and_runs(self):
+        """A reduced-config train job actually executes on the host mesh."""
+        mesh = self._mesh()
+        cfg = get_config("qwen3-1.7b", reduced=True)
+        # shrink the cell for CPU: patch a tiny shape through train_job path
+        from repro.launch.specs import train_job
+        import repro.models.config as mc
+        tiny = mc.ShapeCell("tiny", 16, 4, "train")
+        old = dict(mc.SHAPES)
+        mc.SHAPES["tiny"] = tiny
+        try:
+            job = train_job(cfg, "tiny", mesh)
+            with jax.set_mesh(mesh):
+                compiled = jax.jit(job.fn, in_shardings=job.in_shardings,
+                                   out_shardings=job.out_shardings
+                                   ).lower(*job.args).compile()
+            # run it with real (tiny) inputs
+            params = backbone.init_params(jax.random.key(0), cfg,
+                                          jnp.bfloat16)
+            from repro.train import optimizer
+            opt = optimizer.init(params)
+            batch = {"tokens": jnp.zeros((4, 16), jnp.int32),
+                     "targets": jnp.zeros((4, 16), jnp.int32)}
+            with jax.set_mesh(mesh):
+                p2, o2, metrics = compiled(params, opt, batch,
+                                           jnp.zeros((), jnp.int32))
+            assert np.isfinite(float(metrics["loss"]))
+        finally:
+            mc.SHAPES.clear()
+            mc.SHAPES.update(old)
+
+    def test_probe_jobs_cover_every_stage_position(self):
+        mesh = self._mesh()
+        cfg = get_config("jamba-1.5-large-398b")
+        probes = specs.probe_jobs(cfg, "train_4k", mesh)
+        block_probes = [p for p in probes if p.name.startswith("blk")]
+        assert len(block_probes) == len(cfg.stages[0].pattern)
+        assert {p.multiplier for p in block_probes} == {9}
+        assert any(p.name.startswith("opt:") for p in probes)

@@ -1,0 +1,88 @@
+"""MCD semantics: the paper's §II-B invariants as property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bayesian, mcd
+
+
+class TestPlacement:
+    def test_parse_roundtrip(self):
+        assert mcd.parse_placement("YNYN") == (True, False, True, False)
+        assert mcd.placement_str((True, False)) == "YN"
+
+    def test_cycling(self):
+        cfg = mcd.MCDConfig(placement="YN")
+        assert [cfg.bayesian(i) for i in range(4)] == [True, False, True, False]
+
+    def test_empty_placement_pointwise(self):
+        assert not mcd.MCDConfig(placement="").any_bayesian
+
+
+class TestMasks:
+    def test_tied_across_time(self):
+        """One mask per sample, reused at every time step (paper §II-B)."""
+        rows = jnp.arange(4, dtype=jnp.uint32)
+        m1 = mcd.feature_mask(0, 1, rows, 32, 0.125)
+        m2 = mcd.feature_mask(0, 1, rows, 32, 0.125)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+    def test_per_gate_masks_differ(self):
+        rows = jnp.arange(8, dtype=jnp.uint32)
+        zx, zh = mcd.lstm_gate_masks(0, 0, rows, 64, 64, 0.5)
+        assert zx.shape == (8, 4, 64) and zh.shape == (8, 4, 64)
+        gates = np.asarray(zx)
+        for g in range(1, 4):
+            assert not np.array_equal(gates[:, 0], gates[:, g])
+
+    def test_per_sample_masks_differ(self):
+        rows = jnp.arange(2, dtype=jnp.uint32)
+        m = np.asarray(mcd.feature_mask(0, 0, rows, 256, 0.5))
+        assert not np.array_equal(m[0], m[1])
+
+    def test_layer_streams_differ(self):
+        rows = jnp.arange(4, dtype=jnp.uint32)
+        a = np.asarray(mcd.feature_mask(0, 1, rows, 256, 0.5))
+        b = np.asarray(mcd.feature_mask(0, 2, rows, 256, 0.5))
+        assert not np.array_equal(a, b)
+
+    @given(p=st.sampled_from([0.1, 0.125, 0.25, 0.5]),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_inverted_dropout_unbiased(self, p, seed):
+        """E[x ⊙ z / (1-p)] = x — the scaling contract."""
+        rows = jnp.arange(4096, dtype=jnp.uint32)
+        x = jnp.ones((4096, 16))
+        m = mcd.feature_mask(seed, 0, rows, 16, p)
+        y = mcd.apply_mask(x, m, p)
+        assert abs(float(y.mean()) - 1.0) < 0.02
+
+    def test_apply_mask_none_passthrough(self):
+        x = jnp.ones((3, 5))
+        np.testing.assert_array_equal(np.asarray(mcd.apply_mask(x, None, 0.5)),
+                                      np.asarray(x))
+
+
+class TestPredictiveEngine:
+    def test_fold_equals_scan(self):
+        """Folding S into batch and scanning over S draw identical masks."""
+        cfg = mcd.MCDConfig(p=0.25, placement="Y", n_samples=5, seed=3)
+
+        def apply_fn(params, x, rows):
+            m = mcd.feature_mask(cfg.seed, 0, rows, x.shape[-1], cfg.p)
+            return mcd.apply_mask(x, m, cfg.p) @ params
+
+        params = jax.random.normal(jax.random.key(0), (16, 8))
+        x = jax.random.normal(jax.random.key(1), (6, 16))
+        a = bayesian.predict(apply_fn, params, x, cfg, strategy="fold")
+        b = bayesian.predict(apply_fn, params, x, cfg, strategy="scan")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_pointwise_single_pass(self):
+        cfg = mcd.MCDConfig(p=0.25, placement="N", n_samples=7)
+        out = bayesian.predict(lambda p, x, r: x, None,
+                               jnp.ones((3, 2)), cfg)
+        assert out.shape == (1, 3, 2)     # S collapses to 1 when pointwise

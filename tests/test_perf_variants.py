@@ -1,0 +1,97 @@
+"""Correctness of the §Perf optimization variants: every speed knob must be
+semantics-preserving (grouped MoE dispatch, int8 KV cache, attention tiling).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import backbone, layers, moe
+from repro.models.config import MoEConfig
+from repro.models.layers import Ctx
+
+
+class TestGroupedMoE:
+    def test_grouped_equals_ungrouped_when_no_drops(self):
+        """Group-local dispatch == global dispatch when capacity is ample."""
+        cfg = MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
+                        capacity_factor=16.0)
+        p = moe.init_moe(jax.random.key(0), 64, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (4, 16, 64))
+        y0, aux0 = moe.moe_forward(p, x, cfg, None, 0.0)
+        with moe.moe_sharding(groups=4):
+            y4, aux4 = moe.moe_forward(p, x, cfg, None, 0.0)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y4),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(float(aux0), float(aux4), rtol=1e-5)
+
+    def test_groups_fall_back_when_not_divisible(self):
+        cfg = MoEConfig(num_experts=4, top_k=1, d_ff_expert=16,
+                        capacity_factor=16.0)
+        p = moe.init_moe(jax.random.key(0), 32, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (3, 5, 32))  # T=15, G=4 ∤
+        with moe.moe_sharding(groups=4):
+            y, _ = moe.moe_forward(p, x, cfg, None, 0.0)
+        assert y.shape == x.shape
+
+
+class TestInt8KVCache:
+    def test_quantized_decode_close_to_bf16(self):
+        cfg = get_config("llama3-8b", reduced=True)
+        params = backbone.init_params(jax.random.key(0), cfg, jnp.float32)
+        B, S = 2, 10
+        toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0,
+                                  cfg.vocab_size)
+        ctx = Ctx(rows=jnp.arange(B, dtype=jnp.uint32), seed=3, cfg=cfg.mcd)
+        # reference: exact decode after prefill
+        _, state = backbone.prefill(params, cfg, toks[:, :S], ctx, S + 4)
+        lg_ref, _ = backbone.decode_step(params, cfg, toks[:, S:S + 1],
+                                         state, ctx)
+        # quantized cache: re-run the decode steps from scratch (prefill not
+        # quantized; feed the same tokens step by step)
+        qstate = backbone.init_decode_state(cfg, B, S + 4, jnp.float32,
+                                            kv_quant=True)
+        lg_q = None
+        for t in range(S + 1):
+            lg_q, qstate = backbone.decode_step(params, cfg, toks[:, t:t + 1],
+                                                qstate, ctx)
+        # int8 quantization noise is bounded; argmax token agreement is the
+        # serving-level contract
+        probs_ref = jax.nn.softmax(lg_ref[:, 0].astype(jnp.float32))
+        probs_q = jax.nn.softmax(lg_q[:, 0].astype(jnp.float32))
+        tv = 0.5 * float(jnp.abs(probs_ref - probs_q).sum(-1).max())
+        assert tv < 0.15, f"total variation {tv}"
+
+    def test_step_by_step_equals_prefill_bf16(self):
+        """Sanity: bf16 step-by-step decode == prefill+decode (exact path)."""
+        cfg = get_config("qwen3-1.7b", reduced=True)
+        params = backbone.init_params(jax.random.key(0), cfg, jnp.float32)
+        B, S = 2, 8
+        toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0,
+                                  cfg.vocab_size)
+        ctx = Ctx(rows=jnp.arange(B, dtype=jnp.uint32), seed=3, cfg=cfg.mcd)
+        _, state = backbone.prefill(params, cfg, toks[:, :S], ctx, S + 4)
+        lg_ref, _ = backbone.decode_step(params, cfg, toks[:, S:S + 1],
+                                         state, ctx)
+        st = backbone.init_decode_state(cfg, B, S + 4, jnp.float32)
+        lg = None
+        for t in range(S + 1):
+            lg, st = backbone.decode_step(params, cfg, toks[:, t:t + 1], st,
+                                          ctx)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestAttentionTiling:
+    def test_block_size_invariance(self):
+        """Attention result independent of tile decomposition (flash law)."""
+        q = jax.random.normal(jax.random.key(0), (2, 64, 4, 16))
+        k = jax.random.normal(jax.random.key(1), (2, 64, 2, 16))
+        v = jax.random.normal(jax.random.key(2), (2, 64, 2, 16))
+        a = layers.blockwise_attention(q, k, v, causal=True, q_block=64,
+                                       kv_block=64)
+        with layers.attention_override(q_block=16, kv_block=8):
+            b = layers.blockwise_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)

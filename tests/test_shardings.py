@@ -1,0 +1,81 @@
+"""Sharding rules: spec pytrees must mirror param/state pytrees exactly,
+and every sharded dim must divide its mesh axes (the invariant that makes
+the 512-device dry-run compile)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import shardings
+from repro.models import backbone
+from repro.train import optimizer
+
+PO = shardings.Policy(axes={"data": 16, "model": 16}, dp=("data",))
+PO_FSDP = shardings.Policy(axes={"data": 16, "model": 16}, dp=("data",),
+                           fsdp=True)
+
+
+def _spec_matches(shapes, specs):
+    """Every leaf has a spec of rank ≤ ndim whose axes divide the dims."""
+    flat_sh = jax.tree_util.tree_leaves(shapes)
+    flat_sp = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_sh) == len(flat_sp), (len(flat_sh), len(flat_sp))
+    for sh, sp in zip(flat_sh, flat_sp):
+        assert isinstance(sp, P)
+        assert len(sp) <= len(sh.shape), (sp, sh.shape)
+        for dim, axes in zip(sh.shape, tuple(sp)):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            total = 1
+            for a in axes:
+                total *= PO.axes[a]
+            assert dim % total == 0, (sh.shape, sp)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("po", [PO, PO_FSDP], ids=["tp", "tp+fsdp"])
+def test_param_specs_mirror_params(arch, po):
+    cfg = get_config(arch)          # FULL config — eval_shape only
+    shapes = jax.eval_shape(
+        functools.partial(backbone.init_params, cfg=cfg, dtype=jnp.bfloat16),
+        jax.random.key(0))
+    specs = shardings.param_specs(cfg, po)
+    _spec_matches(shapes, specs)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_mirror_state(arch):
+    cfg = get_config(arch)
+    batch = 128
+    shapes = jax.eval_shape(
+        functools.partial(backbone.init_decode_state, cfg, batch, 1024,
+                          jnp.bfloat16))
+    specs = shardings.cache_specs(cfg, PO, batch)
+    _spec_matches(shapes.caches, specs.caches)
+
+
+def test_optstate_specs_fold_data_axis():
+    cfg = get_config("llama3-8b")
+    shapes = jax.eval_shape(
+        functools.partial(backbone.init_params, cfg=cfg, dtype=jnp.bfloat16),
+        jax.random.key(0))
+    pspecs = shardings.param_specs(cfg, PO)
+    ospecs = shardings.optstate_specs(pspecs, PO, shapes)
+    opt_shapes = jax.eval_shape(optimizer.init, shapes)
+    _spec_matches(opt_shapes.m, ospecs.m)
+    # ZeRO: at least one big moment leaf gained a data axis
+    flat = jax.tree_util.tree_leaves(ospecs.m,
+                                     is_leaf=lambda x: isinstance(x, P))
+    assert any(any(ax == ("data",) or ax == "data"
+                   for ax in tuple(sp) if ax is not None) for sp in flat)
+
+
+def test_batch_spec_unshardable_batch_replicates():
+    assert shardings.batch_spec(1, PO) is None       # long_500k
+    assert shardings.batch_spec(128, PO) == ("data",)

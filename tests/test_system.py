@@ -1,0 +1,135 @@
+"""End-to-end behaviour of the paper's system on the ECG task (integration).
+
+Reproduces the paper's qualitative claims on the synthetic ECG5000:
+  * the classifier trains to usable accuracy with MCD on (§V-A2),
+  * the Bayesian autoencoder separates anomalies by reconstruction error
+    (§V-A1) and is *more uncertain* on anomalies than on normals (Fig. 1),
+  * Gaussian-noise inputs get higher predictive entropy than real beats.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autoencoder as ae
+from repro.core import bayesian, classifier as clf, mcd, uncertainty as unc
+from repro.data import ecg
+from repro.train import optimizer, trainer
+
+
+@pytest.fixture(scope="module")
+def data():
+    return ecg.make_ecg5000(0)
+
+
+@pytest.fixture(scope="module")
+def trained_classifier(data):
+    tx, ty, ex, ey = data
+    cfg = clf.ClassifierConfig(
+        hidden=8, num_layers=2,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=10, seed=0))
+    params = clf.init(jax.random.key(0), cfg)
+
+    def loss(p, batch, step):
+        x, y = batch
+        rows = jnp.arange(x.shape[0], dtype=jnp.uint32)
+        logits = clf.apply(p, x, rows, cfg)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1)), {}
+
+    tcfg = trainer.TrainConfig(adamw=optimizer.AdamWConfig(lr=3e-3),
+                               log_every=0)
+    tr = trainer.Trainer(loss, params, tcfg)
+    pipe = ecg.Pipeline(tx, ty, batch_size=64, seed=0)
+    batches = (tuple(map(jnp.asarray, b))
+               for e in range(40) for b in pipe.epoch(e))
+    hist = tr.run(batches, 120)
+    return cfg, tr.params, hist
+
+
+class TestClassifierEndToEnd:
+    def test_loss_decreases(self, trained_classifier):
+        _, _, hist = trained_classifier
+        assert hist[-1]["loss"] < 0.7 * hist[0]["loss"]
+
+    def test_bayesian_test_accuracy(self, trained_classifier, data):
+        cfg, params, _ = trained_classifier
+        _, _, ex, ey = data
+        x = jnp.asarray(ex[:512])
+        logits = bayesian.predict(
+            lambda p, x_, r: clf.apply(p, x_, r, cfg), params, x, cfg.mcd)
+        s = unc.classification_summary(logits)
+        acc = float(unc.accuracy(s.probs, jnp.asarray(ey[:512])))
+        assert acc > 0.6, acc      # majority class is 58%
+
+    def test_noise_entropy_higher_than_data(self, trained_classifier, data):
+        """Paper §V-A2: predictive entropy on random Gaussian noise."""
+        cfg, params, _ = trained_classifier
+        _, _, ex, _ = data
+        x = jnp.asarray(ex[:256])
+        noise = jax.random.normal(jax.random.key(9), x.shape)
+        ent = lambda inp: float(unc.classification_summary(
+            bayesian.predict(lambda p, x_, r: clf.apply(p, x_, r, cfg),
+                             params, inp, cfg.mcd)).predictive_entropy.mean())
+        assert ent(noise) > ent(x)
+
+
+class TestAutoencoderEndToEnd:
+    @pytest.fixture(scope="class")
+    def trained_ae(self, data):
+        tx, ty, _, _ = data
+        normal = jnp.asarray(tx[ty == 0])          # train on normals only
+        cfg = ae.AutoencoderConfig(
+            hidden=16, num_layers=1,
+            mcd=mcd.MCDConfig(p=0.125, placement="YY", n_samples=10, seed=0))
+        params = ae.init(jax.random.key(0), cfg)
+
+        def loss(p, batch, step):
+            x = batch
+            rows = jnp.arange(x.shape[0], dtype=jnp.uint32)
+            mean, log_var = ae.apply(p, x, rows, cfg)
+            return jnp.mean(ae.gaussian_nll(mean, log_var, x)), {}
+
+        tcfg = trainer.TrainConfig(adamw=optimizer.AdamWConfig(lr=3e-3),
+                                   log_every=0)
+        tr = trainer.Trainer(loss, params, tcfg)
+        batches = (normal[(i * 64) % 256:(i * 64) % 256 + 64]
+                   for i in range(120))
+        tr.run(batches, 120)
+        return cfg, tr.params
+
+    def test_anomaly_separation(self, trained_ae, data):
+        cfg, params = trained_ae
+        _, _, ex, ey = data
+        x = jnp.asarray(ex[:768])
+        is_anom = np.asarray(ey[:768]) != 0
+
+        means, log_vars = bayesian.predict(
+            lambda p, x_, r: ae.apply(p, x_, r, cfg), params, x, cfg.mcd)
+        s = unc.regression_summary(means, log_vars)
+        score = np.asarray(unc.rmse(s, x))
+        # rank-based ROC-AUC: anomalies reconstruct worse (paper §V-A1)
+        order = np.argsort(score)
+        ranks = np.empty(len(score))
+        ranks[order] = np.arange(1, len(score) + 1)
+        pos, neg = is_anom.sum(), (~is_anom).sum()
+        auc = (ranks[is_anom].sum() - pos * (pos + 1) / 2) / (pos * neg)
+        assert auc > 0.55, auc
+
+    def test_fig1_uncertainty_on_morphology_anomaly(self, trained_ae, data):
+        """Fig. 1: the model is *more uncertain* on the anomalous beat.  The
+        paper's figure shows a morphology anomaly (inverted/shifted waves) —
+        class 1 here; at CI training budgets the heteroscedastic head is not
+        yet discriminative on the fibrillation class."""
+        cfg, params = trained_ae
+        _, _, ex, ey = data
+        xn = jnp.asarray(ex[ey == 0][:128])
+        xa = jnp.asarray(ex[ey == 1][:64])
+
+        def total_unc(x):
+            means, log_vars = bayesian.predict(
+                lambda p, x_, r: ae.apply(p, x_, r, cfg), params, x, cfg.mcd)
+            return float(unc.regression_summary(means, log_vars).total.mean())
+
+        assert total_unc(xa) > total_unc(xn)
