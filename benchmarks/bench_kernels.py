@@ -5,6 +5,12 @@ wall-clock here compares the *unfused jnp* path against the *fused-semantics
 jnp reference* (mask generation folded into the consumer); the structural
 win (no mask tensors in HBM) is reported as bytes saved, which is what the
 TPU roofline credits.
+
+The step-vs-sequence sweep runs both fusion levels on the same (B, T, H, S)
+grid and reports tokens/sec.  In interpret mode the measured gap is the
+per-timestep kernel re-entry cost that the sequence kernel amortizes — the
+CPU-visible proxy for the weight re-fetch traffic it removes on TPU; the
+jnp-reference rows give the compiled-scan baseline on the same shapes.
 """
 
 from __future__ import annotations
@@ -14,6 +20,47 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core import cells, mcd
+from repro.kernels import mcd_lstm, ops, ref
+
+
+def sweep_step_vs_seq():
+    """tokens/sec for per-step vs sequence fusion over (B, T, H, S)."""
+    seed, layer, p = 0, 0, 0.125
+    for B, T, H, S in ((8, 16, 16, 1), (8, 16, 32, 1), (4, 32, 16, 2)):
+        I = H
+        ks = jax.random.split(jax.random.key(0), 2)
+        wx = jax.random.normal(ks[0], (I, 4, H)) * 0.1
+        wh = jax.random.normal(ks[1], (H, 4, H)) * 0.1
+        b = jnp.zeros((4, H))
+        # S MC samples fold into the batch axis (independent mask rows).
+        rows = jnp.arange(S * B, dtype=jnp.uint32)
+        x_seq = jax.random.normal(jax.random.key(1), (S * B, T, I))
+        keys = mcd_lstm.gate_keys(seed, layer)
+        tokens = S * B * T
+
+        def step_fused(x):
+            return ops.fused_lstm_layer(wx, wh, b, x, rows, seed, layer, p)[0]
+
+        def seq_fused(x):
+            return ops.fused_lstm_seq(wx, wh, b, x, rows, seed, layer, p)[0]
+
+        def ref_scan(x):
+            return ref.mcd_lstm_seq(x, wx, wh, b, rows, keys, p)[0]
+
+        t_step = common.time_call(step_fused, x_seq, iters=2)
+        t_seq = common.time_call(seq_fused, x_seq, iters=2)
+        t_ref = common.time_call(jax.jit(ref_scan), x_seq, iters=3)
+        tag = f"B{B}.T{T}.H{H}.S{S}"
+        common.emit(f"kernel.lstm.step_fused.{tag}", t_step,
+                    f"tokens_per_s={tokens / (t_step * 1e-6):.0f};"
+                    f"kernel_entries={T}")
+        common.emit(f"kernel.lstm.seq_fused.{tag}", t_seq,
+                    f"tokens_per_s={tokens / (t_seq * 1e-6):.0f};"
+                    f"kernel_entries=1;"
+                    f"speedup_vs_step={t_step / t_seq:.2f}x")
+        common.emit(f"kernel.lstm.jnp_ref_scan.{tag}", t_ref,
+                    f"tokens_per_s={tokens / (t_ref * 1e-6):.0f};"
+                    f"weight_refetches_per_seq={T}")
 
 
 def run():
@@ -42,6 +89,7 @@ def run():
     common.emit("kernel.lstm.fused_design", t_unfused,
                 f"mask_buffer_bytes=0;hbm_saved={mask_bytes}B/layer;"
                 f"validated=interpret(tests/test_kernels.py)")
+    sweep_step_vs_seq()
 
 
 if __name__ == "__main__":

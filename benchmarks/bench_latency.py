@@ -18,8 +18,44 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import bayesian, classifier as clf
+from repro.core import bayesian, classifier as clf, mcd, rnn
 from repro.dse import fpga_model as fm
+
+
+def stack_backend_latency():
+    """run_stack backends on the paper's classifier stack: tokens/sec each.
+
+    The reference rows are compiled XLA (the CPU/GPU-baseline analogue); the
+    pallas rows run in interpret mode on CPU, where step-vs-seq isolates the
+    per-timestep kernel re-entry the sequence fusion removes.
+    """
+    cfg = mcd.MCDConfig(p=0.125, placement="YNY", seed=0)
+    hiddens = (8, 8, 8)
+    params = rnn.init_stack(jax.random.key(0), 1, hiddens)
+    for B, T in ((8, 35), (16, 70)):
+        x = jax.random.normal(jax.random.key(1), (B, T, 1))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        masks = rnn.sample_stack_masks(cfg, rows, 1, hiddens)
+        tokens = B * T
+
+        runs = {
+            "reference": jax.jit(lambda p_, x_: rnn.run_stack(
+                p_, x_, masks, cfg.p)[1][0]),
+            "pallas_step": lambda p_, x_: rnn.run_stack(
+                p_, x_, masks, cfg.p, backend="pallas_step", rows=rows,
+                seed=cfg.seed)[1][0],
+            "pallas_seq": lambda p_, x_: rnn.run_stack(
+                p_, x_, masks, cfg.p, backend="pallas_seq", rows=rows,
+                seed=cfg.seed)[1][0],
+        }
+        times = {}
+        for name, fn in runs.items():
+            times[name] = common.time_call(fn, params, x, iters=2)
+            common.emit(f"stack.{name}.B{B}.T{T}", times[name],
+                        f"tokens_per_s={tokens / (times[name] * 1e-6):.0f}")
+        common.emit(f"stack.seq_vs_step.B{B}.T{T}", times["pallas_seq"],
+                    f"speedup={times['pallas_step'] / times['pallas_seq']:.2f}x;"
+                    f"kernel_entries={T}->1/layer")
 
 
 def run():
@@ -46,6 +82,7 @@ def run():
                     f"fpga_model_ms={fpga_ms:.2f};"
                     f"paper_cpu_ms={3690 if batch==50 else 4981};"
                     f"paper_fpga_ms={25.23 if batch==50 else 100.92}")
+    stack_backend_latency()
 
 
 if __name__ == "__main__":

@@ -52,30 +52,40 @@ def init(key: jax.Array, cfg: AutoencoderConfig, dtype=jnp.float32) -> dict[str,
 
 
 def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
-          cfg: AutoencoderConfig):
+          cfg: AutoencoderConfig, *, backend: str = "reference"):
     """Forward pass for one set of MCD masks.
 
     Args:
       x_seq: [B, T, I] input sequences.
       rows: [B] global (sample·batch) row ids keying the mask streams.
+      backend: stack execution path (see :func:`repro.core.rnn.run_stack`);
+        all backends draw the same masks.
     Returns:
       (mean [B, T, I], log_var [B, T, I] or None)
     """
     T = x_seq.shape[1]
-    enc_masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.input_dim,
-                                       cfg.encoder_hiddens, layer_offset=0,
-                                       dtype=x_seq.dtype)
-    dec_masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.hidden // 2,
-                                       cfg.decoder_hiddens,
-                                       layer_offset=cfg.num_layers,
-                                       dtype=x_seq.dtype)
+    if backend == "reference":
+        enc_masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.input_dim,
+                                           cfg.encoder_hiddens, layer_offset=0,
+                                           dtype=x_seq.dtype)
+        dec_masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.hidden // 2,
+                                           cfg.decoder_hiddens,
+                                           layer_offset=cfg.num_layers,
+                                           dtype=x_seq.dtype)
+    else:  # Pallas backends regenerate masks in-kernel — nothing to sample.
+        enc_masks = rnn.stack_mask_plan(cfg.mcd, cfg.num_layers)
+        dec_masks = rnn.stack_mask_plan(cfg.mcd, cfg.num_layers,
+                                        layer_offset=cfg.num_layers)
     # Encode → bottleneck h_T ∈ R^{H/2}; the decoder starts only after the
     # encoder finishes (paper: latency = 2 × Lat_design for the AE).
     _, (h_T, _) = rnn.run_stack(params["encoder"], x_seq, enc_masks,
-                                cfg.mcd.p, return_sequence=False)
+                                cfg.mcd.p, return_sequence=False,
+                                backend=backend, rows=rows, seed=cfg.mcd.seed)
     # Repeat the encoding T times (cached-replay in hardware).
     dec_in = jnp.broadcast_to(h_T[:, None, :], (h_T.shape[0], T, h_T.shape[1]))
-    dec_out, _ = rnn.run_stack(params["decoder"], dec_in, dec_masks, cfg.mcd.p)
+    dec_out, _ = rnn.run_stack(params["decoder"], dec_in, dec_masks, cfg.mcd.p,
+                               backend=backend, rows=rows, seed=cfg.mcd.seed,
+                               layer_offset=cfg.num_layers)
     y = linear.dense(params["head"], dec_out)
     if cfg.heteroscedastic:
         mean, log_var = jnp.split(y, 2, axis=-1)

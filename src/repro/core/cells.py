@@ -43,6 +43,16 @@ def init_lstm(key: jax.Array, in_dim: int, hidden: int,
     return LSTMParams(wx, wh, b)
 
 
+def gate_stacked(params: LSTMParams):
+    """Pallas-kernel weight layout: ``[4, in, H] → ([in, 4, H], [H, 4, H], b)``.
+
+    The kernels tile the hidden axis, so each tile wants the contiguous
+    4-gate stack for its hidden columns (gate axis second, not first).
+    """
+    return (jnp.moveaxis(params.wx, 0, 1), jnp.moveaxis(params.wh, 0, 1),
+            params.b)
+
+
 def lstm_step(params: LSTMParams, h: jax.Array, c: jax.Array, x: jax.Array,
               zx: jax.Array | None, zh: jax.Array | None, p: float,
               compute_dtype=None):

@@ -31,11 +31,19 @@ def init(key: jax.Array, cfg: ClassifierConfig, dtype=jnp.float32) -> dict[str, 
 
 
 def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
-          cfg: ClassifierConfig) -> jax.Array:
-    """Logits [B, num_classes] for one set of MCD masks."""
+          cfg: ClassifierConfig, *, backend: str = "reference") -> jax.Array:
+    """Logits [B, num_classes] for one set of MCD masks.
+
+    ``backend`` selects the encoder execution path (see
+    :func:`repro.core.rnn.run_stack`); all backends draw the same masks.
+    """
     hiddens = (cfg.hidden,) * cfg.num_layers
-    masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.input_dim, hiddens,
-                                   dtype=x_seq.dtype)
+    # Pallas backends regenerate masks in-kernel — don't materialize them.
+    masks = (rnn.sample_stack_masks(cfg.mcd, rows, cfg.input_dim, hiddens,
+                                    dtype=x_seq.dtype)
+             if backend == "reference"
+             else rnn.stack_mask_plan(cfg.mcd, cfg.num_layers))
     _, (h_T, _) = rnn.run_stack(params["encoder"], x_seq, masks, cfg.mcd.p,
-                                return_sequence=False)
+                                return_sequence=False, backend=backend,
+                                rows=rows, seed=cfg.mcd.seed)
     return linear.dense(params["head"], h_T)

@@ -50,13 +50,55 @@ def sample_stack_masks(cfg: mcd.MCDConfig, rows: jax.Array, in_dim: int,
     return masks
 
 
+#: Sentinel masks entry: the layer is Bayesian but its masks are recomputed
+#: inside the Pallas kernel — no tensors to materialize (see stack_mask_plan).
+IN_KERNEL_MASKS = object()
+
+
+def stack_mask_plan(cfg: mcd.MCDConfig, n_layers: int, *,
+                    layer_offset: int = 0):
+    """Per-layer Bayesian on/off in the shape ``run_stack`` expects of
+    ``masks``, without materializing any mask tensors.
+
+    Use with the Pallas backends, which recompute masks in-kernel from the
+    counter PRNG and only need to know *whether* each layer masks — passing
+    :func:`sample_stack_masks` output also works but pays the paper's
+    mask-buffer cost the fused kernels exist to avoid.
+    """
+    return [(IN_KERNEL_MASKS, None)
+            if cfg.any_bayesian and cfg.bayesian(layer_offset + i)
+            and cfg.p > 0.0 else (None, None)
+            for i in range(n_layers)]
+
+
 def run_stack(params: Sequence[cells.LSTMParams], x_seq: jax.Array,
-              masks, p: float, *, return_sequence: bool = True):
+              masks, p: float, *, return_sequence: bool = True,
+              backend: str = "reference", rows: jax.Array | None = None,
+              seed=0, layer_offset: int = 0, interpret: bool | None = None):
     """Run a cascaded LSTM stack over a [B, T, I] sequence.
+
+    Backends (``repro.kernels.ops.LSTM_BACKENDS``):
+      * ``"reference"``: the jnp wavefront scan below, consuming the
+        pre-sampled ``masks`` — sharding-friendly, the numerical oracle.
+      * ``"pallas_step"``: per-timestep fused kernel scanned over T.
+      * ``"pallas_seq"``: sequence-fused kernel, weights resident across T.
+    The Pallas backends recompute masks in-kernel from the counter PRNG, so
+    they ignore the pre-sampled mask *values* and instead need the stream
+    coordinates: ``rows`` (as passed to :func:`sample_stack_masks`), ``seed``
+    (``cfg.seed``) and ``layer_offset``.  A layer whose ``masks`` entry is
+    ``(None, None)`` runs with p=0 on every backend.
 
     Returns (outputs [B, T, H_last] if return_sequence else None,
              (h_T, c_T) of the last layer).
     """
+    if backend != "reference":
+        return _run_stack_pallas(params, x_seq, masks, p, backend=backend,
+                                 return_sequence=return_sequence, rows=rows,
+                                 seed=seed, layer_offset=layer_offset,
+                                 interpret=interpret)
+    if any(zx is IN_KERNEL_MASKS for zx, _ in masks):
+        raise ValueError("stack_mask_plan() entries carry no mask values; "
+                         "the reference backend needs sample_stack_masks()")
     batch = x_seq.shape[0]
     dtype = x_seq.dtype
     carries = [(jnp.zeros((batch, pl.wh.shape[1]), dtype),
@@ -75,3 +117,33 @@ def run_stack(params: Sequence[cells.LSTMParams], x_seq: jax.Array,
     final_carry, ys = jax.lax.scan(step, carries, xs)
     out = jnp.swapaxes(ys, 0, 1) if return_sequence else None
     return out, final_carry[-1]
+
+
+def _run_stack_pallas(params, x_seq, masks, p, *, backend, return_sequence,
+                      rows, seed, layer_offset, interpret):
+    """Kernel-backed stack: layers run whole-sequence, one after another.
+
+    The wavefront trick above exists to fuse the scan body across layers; the
+    kernels already fuse a full layer (step- or sequence-level), so here the
+    cascade is the plain layer-by-layer composition — identical math.
+    """
+    from repro.kernels import ops  # deferred: core must import without pallas
+
+    if backend not in ops.LSTM_BACKENDS:
+        raise ValueError(f"backend must be one of {ops.LSTM_BACKENDS}, "
+                         f"got {backend!r}")
+    if rows is None:
+        raise ValueError(f"backend={backend!r} needs the mask-stream `rows` "
+                         "(the same ids passed to sample_stack_masks)")
+    seq = backend == "pallas_seq"
+    inp = x_seq
+    carry = None
+    for i, (layer_params, (zx, _)) in enumerate(zip(params, masks)):
+        p_eff = p if zx is not None else 0.0
+        inp, carry = ops.lstm_stack_layer(*layer_params, inp, rows, seed,
+                                          layer_offset + i, p_eff, seq=seq,
+                                          interpret=interpret)
+    # Match the reference carry contract: c in the input dtype (the kernels
+    # hand back their fp32 accumulator).
+    hT, cT = carry
+    return (inp if return_sequence else None), (hT, cT.astype(x_seq.dtype))

@@ -7,6 +7,11 @@ the jit'd wrappers; ref.py the pure-jnp oracles the tests assert against
   bernoulli_mask  counter-PRNG mask generate+apply (the paper's LFSR + DX)
   mcd_matmul      fused MCD mask + matmul (K-tiled, fp32 VMEM accumulator)
   mcd_lstm        fused Bayesian LSTM cell step (the paper's Fig. 2 datapath)
+  mcd_lstm_seq    sequence-fused Bayesian LSTM layer — weights VMEM-resident
+                  across all T timesteps (the paper's Fig. 5 wave pipelining)
   decode_attn     flash-decode attention over the KV cache (serving hot path)
   ssd_chunk       fused Mamba2/SSD chunk scan (VMEM-resident chunk state)
+
+compat.py shims Pallas/sharding API names across jax releases; ops.py exposes
+the ``LSTM_BACKENDS`` dispatch consumed by ``repro.core.rnn.run_stack``.
 """

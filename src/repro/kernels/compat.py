@@ -1,0 +1,36 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+The kernels target the current Pallas API names; older jax releases spell
+some of them differently (``pltpu.CompilerParams`` was ``TPUCompilerParams``
+before the rename, ``jax.sharding.AxisType`` arrived after 0.4.x).  All
+version probing lives here so the kernel files stay on one spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(*dimension_semantics: str):
+    """``pltpu.CompilerParams(dimension_semantics=...)`` under either name."""
+    return _COMPILER_PARAMS_CLS(dimension_semantics=tuple(dimension_semantics))
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh(mesh)`` context; older releases enter the Mesh itself."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the release supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             block_s: int, grid_s: int, kv_heads: int, rep: int, hd: int):
@@ -90,7 +92,6 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             pltpu.VMEM((KV, rep), jnp.float32),
             pltpu.VMEM((KV, rep, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=compat.compiler_params("parallel", "arbitrary"),
         interpret=interpret,
     )(pos2, q, k_cache, v_cache)

@@ -26,6 +26,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import mcd, prng
+from repro.kernels import compat
 
 
 def _gate_mask(key, rows, cols0, shape, feat_dim: int, p_drop: float):
@@ -109,7 +110,6 @@ def mcd_lstm_step(x: jax.Array, h: jax.Array, c: jax.Array, wx: jax.Array,
             jax.ShapeDtypeStruct((B, H), h.dtype),
             jax.ShapeDtypeStruct((B, H), c.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel")),
+        compiler_params=compat.compiler_params("parallel", "parallel"),
         interpret=interpret,
     )(rows2, keys, x, h, c, wx, wh, b)

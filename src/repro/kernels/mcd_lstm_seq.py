@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: sequence-fused Bayesian LSTM layer — the paper's Fig. 5.
+
+:mod:`repro.kernels.mcd_lstm` fuses one *timestep* of the Bayesian LSTM
+datapath; scanning it over T re-enters the kernel per step and re-fetches the
+gate weights every iteration — exactly the weight-traffic the paper's FPGA
+avoids by keeping the datapath resident while the sequence streams through
+(wave pipelining).  This kernel is the TPU analogue of that residency:
+
+* Grid ``(B/bb, T)`` with time as an ``"arbitrary"`` (sequential) dimension.
+  The weight BlockSpecs map every grid step to the same block, so Pallas's
+  revisiting semantics fetch ``wx [I,4,H]`` / ``wh [H,4,H]`` into VMEM
+  **once**; only the ``[bb, 1, I]`` input slice streams per step.
+* ``(h, c)`` live in VMEM scratch across grid steps (reset at ``t == 0``),
+  with ``c`` in fp32 — the paper's 32-bit cell-state policy.
+* The per-gate Bernoulli keep-masks are recomputed in-register each step from
+  the counter PRNG.  Masks are tied across T (paper §II-B), so the 8 stream
+  keys from :func:`repro.kernels.mcd_lstm.gate_keys` never change and every
+  step reproduces bit-identical masks — same draws as the per-step kernel and
+  the jnp reference.
+
+Unlike the step kernel there is no hidden-tile grid axis: timestep t needs
+*all* H columns of ``h_{t-1}`` for the recurrent matmul, so tiling H across
+sequentially-revisited grid programs would either break the dependency
+(time-innermost order) or re-fetch weights per step (tile-innermost order).
+One program therefore owns the full hidden width of its batch tile — fine for
+the paper's RNN regime (H up to a few hundred; weights ≈ 8·H·(I+H) bytes of
+VMEM in bf16).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.mcd_lstm import _gate_mask
+
+
+def _kernel(rows_ref, keys_ref, x_ref, wx_ref, wh_ref, b_ref,
+            ys_ref, ht_ref, ct_ref, h_scr, c_scr, *,
+            p_drop: float, in_dim: int, hidden: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _reset():
+        h_scr[...] = jnp.zeros_like(h_scr)
+        c_scr[...] = jnp.zeros_like(c_scr)
+
+    rows = rows_ref[...][:, 0]
+    x = x_ref[:, 0, :]              # [bb, I] — this step's input slice
+    h = h_scr[...]                  # [bb, H] — carried entirely in VMEM
+    gates = []
+    scale = jnp.asarray(1.0 / (1.0 - p_drop), x.dtype) if p_drop > 0 else None
+    for g in range(4):
+        xg, hg = x, h
+        if p_drop > 0.0:
+            # Same (key, row, col) → bit mapping as the step kernel; keys are
+            # t-independent so recomputing here *is* tying across time.
+            kx = keys_ref[0, g]
+            kh = keys_ref[0, 4 + g]
+            mx = _gate_mask(kx, rows, 0, x.shape, in_dim, p_drop)
+            mh = _gate_mask(kh, rows, 0, h.shape, hidden, p_drop)
+            xg = jnp.where(mx, x * scale, jnp.zeros_like(x))
+            hg = jnp.where(mh, h * scale, jnp.zeros_like(h))
+        acc = jnp.dot(xg, wx_ref[:, g, :], preferred_element_type=jnp.float32)
+        acc += jnp.dot(hg, wh_ref[:, g, :], preferred_element_type=jnp.float32)
+        gates.append(acc + b_ref[g, :].astype(jnp.float32))
+    i = jax.nn.sigmoid(gates[0])
+    f = jax.nn.sigmoid(gates[1])
+    g_ = jnp.tanh(gates[2])
+    o = jax.nn.sigmoid(gates[3])
+    c_new = f * c_scr[...] + i * g_
+    h_new = (o * jnp.tanh(c_new)).astype(h_scr.dtype)
+    c_scr[...] = c_new
+    h_scr[...] = h_new
+    ys_ref[:, 0, :] = h_new.astype(ys_ref.dtype)
+    ht_ref[...] = h_new.astype(ht_ref.dtype)
+    ct_ref[...] = c_new.astype(ct_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("p_drop", "block_b", "interpret"))
+def mcd_lstm_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
+                 rows: jax.Array, keys: jax.Array, p_drop: float, *,
+                 block_b: int = 128, interpret: bool = True):
+    """Sequence-fused Bayesian LSTM layer from (h, c) = 0.
+
+    x_seq: [B, T, I]; wx: [I, 4, H]; wh: [H, 4, H]; b: [4, H];
+    rows: [B] mask row ids; keys: [1, 8] from
+    :func:`repro.kernels.mcd_lstm.gate_keys`.
+    Returns (ys [B, T, H], h_T [B, H], c_T [B, H] fp32).
+    """
+    B, T, I = x_seq.shape
+    H = wh.shape[0]
+    bb = min(block_b, B)
+    while B % bb:        # largest divisor ≤ block_b (odd serving batch sizes)
+        bb -= 1
+    rows2 = rows.astype(jnp.int32).reshape(B, 1)
+    grid = (B // bb, T)
+    return pl.pallas_call(
+        functools.partial(_kernel, p_drop=p_drop, in_dim=I, hidden=H),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, 1), lambda i, t: (i, 0)),        # rows
+            pl.BlockSpec((1, 8), lambda i, t: (0, 0)),         # keys
+            pl.BlockSpec((bb, 1, I), lambda i, t: (i, t, 0)),  # x_t slice
+            pl.BlockSpec((I, 4, H), lambda i, t: (0, 0, 0)),   # wx — resident
+            pl.BlockSpec((H, 4, H), lambda i, t: (0, 0, 0)),   # wh — resident
+            pl.BlockSpec((4, H), lambda i, t: (0, 0)),         # bias
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 1, H), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
+            pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H), x_seq.dtype),
+            jax.ShapeDtypeStruct((B, H), x_seq.dtype),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bb, H), x_seq.dtype),    # h carry
+            pltpu.VMEM((bb, H), jnp.float32),    # c carry (32-bit policy)
+        ],
+        compiler_params=compat.compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(rows2, keys, x_seq, wx, wh, b)

@@ -17,6 +17,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import prng
+from repro.kernels import compat
 
 
 def _kernel(rows_ref, key_ref, x_ref, w_ref, o_ref, acc_ref, *,
@@ -73,7 +74,6 @@ def mcd_matmul(x: jax.Array, w: jax.Array, rows: jax.Array, key: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=compat.compiler_params("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(rows2, key2, x, w)

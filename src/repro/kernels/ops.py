@@ -14,8 +14,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import mcd
-from repro.kernels import bernoulli_mask, mcd_lstm, mcd_matmul
+from repro.core import cells, mcd
+from repro.kernels import bernoulli_mask, mcd_lstm, mcd_lstm_seq, mcd_matmul
+
+#: Stack-layer execution paths (see ``repro.core.rnn.run_stack``):
+#: "reference"    pure-jnp cells (sharding-friendly, the numerical oracle)
+#: "pallas_step"  fused cell kernel re-entered per timestep via lax.scan
+#: "pallas_seq"   sequence-fused kernel — weights resident across all T
+LSTM_BACKENDS = ("reference", "pallas_step", "pallas_seq")
 
 
 def on_tpu() -> bool:
@@ -49,7 +55,7 @@ def mcd_mask_apply(x: jax.Array, rows: jax.Array, seed, layer: int, site: int,
     return bernoulli_mask.masked_activation(x, rows, key, p_drop, **kw)
 
 
-@functools.partial(jax.jit, static_argnames=("p_drop", "layer", "interpret"))
+@functools.partial(jax.jit, static_argnames=("p_drop", "interpret"))
 def fused_lstm_layer(wx4: jax.Array, wh4: jax.Array, b: jax.Array,
                      x_seq: jax.Array, rows: jax.Array, seed, layer: int,
                      p_drop: float, interpret: bool | None = None):
@@ -74,3 +80,42 @@ def fused_lstm_layer(wx4: jax.Array, wh4: jax.Array, b: jax.Array,
 
     (hT, cT), ys = jax.lax.scan(step, (h0, c0), jnp.swapaxes(x_seq, 0, 1))
     return jnp.swapaxes(ys, 0, 1), (hT, cT)
+
+
+@functools.partial(jax.jit, static_argnames=("p_drop", "interpret"))
+def fused_lstm_seq(wx4: jax.Array, wh4: jax.Array, b: jax.Array,
+                   x_seq: jax.Array, rows: jax.Array, seed, layer: int,
+                   p_drop: float, interpret: bool | None = None):
+    """One kernel launch for the whole sequence (paper Fig. 5 wave pipelining).
+
+    Same contract as :func:`fused_lstm_layer` — wx4: [I, 4, H]; wh4: [H, 4, H];
+    b: [4, H]; x_seq: [B, T, I]; returns (outputs [B, T, H], (h_T, c_T)) —
+    but the weights stay VMEM-resident across all T timesteps instead of being
+    re-fetched per scan iteration.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    keys = mcd_lstm.gate_keys(seed, layer)
+    ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(x_seq, wx4, wh4, b, rows, keys,
+                                           p_drop, interpret=interpret)
+    return ys, (hT, cT)
+
+
+@functools.partial(jax.jit, static_argnames=("p_drop", "seq", "interpret"))
+def lstm_stack_layer(wx: jax.Array, wh: jax.Array, b: jax.Array,
+                     x_seq: jax.Array, rows: jax.Array, seed, layer,
+                     p_drop: float, *, seq: bool,
+                     interpret: bool | None = None):
+    """Core-layout entry for ``run_stack``'s Pallas backends.
+
+    Takes ``repro.core.cells.LSTMParams`` layout (wx: [4, I, H]; wh:
+    [4, H, H]) and transposes to the kernels' gate-stacked layout *inside*
+    jit, so repeated calls (the S MC-sample loop) don't pay an eager
+    per-call transpose.  ``layer`` is traced (it only feeds the counter-PRNG
+    key fold), so same-shaped layers share one compile.  ``seq`` picks
+    sequence- vs step-fusion.
+    """
+    wx4, wh4, b = cells.gate_stacked(cells.LSTMParams(wx, wh, b))
+    fn = fused_lstm_seq if seq else fused_lstm_layer
+    return fn(wx4, wh4, b, x_seq, rows, seed, layer, p_drop,
+              interpret=interpret)

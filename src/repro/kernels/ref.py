@@ -49,6 +49,27 @@ def decode_attention(q, k_cache, v_cache, pos):
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def mcd_lstm_seq(x_seq, wx, wh, b, rows, keys, p_drop: float):
+    """Sequence oracle: scan :func:`mcd_lstm_step` over T from (h, c) = 0.
+
+    x_seq: [B, T, I]; same weight/key layout as the kernels.  Returns
+    (ys [B, T, H], h_T [B, H], c_T [B, H] fp32) — masks tied across T because
+    ``keys`` never varies with t.
+    """
+    B = x_seq.shape[0]
+    H = wh.shape[0]
+    h0 = jnp.zeros((B, H), x_seq.dtype)
+    c0 = jnp.zeros((B, H), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = mcd_lstm_step(x_t, h, c, wx, wh, b, rows, keys, p_drop)
+        return (h, c), h
+
+    (hT, cT), ys = jax.lax.scan(step, (h0, c0), jnp.swapaxes(x_seq, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), hT, cT
+
+
 def mcd_lstm_step(x, h, c, wx, wh, b, rows, keys, p_drop: float):
     """wx: [I, 4, H]; wh: [H, 4, H]; b: [4, H]; keys: [1, 8]."""
     gates = []

@@ -19,6 +19,7 @@ import traceback
 import jax
 
 from repro.configs import ALIASES, get_config
+from repro.kernels import compat
 from repro.launch import analysis, mesh as mesh_lib, specs
 from repro.models.config import SHAPES, shape_applicable
 
@@ -61,7 +62,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
             job = specs.train_job(cfg, shape, mesh, microbatches=microbatches)
         if SHAPES[shape].kind == "decode" and "kv8" in opts:
             job = specs.decode_job(cfg, shape, mesh, kv_quant=True)
-        with opt_stack, jax.set_mesh(mesh):
+        with opt_stack, compat.set_mesh(mesh):
             lowered = jax.jit(job.fn, in_shardings=job.in_shardings,
                               out_shardings=job.out_shardings).lower(*job.args)
             t_lower = time.time() - t0
@@ -131,7 +132,7 @@ def run_probes(cfg, shape: str, mesh, opts: tuple = ()) -> dict:
     with stack, L.attention_override(**specs._attn_blocks_for(cell.seq_len)):
         for pr in specs.probe_jobs(cfg, shape, mesh,
                                    kv_quant="kv8" in opts):
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 compiled = jax.jit(
                     pr.fn, in_shardings=pr.in_shardings).lower(
                         *pr.args).compile()

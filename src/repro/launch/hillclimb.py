@@ -16,6 +16,7 @@ import json
 import jax
 
 from repro.configs import ALIASES, get_config
+from repro.kernels import compat
 from repro.launch import analysis, mesh as mesh_lib, specs
 from repro.models import backbone, layers, moe
 from repro.models.config import SHAPES
@@ -67,7 +68,7 @@ def measure(arch: str, shape: str, variants: set[str], *,
                                        kv_quant="kv8" in variants):
                 if probe_filter and probe_filter not in pr.name:
                     continue
-                with jax.set_mesh(mesh):
+                with compat.set_mesh(mesh):
                     compiled = jax.jit(
                         pr.fn, in_shardings=pr.in_shardings).lower(
                             *pr.args).compile()

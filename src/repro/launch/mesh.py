@@ -8,22 +8,18 @@ slow-ICI/DCN dimension; only data parallelism (gradient reduce) crosses it.
 
 from __future__ import annotations
 
-import jax
+from repro.kernels import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh with the same axis names (CPU tests / smoke runs)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def axis_sizes(mesh) -> dict[str, int]:

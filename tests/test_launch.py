@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
+from repro.kernels import compat
 from repro.launch import analysis, mesh as mesh_lib, specs
 from repro.models import backbone
 from repro.models.config import SHAPES
@@ -100,7 +101,7 @@ class TestJobsOnHostMesh:
         mc.SHAPES["tiny"] = tiny
         try:
             job = train_job(cfg, "tiny", mesh)
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 compiled = jax.jit(job.fn, in_shardings=job.in_shardings,
                                    out_shardings=job.out_shardings
                                    ).lower(*job.args).compile()
@@ -111,7 +112,7 @@ class TestJobsOnHostMesh:
             opt = optimizer.init(params)
             batch = {"tokens": jnp.zeros((4, 16), jnp.int32),
                      "targets": jnp.zeros((4, 16), jnp.int32)}
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 p2, o2, metrics = compiled(params, opt, batch,
                                            jnp.zeros((), jnp.int32))
             assert np.isfinite(float(metrics["loss"]))

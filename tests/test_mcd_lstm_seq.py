@@ -1,0 +1,202 @@
+"""Sequence-fused MCD-LSTM kernel vs per-step kernel scan vs jnp oracle.
+
+The contract under test (docs/kernels.md): for the same ``gate_keys`` streams
+the sequence kernel draws bit-identical masks to the per-step kernel and the
+reference, and its (h, c) trajectory matches within fp tolerance for any T.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autoencoder as ae, cells, classifier as clf, mcd, rnn
+from repro.kernels import mcd_lstm, mcd_lstm_seq, ops, ref
+
+SEED, LAYER = 11, 2
+
+
+def _layer(b, t, i, h, key=0):
+    ks = jax.random.split(jax.random.key(key), 3)
+    wx = jax.random.normal(ks[0], (i, 4, h)) * 0.1
+    wh = jax.random.normal(ks[1], (h, 4, h)) * 0.1
+    bias = jax.random.normal(ks[2], (4, h)) * 0.1
+    x_seq = jax.random.normal(jax.random.key(key + 1), (b, t, i))
+    rows = jnp.arange(b, dtype=jnp.uint32) + 17
+    return x_seq, wx, wh, bias, rows
+
+
+class TestSeqKernel:
+    @pytest.mark.parametrize("t", [1, 8, 33])
+    @pytest.mark.parametrize("p", [0.0, 0.125, 0.5])
+    def test_matches_ref_and_step_kernel(self, t, p):
+        b, i, h = 8, 48, 32
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_lstm.gate_keys(SEED, LAYER)
+        ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(x_seq, wx, wh, bias, rows,
+                                               keys, p)
+        yr, hr, cr = ref.mcd_lstm_seq(x_seq, wx, wh, bias, rows, keys, p)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(hr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(cT), np.asarray(cr),
+                                   rtol=1e-5, atol=1e-5)
+        ys2, (h2, c2) = ops.fused_lstm_layer(wx, wh, bias, x_seq, rows,
+                                             SEED, LAYER, p)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(ys2),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(cT), np.asarray(c2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_mask_streams_bit_identical(self):
+        """With x ≡ 1 and heavy dropout the output separates mask patterns:
+        any bit flip vs the reference stream would change a gate matmul
+        input by ±scale and show up far above fp tolerance."""
+        b, t, i, h = 8, 5, 64, 32
+        _, wx, wh, bias, rows = _layer(b, t, i, h)
+        x_seq = jnp.ones((b, t, i))
+        keys = mcd_lstm.gate_keys(SEED, LAYER)
+        ys, _, _ = mcd_lstm_seq.mcd_lstm_seq(x_seq, wx, wh, bias, rows,
+                                             keys, 0.5)
+        yr, _, _ = ref.mcd_lstm_seq(x_seq, wx, wh, bias, rows, keys, 0.5)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_masks_tied_across_time(self):
+        """Constant input ⇒ step 2 equals step 1 only if both steps drew the
+        same masks (h changes between steps, so compare two constant runs)."""
+        b, i, h = 4, 32, 32
+        _, wx, wh, bias, rows = _layer(b, 2, i, h)
+        x1 = jnp.ones((b, 1, i))
+        x2 = jnp.ones((b, 2, i))
+        keys = mcd_lstm.gate_keys(SEED, LAYER)
+        ys1, h1, c1 = mcd_lstm_seq.mcd_lstm_seq(x1, wx, wh, bias, rows,
+                                                keys, 0.25)
+        ys2, _, _ = mcd_lstm_seq.mcd_lstm_seq(x2, wx, wh, bias, rows,
+                                              keys, 0.25)
+        # first step identical; second step = step-kernel applied to (h1, c1)
+        np.testing.assert_allclose(np.asarray(ys1[:, 0]), np.asarray(ys2[:, 0]),
+                                   rtol=1e-6, atol=1e-6)
+        h2, _ = mcd_lstm.mcd_lstm_step(x2[:, 1], h1, c1, wx, wh, bias, rows,
+                                       keys, 0.25)
+        np.testing.assert_allclose(np.asarray(ys2[:, 1]), np.asarray(h2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_odd_batch_blocks(self):
+        """block_b that does not divide B falls back to a divisor."""
+        b, t, i, h = 6, 4, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_lstm.gate_keys(SEED, LAYER)
+        ys, _, _ = mcd_lstm_seq.mcd_lstm_seq(x_seq, wx, wh, bias, rows, keys,
+                                             0.125, block_b=4)
+        yr, _, _ = ref.mcd_lstm_seq(x_seq, wx, wh, bias, rows, keys, 0.125)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestRunStackBackends:
+    @pytest.mark.parametrize("placement", ["YN", "NNN", "YYY"])
+    @pytest.mark.parametrize("backend", ["pallas_step", "pallas_seq"])
+    def test_stack_matches_reference(self, placement, backend):
+        cfg = mcd.MCDConfig(p=0.125, placement=placement, seed=5)
+        hiddens = (16, 16, 16)
+        params = rnn.init_stack(jax.random.key(0), 4, hiddens)
+        x = jax.random.normal(jax.random.key(1), (6, 9, 4))
+        rows = jnp.arange(6, dtype=jnp.uint32)
+        masks = rnn.sample_stack_masks(cfg, rows, 4, hiddens)
+        out0, (h0, c0) = rnn.run_stack(params, x, masks, cfg.p)
+        out1, (h1, c1) = rnn.run_stack(params, x, masks, cfg.p,
+                                       backend=backend, rows=rows,
+                                       seed=cfg.seed)
+        np.testing.assert_allclose(np.asarray(out0), np.asarray(out1),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h0), np.asarray(h1),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_p_zero_ignores_masks(self):
+        cfg = mcd.MCDConfig(p=0.0, placement="YY", seed=5)
+        params = rnn.init_stack(jax.random.key(0), 4, (16,))
+        x = jax.random.normal(jax.random.key(1), (4, 7, 4))
+        rows = jnp.arange(4, dtype=jnp.uint32)
+        masks = rnn.sample_stack_masks(cfg, rows, 4, (16,))
+        out0, _ = rnn.run_stack(params, x, masks, cfg.p)
+        out1, _ = rnn.run_stack(params, x, masks, cfg.p, backend="pallas_seq",
+                                rows=rows, seed=cfg.seed)
+        np.testing.assert_allclose(np.asarray(out0), np.asarray(out1),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_mask_plan_matches_sampled_masks(self):
+        """stack_mask_plan (no tensors) == sample_stack_masks on pallas path."""
+        cfg = mcd.MCDConfig(p=0.125, placement="YN", seed=5)
+        hiddens = (16, 16, 16)
+        params = rnn.init_stack(jax.random.key(0), 4, hiddens)
+        x = jax.random.normal(jax.random.key(1), (6, 9, 4))
+        rows = jnp.arange(6, dtype=jnp.uint32)
+        sampled = rnn.sample_stack_masks(cfg, rows, 4, hiddens)
+        plan = rnn.stack_mask_plan(cfg, len(hiddens))
+        assert [zx is None for zx, _ in plan] == \
+            [zx is None for zx, _ in sampled]
+        out0, _ = rnn.run_stack(params, x, sampled, cfg.p,
+                                backend="pallas_seq", rows=rows, seed=cfg.seed)
+        out1, _ = rnn.run_stack(params, x, plan, cfg.p, backend="pallas_seq",
+                                rows=rows, seed=cfg.seed)
+        np.testing.assert_array_equal(np.asarray(out0), np.asarray(out1))
+
+    def test_mask_plan_rejected_by_reference_backend(self):
+        params = rnn.init_stack(jax.random.key(0), 4, (8,))
+        x = jnp.zeros((2, 3, 4))
+        plan = rnn.stack_mask_plan(mcd.MCDConfig(p=0.125, placement="Y"), 1)
+        with pytest.raises(ValueError, match="sample_stack_masks"):
+            rnn.run_stack(params, x, plan, 0.125)
+
+    def test_backend_validation(self):
+        params = rnn.init_stack(jax.random.key(0), 4, (8,))
+        x = jnp.zeros((2, 3, 4))
+        with pytest.raises(ValueError, match="backend"):
+            rnn.run_stack(params, x, [(None, None)], 0.0, backend="bogus",
+                          rows=jnp.arange(2, dtype=jnp.uint32))
+        with pytest.raises(ValueError, match="rows"):
+            rnn.run_stack(params, x, [(None, None)], 0.0,
+                          backend="pallas_seq")
+
+    def test_classifier_partial_bayesian_end_to_end(self):
+        cfg = clf.ClassifierConfig(
+            hidden=16, num_layers=3,
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", seed=5))
+        params = clf.init(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (6, 12, 1))
+        rows = jnp.arange(6, dtype=jnp.uint32)
+        want = clf.apply(params, x, rows, cfg)
+        for be in ("pallas_step", "pallas_seq"):
+            got = clf.apply(params, x, rows, cfg, backend=be)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+
+
+    @pytest.mark.parametrize("placement", ["YNYN", "YNNY"])
+    def test_autoencoder_decoder_offset_end_to_end(self, placement):
+        """Guards the decoder's layer_offset: a pallas decoder drawing the
+        encoder's mask streams would diverge from the reference here."""
+        cfg = ae.AutoencoderConfig(
+            hidden=16, num_layers=2,
+            mcd=mcd.MCDConfig(p=0.125, placement=placement, seed=7))
+        params = ae.init(jax.random.key(2), cfg)
+        x = jax.random.normal(jax.random.key(3), (5, 10, 1))
+        rows = jnp.arange(5, dtype=jnp.uint32)
+        m0, lv0 = ae.apply(params, x, rows, cfg)
+        for be in ("pallas_step", "pallas_seq"):
+            m, lv = ae.apply(params, x, rows, cfg, backend=be)
+            np.testing.assert_allclose(np.asarray(m), np.asarray(m0),
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(lv), np.asarray(lv0),
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_gate_stacked_roundtrip():
+    params = cells.init_lstm(jax.random.key(0), 5, 8)
+    wx4, wh4, b = cells.gate_stacked(params)
+    assert wx4.shape == (5, 4, 8) and wh4.shape == (8, 4, 8)
+    np.testing.assert_array_equal(np.asarray(jnp.moveaxis(wx4, 1, 0)),
+                                  np.asarray(params.wx))
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(params.b))
