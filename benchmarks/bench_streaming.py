@@ -1,0 +1,73 @@
+"""Streaming session-serving throughput: (sessions, chunk_len, S) sweep.
+
+Measures ``repro.serve.StreamingEngine.step`` wall-clock per tick and
+reports samples/sec — signal timesteps served per second across all
+sessions (each timestep is decoded by S MC chains, so chain-timesteps/sec
+= samples/sec × S).  On CPU the Pallas backend runs in interpret mode, so
+absolute numbers are proxies; the shape of the sweep (batching many
+sessions into one launch vs serving them one by one) is what transfers to
+TPU.  The ``solo`` rows serve the same load one session per launch — the
+gap to the batched row is the session-batching win.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import classifier as clf, mcd
+from repro.serve import StreamingEngine
+
+
+def _engine(n_sessions: int, s: int, backend: str):
+    cfg = clf.ClassifierConfig(
+        hidden=8, num_layers=2,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s, seed=0))
+    params = clf.init(jax.random.key(0), cfg)
+    return StreamingEngine(params, cfg, backend=backend,
+                           max_sessions=n_sessions)
+
+
+def _stream_tick(eng, chunks):
+    res = eng.step(chunks)
+    jax.block_until_ready([r.summary.probs for r in res.values()])
+    return res
+
+
+def sweep():
+    backend = "pallas_seq"
+    for n_sessions, chunk_len, s in ((1, 20, 4), (4, 20, 4), (8, 20, 4),
+                                     (4, 70, 4), (4, 20, 8)):
+        eng = _engine(n_sessions, s, backend)
+        sigs = {f"s{k}": jax.random.normal(jax.random.key(k), (chunk_len, 1))
+                for k in range(n_sessions)}
+        for k in range(n_sessions):
+            eng.open_session(f"s{k}")
+        us = common.time_call(lambda: _stream_tick(eng, sigs),
+                              warmup=1, iters=3)
+        samples_per_s = n_sessions * chunk_len / (us * 1e-6)
+        common.emit(
+            f"stream.batched.N{n_sessions}.L{chunk_len}.S{s}", us,
+            f"samples_per_s={samples_per_s:.0f};"
+            f"chain_steps_per_s={samples_per_s * s:.0f}")
+
+        # same load, one session per launch (no session batching)
+        solo = _engine(n_sessions, s, backend)
+        for k in range(n_sessions):
+            solo.open_session(f"s{k}")
+        us_solo = common.time_call(
+            lambda: [_stream_tick(solo, {k: v}) for k, v in sigs.items()],
+            warmup=1, iters=3)
+        common.emit(
+            f"stream.solo.N{n_sessions}.L{chunk_len}.S{s}", us_solo,
+            f"samples_per_s={n_sessions * chunk_len / (us_solo * 1e-6):.0f};"
+            f"batching_speedup={us_solo / us:.2f}x")
+
+
+def run():
+    sweep()
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV per benchmark line.
   table4       bench_latency         (CPU measured + FPGA/TPU modeled)
   table5/6     bench_opt_modes       (optimization framework outputs)
   kernels      bench_kernels         (fused vs unfused)
+  streaming    bench_streaming       (stateful session serving sweep)
   roofline     roofline              (dry-run derived terms, all 40 cells)
 """
 
@@ -19,7 +20,8 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_dse_sweep, bench_kernels, bench_latency,
                             bench_opt_modes, bench_quantization,
-                            bench_resource_model, bench_sampling, roofline)
+                            bench_resource_model, bench_sampling,
+                            bench_streaming, roofline)
     benches = [
         ("dse_sweep", bench_dse_sweep),
         ("sampling", bench_sampling),
@@ -28,6 +30,7 @@ def main() -> None:
         ("latency", bench_latency),
         ("opt_modes", bench_opt_modes),
         ("kernels", bench_kernels),
+        ("streaming", bench_streaming),
         ("roofline", roofline),
     ]
     failed = 0

@@ -52,7 +52,9 @@ def init(key: jax.Array, cfg: AutoencoderConfig, dtype=jnp.float32) -> dict[str,
 
 
 def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
-          cfg: AutoencoderConfig, *, backend: str = "reference"):
+          cfg: AutoencoderConfig, *, backend: str = "reference",
+          initial_state=None, lengths: jax.Array | None = None,
+          return_state: bool = False):
     """Forward pass for one set of MCD masks.
 
     Args:
@@ -60,8 +62,16 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
       rows: [B] global (sample·batch) row ids keying the mask streams.
       backend: stack execution path (see :func:`repro.core.rnn.run_stack`);
         all backends draw the same masks.
+      initial_state: per-layer encoder ``(h, c)`` list from a previous chunk
+        (streaming resumption — the running bottleneck keeps integrating).
+      lengths: per-row valid lengths when ragged chunks pad to a common T.
+      return_state: also return the per-layer encoder states to carry.
     Returns:
-      (mean [B, T, I], log_var [B, T, I] or None)
+      (mean [B, T, I], log_var [B, T, I] or None)[, encoder states].
+      When streaming, each chunk is reconstructed from the *running*
+      bottleneck h_T (encoder state carries across chunks; the decoder
+      replays the current bottleneck over the chunk's T — per-chunk
+      reconstruction of an unbounded signal).
     """
     T = x_seq.shape[1]
     if backend == "reference":
@@ -78,19 +88,28 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
                                         layer_offset=cfg.num_layers)
     # Encode → bottleneck h_T ∈ R^{H/2}; the decoder starts only after the
     # encoder finishes (paper: latency = 2 × Lat_design for the AE).
-    _, (h_T, _) = rnn.run_stack(params["encoder"], x_seq, enc_masks,
-                                cfg.mcd.p, return_sequence=False,
-                                backend=backend, rows=rows, seed=cfg.mcd.seed)
-    # Repeat the encoding T times (cached-replay in hardware).
+    _, enc_states = rnn.run_stack(params["encoder"], x_seq, enc_masks,
+                                  cfg.mcd.p, return_sequence=False,
+                                  backend=backend, rows=rows,
+                                  seed=cfg.mcd.seed,
+                                  initial_state=initial_state,
+                                  lengths=lengths, return_all_states=True)
+    h_T = enc_states[-1][0]
+    # Repeat the encoding T times (cached-replay in hardware).  The decoder
+    # is replayed fresh per chunk — only encoder state streams forward — but
+    # it inherits `lengths` so streaming stays on the pinned graph family
+    # end-to-end (rows past their own length are sliced off by the caller).
     dec_in = jnp.broadcast_to(h_T[:, None, :], (h_T.shape[0], T, h_T.shape[1]))
     dec_out, _ = rnn.run_stack(params["decoder"], dec_in, dec_masks, cfg.mcd.p,
                                backend=backend, rows=rows, seed=cfg.mcd.seed,
-                               layer_offset=cfg.num_layers)
+                               layer_offset=cfg.num_layers, lengths=lengths)
     y = linear.dense(params["head"], dec_out)
     if cfg.heteroscedastic:
         mean, log_var = jnp.split(y, 2, axis=-1)
-        return mean, jnp.clip(log_var, -10.0, 10.0)
-    return y, None
+        out = mean, jnp.clip(log_var, -10.0, 10.0)
+    else:
+        out = y, None
+    return (*out, enc_states) if return_state else out
 
 
 def gaussian_nll(mean: jax.Array, log_var: jax.Array | None,

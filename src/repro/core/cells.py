@@ -43,6 +43,19 @@ def init_lstm(key: jax.Array, in_dim: int, hidden: int,
     return LSTMParams(wx, wh, b)
 
 
+def freeze_rows(t, lengths, h_new, c_new, h_old, c_old):
+    """Per-row streaming freeze: keep the old carry once ``t >= lengths``.
+
+    Single source for the ragged-chunk select used by the reference scan,
+    the step-kernel scan and the sequence-kernel oracle.  The exact
+    formulation (one ``<`` compare, two selects on the *new* values) is part
+    of the bit-identity contract across backends — see docs/kernels.md
+    "numerics pin"; don't restate it inline elsewhere.
+    """
+    live = (t < lengths.astype(jnp.int32))[:, None]
+    return jnp.where(live, h_new, h_old), jnp.where(live, c_new, c_old)
+
+
 def gate_stacked(params: LSTMParams):
     """Pallas-kernel weight layout: ``[4, in, H] → ([in, 4, H], [H, 4, H], b)``.
 

@@ -31,11 +31,20 @@ def init(key: jax.Array, cfg: ClassifierConfig, dtype=jnp.float32) -> dict[str, 
 
 
 def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
-          cfg: ClassifierConfig, *, backend: str = "reference") -> jax.Array:
+          cfg: ClassifierConfig, *, backend: str = "reference",
+          initial_state=None, lengths: jax.Array | None = None,
+          return_state: bool = False):
     """Logits [B, num_classes] for one set of MCD masks.
 
     ``backend`` selects the encoder execution path (see
     :func:`repro.core.rnn.run_stack`); all backends draw the same masks.
+
+    Streaming resumption: ``initial_state`` (per-layer ``(h, c)`` list from a
+    previous chunk), ``lengths`` (per-row valid chunk lengths when ragged
+    chunks are padded to a common T) and ``return_state=True`` (also return
+    the per-layer encoder states to carry into the next chunk) let a session
+    classify an unbounded signal chunk-by-chunk; the logits then summarize
+    the signal *up to each row's last real sample*.
     """
     hiddens = (cfg.hidden,) * cfg.num_layers
     # Pallas backends regenerate masks in-kernel — don't materialize them.
@@ -43,7 +52,10 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
                                     dtype=x_seq.dtype)
              if backend == "reference"
              else rnn.stack_mask_plan(cfg.mcd, cfg.num_layers))
-    _, (h_T, _) = rnn.run_stack(params["encoder"], x_seq, masks, cfg.mcd.p,
-                                return_sequence=False, backend=backend,
-                                rows=rows, seed=cfg.mcd.seed)
-    return linear.dense(params["head"], h_T)
+    _, states = rnn.run_stack(params["encoder"], x_seq, masks, cfg.mcd.p,
+                              return_sequence=False, backend=backend,
+                              rows=rows, seed=cfg.mcd.seed,
+                              initial_state=initial_state, lengths=lengths,
+                              return_all_states=True)
+    logits = linear.dense(params["head"], states[-1][0])
+    return (logits, states) if return_state else logits

@@ -74,7 +74,9 @@ def stack_mask_plan(cfg: mcd.MCDConfig, n_layers: int, *,
 def run_stack(params: Sequence[cells.LSTMParams], x_seq: jax.Array,
               masks, p: float, *, return_sequence: bool = True,
               backend: str = "reference", rows: jax.Array | None = None,
-              seed=0, layer_offset: int = 0, interpret: bool | None = None):
+              seed=0, layer_offset: int = 0, interpret: bool | None = None,
+              initial_state=None, lengths: jax.Array | None = None,
+              return_all_states: bool = False):
     """Run a cascaded LSTM stack over a [B, T, I] sequence.
 
     Backends (``repro.kernels.ops.LSTM_BACKENDS``):
@@ -88,39 +90,72 @@ def run_stack(params: Sequence[cells.LSTMParams], x_seq: jax.Array,
     (``cfg.seed``) and ``layer_offset``.  A layer whose ``masks`` entry is
     ``(None, None)`` runs with p=0 on every backend.
 
+    Streaming session state (all three backends):
+      * ``initial_state``: per-layer list of ``(h, c)`` pairs resuming a
+        previous chunk's carry (``None`` entries or ``None`` itself = zeros).
+        Feed back exactly what ``return_all_states=True`` returned — the
+        carry dtypes round-trip losslessly, keeping chunked == unchunked
+        bit-identical per backend (Pallas backends hand back ``c`` in fp32,
+        the 32-bit cell-state policy; reference in its carry dtype).
+      * ``lengths``: int [B] freezing each row's state once ``t >= length``
+        so ragged chunks can pad to a common T in one batched launch.
+      * ``return_all_states=True``: the second return value becomes the full
+        per-layer ``[(h_T, c_T), ...]`` list (what a session must store).
+
     Returns (outputs [B, T, H_last] if return_sequence else None,
-             (h_T, c_T) of the last layer).
+             (h_T, c_T) of the last layer — or the per-layer list).
     """
     if backend != "reference":
         return _run_stack_pallas(params, x_seq, masks, p, backend=backend,
                                  return_sequence=return_sequence, rows=rows,
                                  seed=seed, layer_offset=layer_offset,
-                                 interpret=interpret)
+                                 interpret=interpret,
+                                 initial_state=initial_state, lengths=lengths,
+                                 return_all_states=return_all_states)
     if any(zx is IN_KERNEL_MASKS for zx, _ in masks):
         raise ValueError("stack_mask_plan() entries carry no mask values; "
                          "the reference backend needs sample_stack_masks()")
     batch = x_seq.shape[0]
     dtype = x_seq.dtype
-    carries = [(jnp.zeros((batch, pl.wh.shape[1]), dtype),
-                jnp.zeros((batch, pl.wh.shape[1]), dtype)) for pl in params]
+    carries = _seed_carries(params, initial_state, batch, dtype)
     xs = jnp.swapaxes(x_seq, 0, 1)  # [T, B, I] time-major for scan
+    varlen = lengths is not None
+    lens = lengths.astype(jnp.int32) if varlen else None
 
-    def step(carry, x_t):
+    def step(carry, xt):
+        x_t, t = xt
         new_carry = []
         inp = x_t
         for (h, c), layer_params, (zx, zh) in zip(carry, params, masks):
-            h, c = cells.lstm_step(layer_params, h, c, inp, zx, zh, p)
-            new_carry.append((h, c))
-            inp = h
+            h_new, c_new = cells.lstm_step(layer_params, h, c, inp, zx, zh, p)
+            if varlen:
+                h_new, c_new = cells.freeze_rows(t, lens, h_new, c_new, h, c)
+            new_carry.append((h_new, c_new))
+            inp = h_new
         return new_carry, (inp if return_sequence else jnp.zeros((0,), dtype))
 
-    final_carry, ys = jax.lax.scan(step, carries, xs)
+    ts = jnp.arange(x_seq.shape[1], dtype=jnp.int32)
+    final_carry, ys = jax.lax.scan(step, carries, (xs, ts))
     out = jnp.swapaxes(ys, 0, 1) if return_sequence else None
-    return out, final_carry[-1]
+    return out, (final_carry if return_all_states else final_carry[-1])
+
+
+def _seed_carries(params, initial_state, batch, dtype):
+    """Per-layer (h, c) carries: zeros, or the resumed session state as-is."""
+    carries = []
+    for i, layer_params in enumerate(params):
+        hidden = layer_params.wh.shape[-1]
+        state = initial_state[i] if initial_state is not None else None
+        if state is None:
+            state = (jnp.zeros((batch, hidden), dtype),
+                     jnp.zeros((batch, hidden), dtype))
+        carries.append(tuple(state))
+    return carries
 
 
 def _run_stack_pallas(params, x_seq, masks, p, *, backend, return_sequence,
-                      rows, seed, layer_offset, interpret):
+                      rows, seed, layer_offset, interpret, initial_state,
+                      lengths, return_all_states):
     """Kernel-backed stack: layers run whole-sequence, one after another.
 
     The wavefront trick above exists to fuse the scan body across layers; the
@@ -137,13 +172,22 @@ def _run_stack_pallas(params, x_seq, masks, p, *, backend, return_sequence,
                          "(the same ids passed to sample_stack_masks)")
     seq = backend == "pallas_seq"
     inp = x_seq
-    carry = None
+    states = []
     for i, (layer_params, (zx, _)) in enumerate(zip(params, masks)):
         p_eff = p if zx is not None else 0.0
+        state0 = initial_state[i] if initial_state is not None else None
         inp, carry = ops.lstm_stack_layer(*layer_params, inp, rows, seed,
                                           layer_offset + i, p_eff, seq=seq,
+                                          initial_state=state0,
+                                          lengths=lengths,
                                           interpret=interpret)
+        states.append(carry)
+    out = inp if return_sequence else None
+    if return_all_states:
+        # Session-resume form: c stays fp32 (the kernels' carry dtype), so a
+        # chunk boundary round-trips the cell state losslessly.
+        return out, states
     # Match the reference carry contract: c in the input dtype (the kernels
     # hand back their fp32 accumulator).
-    hT, cT = carry
-    return (inp if return_sequence else None), (hT, cT.astype(x_seq.dtype))
+    hT, cT = states[-1]
+    return out, (hT, cT.astype(x_seq.dtype))

@@ -86,10 +86,15 @@ def mcd_lstm_step(x: jax.Array, h: jax.Array, c: jax.Array, wx: jax.Array,
     B, I = x.shape
     H = h.shape[1]
     bb, bh = min(block_b, B), min(block_h, H)
-    assert B % bb == 0 and H % bh == 0, (B, bb, H, bh)
+    assert H % bh == 0, (H, bh)
     rows2 = rows.astype(jnp.int32).reshape(B, 1)
-    grid = (B // bb, H // bh)
-    return pl.pallas_call(
+    pad = -B % bb        # pad to the block multiple (odd serving batches),
+    if pad:              # same fallback as the sequence kernel
+        zb = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        x, h, c, rows2 = map(zb, (x, h, c, rows2))
+    Bp = B + pad
+    grid = (Bp // bb, H // bh)
+    out = pl.pallas_call(
         functools.partial(_kernel, p_drop=p_drop, in_dim=I, hidden=H),
         grid=grid,
         in_specs=[
@@ -107,9 +112,12 @@ def mcd_lstm_step(x: jax.Array, h: jax.Array, c: jax.Array, wx: jax.Array,
             pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, H), h.dtype),
-            jax.ShapeDtypeStruct((B, H), c.dtype),
+            jax.ShapeDtypeStruct((Bp, H), h.dtype),
+            jax.ShapeDtypeStruct((Bp, H), c.dtype),
         ],
         compiler_params=compat.compiler_params("parallel", "parallel"),
         interpret=interpret,
     )(rows2, keys, x, h, c, wx, wh, b)
+    if pad:
+        out = [o[:B] for o in out]
+    return out

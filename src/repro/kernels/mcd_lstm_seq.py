@@ -25,6 +25,19 @@ sequentially-revisited grid programs would either break the dependency
 One program therefore owns the full hidden width of its batch tile — fine for
 the paper's RNN regime (H up to a few hundred; weights ≈ 8·H·(I+H) bytes of
 VMEM in bf16).
+
+Streaming extensions (continuous-monitoring serving):
+
+* ``h0`` / ``c0`` seed the scratch at ``t == 0`` instead of zeros, so a
+  session resumes mid-sequence exactly where a previous chunk left off.
+  ``c0`` is consumed in fp32 — the fp32 cell state round-trips losslessly
+  across chunk boundaries, keeping chunked == unchunked bit-identical.
+* ``lengths`` freezes a row's ``(h, c)`` once ``t >= lengths[row]``: ragged
+  chunks from concurrent sessions pad to a common T and still come back with
+  each row's state at *its own* last real step, in one launch.
+* A ``block_b`` that does not divide B pads the batch up to the next block
+  multiple (outputs sliced back) instead of degrading to ``bb = 1`` for prime
+  batch sizes.
 """
 
 from __future__ import annotations
@@ -40,15 +53,18 @@ from repro.kernels import compat
 from repro.kernels.mcd_lstm import _gate_mask
 
 
-def _kernel(rows_ref, keys_ref, x_ref, wx_ref, wh_ref, b_ref,
+def _kernel(rows_ref, keys_ref, lens_ref, x_ref, h0_ref, c0_ref,
+            wx_ref, wh_ref, b_ref,
             ys_ref, ht_ref, ct_ref, h_scr, c_scr, *,
-            p_drop: float, in_dim: int, hidden: int):
+            p_drop: float, in_dim: int, hidden: int, varlen: bool):
     t = pl.program_id(1)
 
     @pl.when(t == 0)
     def _reset():
-        h_scr[...] = jnp.zeros_like(h_scr)
-        c_scr[...] = jnp.zeros_like(c_scr)
+        # Carried-state entry point: a fresh sequence passes zeros here; a
+        # resumed session passes the previous chunk's (h_T, c_T).
+        h_scr[...] = h0_ref[...]
+        c_scr[...] = c0_ref[...]
 
     rows = rows_ref[...][:, 0]
     x = x_ref[:, 0, :]              # [bb, I] — this step's input slice
@@ -75,6 +91,12 @@ def _kernel(rows_ref, keys_ref, x_ref, wx_ref, wh_ref, b_ref,
     o = jax.nn.sigmoid(gates[3])
     c_new = f * c_scr[...] + i * g_
     h_new = (o * jnp.tanh(c_new)).astype(h_scr.dtype)
+    if varlen:
+        # Rows whose chunk ended before this step keep their carried state —
+        # the final (h_T, c_T) outputs are each row's state at its own length.
+        live = t < lens_ref[...]                  # [bb, 1]
+        c_new = jnp.where(live, c_new, c_scr[...])
+        h_new = jnp.where(live, h_new, h_scr[...])
     c_scr[...] = c_new
     h_scr[...] = h_new
     ys_ref[:, 0, :] = h_new.astype(ys_ref.dtype)
@@ -85,28 +107,50 @@ def _kernel(rows_ref, keys_ref, x_ref, wx_ref, wh_ref, b_ref,
 @functools.partial(jax.jit, static_argnames=("p_drop", "block_b", "interpret"))
 def mcd_lstm_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
                  rows: jax.Array, keys: jax.Array, p_drop: float, *,
+                 h0: jax.Array | None = None, c0: jax.Array | None = None,
+                 lengths: jax.Array | None = None,
                  block_b: int = 128, interpret: bool = True):
-    """Sequence-fused Bayesian LSTM layer from (h, c) = 0.
+    """Sequence-fused Bayesian LSTM layer, optionally resuming carried state.
 
     x_seq: [B, T, I]; wx: [I, 4, H]; wh: [H, 4, H]; b: [4, H];
     rows: [B] mask row ids; keys: [1, 8] from
     :func:`repro.kernels.mcd_lstm.gate_keys`.
-    Returns (ys [B, T, H], h_T [B, H], c_T [B, H] fp32).
+    h0 [B, H] / c0 [B, H] seed the carried state (zeros when omitted — a
+    fresh sequence); c0 is accumulated in fp32 regardless of input dtype.
+    lengths [B] (int) freezes a row's state at its own chunk length so ragged
+    chunks can pad to a common T in one launch.
+    Returns (ys [B, T, H], h_T [B, H], c_T [B, H] fp32); with ``lengths``,
+    (h_T, c_T) is each row's state at ``t = lengths[row]`` and
+    ``ys[:, t >= lengths[row]]`` repeats the frozen h.
     """
     B, T, I = x_seq.shape
     H = wh.shape[0]
     bb = min(block_b, B)
-    while B % bb:        # largest divisor ≤ block_b (odd serving batch sizes)
-        bb -= 1
+    varlen = lengths is not None
+    h0 = jnp.zeros((B, H), x_seq.dtype) if h0 is None else h0.astype(x_seq.dtype)
+    c0 = (jnp.zeros((B, H), jnp.float32) if c0 is None
+          else c0.astype(jnp.float32))
+    lens = (jnp.full((B,), T, jnp.int32) if lengths is None
+            else lengths.astype(jnp.int32))
     rows2 = rows.astype(jnp.int32).reshape(B, 1)
-    grid = (B // bb, T)
-    return pl.pallas_call(
-        functools.partial(_kernel, p_drop=p_drop, in_dim=I, hidden=H),
+    pad = -B % bb        # pad to the block multiple (prime/odd batch sizes)
+    if pad:
+        zb = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        x_seq, rows2, h0, c0, lens = map(zb, (x_seq, rows2, h0, c0, lens))
+    Bp = B + pad
+    lens2 = lens.reshape(Bp, 1)
+    grid = (Bp // bb, T)
+    ys, hT, cT = pl.pallas_call(
+        functools.partial(_kernel, p_drop=p_drop, in_dim=I, hidden=H,
+                          varlen=varlen),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, 1), lambda i, t: (i, 0)),        # rows
             pl.BlockSpec((1, 8), lambda i, t: (0, 0)),         # keys
+            pl.BlockSpec((bb, 1), lambda i, t: (i, 0)),        # lengths
             pl.BlockSpec((bb, 1, I), lambda i, t: (i, t, 0)),  # x_t slice
+            pl.BlockSpec((bb, H), lambda i, t: (i, 0)),        # h0
+            pl.BlockSpec((bb, H), lambda i, t: (i, 0)),        # c0 (fp32)
             pl.BlockSpec((I, 4, H), lambda i, t: (0, 0, 0)),   # wx — resident
             pl.BlockSpec((H, 4, H), lambda i, t: (0, 0, 0)),   # wh — resident
             pl.BlockSpec((4, H), lambda i, t: (0, 0)),         # bias
@@ -117,9 +161,9 @@ def mcd_lstm_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
             pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, T, H), x_seq.dtype),
-            jax.ShapeDtypeStruct((B, H), x_seq.dtype),
-            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, T, H), x_seq.dtype),
+            jax.ShapeDtypeStruct((Bp, H), x_seq.dtype),
+            jax.ShapeDtypeStruct((Bp, H), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bb, H), x_seq.dtype),    # h carry
@@ -127,4 +171,7 @@ def mcd_lstm_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
         ],
         compiler_params=compat.compiler_params("parallel", "arbitrary"),
         interpret=interpret,
-    )(rows2, keys, x_seq, wx, wh, b)
+    )(rows2, keys, lens2, x_seq, h0, c0, wx, wh, b)
+    if pad:
+        ys, hT, cT = ys[:B], hT[:B], cT[:B]
+    return ys, hT, cT

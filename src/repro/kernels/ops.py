@@ -58,46 +58,64 @@ def mcd_mask_apply(x: jax.Array, rows: jax.Array, seed, layer: int, site: int,
 @functools.partial(jax.jit, static_argnames=("p_drop", "interpret"))
 def fused_lstm_layer(wx4: jax.Array, wh4: jax.Array, b: jax.Array,
                      x_seq: jax.Array, rows: jax.Array, seed, layer: int,
-                     p_drop: float, interpret: bool | None = None):
+                     p_drop: float, h0: jax.Array | None = None,
+                     c0: jax.Array | None = None,
+                     lengths: jax.Array | None = None,
+                     interpret: bool | None = None):
     """Scan the fused cell kernel over time (paper Fig. 5 TS pipelining).
 
     wx4: [I, 4, H]; wh4: [H, 4, H]; b: [4, H]; x_seq: [B, T, I].
-    Returns (outputs [B, T, H], (h_T, c_T)).
+    ``h0``/``c0`` resume carried state (zeros when omitted); ``lengths``
+    freezes each row's state at its own chunk length (ragged batching).
+    Returns (outputs [B, T, H], (h_T, c_T fp32)).
     """
     if interpret is None:
         interpret = default_interpret()
     B, T, _ = x_seq.shape
     H = wh4.shape[0]
     keys = mcd_lstm.gate_keys(seed, layer)
-    h0 = jnp.zeros((B, H), x_seq.dtype)
-    c0 = jnp.zeros((B, H), jnp.float32)
+    h0 = jnp.zeros((B, H), x_seq.dtype) if h0 is None else h0.astype(x_seq.dtype)
+    c0 = (jnp.zeros((B, H), jnp.float32) if c0 is None
+          else c0.astype(jnp.float32))
 
-    def step(carry, x_t):
+    def step(carry, xt):
         h, c = carry
-        h, c = mcd_lstm.mcd_lstm_step(x_t, h, c, wx4, wh4, b, rows, keys,
-                                      p_drop, interpret=interpret)
-        return (h, c), h
+        x_t, t = xt
+        h_new, c_new = mcd_lstm.mcd_lstm_step(x_t, h, c, wx4, wh4, b, rows,
+                                              keys, p_drop,
+                                              interpret=interpret)
+        if lengths is not None:
+            h_new, c_new = cells.freeze_rows(t, lengths, h_new, c_new, h, c)
+        return (h_new, c_new), h_new
 
-    (hT, cT), ys = jax.lax.scan(step, (h0, c0), jnp.swapaxes(x_seq, 0, 1))
+    ts = jnp.arange(T, dtype=jnp.int32)
+    (hT, cT), ys = jax.lax.scan(step, (h0, c0),
+                                (jnp.swapaxes(x_seq, 0, 1), ts))
     return jnp.swapaxes(ys, 0, 1), (hT, cT)
 
 
 @functools.partial(jax.jit, static_argnames=("p_drop", "interpret"))
 def fused_lstm_seq(wx4: jax.Array, wh4: jax.Array, b: jax.Array,
                    x_seq: jax.Array, rows: jax.Array, seed, layer: int,
-                   p_drop: float, interpret: bool | None = None):
+                   p_drop: float, h0: jax.Array | None = None,
+                   c0: jax.Array | None = None,
+                   lengths: jax.Array | None = None,
+                   interpret: bool | None = None):
     """One kernel launch for the whole sequence (paper Fig. 5 wave pipelining).
 
     Same contract as :func:`fused_lstm_layer` — wx4: [I, 4, H]; wh4: [H, 4, H];
     b: [4, H]; x_seq: [B, T, I]; returns (outputs [B, T, H], (h_T, c_T)) —
     but the weights stay VMEM-resident across all T timesteps instead of being
-    re-fetched per scan iteration.
+    re-fetched per scan iteration.  ``h0``/``c0``/``lengths`` carry streaming
+    session state into and out of the launch (see ``mcd_lstm_seq``).
     """
     if interpret is None:
         interpret = default_interpret()
     keys = mcd_lstm.gate_keys(seed, layer)
     ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(x_seq, wx4, wh4, b, rows, keys,
-                                           p_drop, interpret=interpret)
+                                           p_drop, h0=h0, c0=c0,
+                                           lengths=lengths,
+                                           interpret=interpret)
     return ys, (hT, cT)
 
 
@@ -105,6 +123,7 @@ def fused_lstm_seq(wx4: jax.Array, wh4: jax.Array, b: jax.Array,
 def lstm_stack_layer(wx: jax.Array, wh: jax.Array, b: jax.Array,
                      x_seq: jax.Array, rows: jax.Array, seed, layer,
                      p_drop: float, *, seq: bool,
+                     initial_state=None, lengths: jax.Array | None = None,
                      interpret: bool | None = None):
     """Core-layout entry for ``run_stack``'s Pallas backends.
 
@@ -113,9 +132,11 @@ def lstm_stack_layer(wx: jax.Array, wh: jax.Array, b: jax.Array,
     jit, so repeated calls (the S MC-sample loop) don't pay an eager
     per-call transpose.  ``layer`` is traced (it only feeds the counter-PRNG
     key fold), so same-shaped layers share one compile.  ``seq`` picks
-    sequence- vs step-fusion.
+    sequence- vs step-fusion.  ``initial_state`` is an optional ``(h0, c0)``
+    pair resuming a streaming session's carried state.
     """
     wx4, wh4, b = cells.gate_stacked(cells.LSTMParams(wx, wh, b))
+    h0, c0 = initial_state if initial_state is not None else (None, None)
     fn = fused_lstm_seq if seq else fused_lstm_layer
-    return fn(wx4, wh4, b, x_seq, rows, seed, layer, p_drop,
-              interpret=interpret)
+    return fn(wx4, wh4, b, x_seq, rows, seed, layer, p_drop, h0=h0, c0=c0,
+              lengths=lengths, interpret=interpret)

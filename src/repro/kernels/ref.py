@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import prng
+from repro.core import cells, prng
 
 
 def _mask(key, rows, n_feat: int, p_drop: float):
@@ -49,24 +49,34 @@ def decode_attention(q, k_cache, v_cache, pos):
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
-def mcd_lstm_seq(x_seq, wx, wh, b, rows, keys, p_drop: float):
-    """Sequence oracle: scan :func:`mcd_lstm_step` over T from (h, c) = 0.
+def mcd_lstm_seq(x_seq, wx, wh, b, rows, keys, p_drop: float,
+                 h0=None, c0=None, lengths=None):
+    """Sequence oracle: scan :func:`mcd_lstm_step` over T from (h0, c0).
 
     x_seq: [B, T, I]; same weight/key layout as the kernels.  Returns
     (ys [B, T, H], h_T [B, H], c_T [B, H] fp32) — masks tied across T because
-    ``keys`` never varies with t.
+    ``keys`` never varies with t.  ``h0``/``c0`` default to zeros (a fresh
+    sequence); ``lengths`` [B] freezes each row's state at its own chunk
+    length, mirroring the kernel's ragged-batch contract.
     """
     B = x_seq.shape[0]
     H = wh.shape[0]
-    h0 = jnp.zeros((B, H), x_seq.dtype)
-    c0 = jnp.zeros((B, H), jnp.float32)
+    h0 = (jnp.zeros((B, H), x_seq.dtype) if h0 is None
+          else h0.astype(x_seq.dtype))
+    c0 = (jnp.zeros((B, H), jnp.float32) if c0 is None
+          else c0.astype(jnp.float32))
 
-    def step(carry, x_t):
+    def step(carry, xt):
         h, c = carry
-        h, c = mcd_lstm_step(x_t, h, c, wx, wh, b, rows, keys, p_drop)
-        return (h, c), h
+        x_t, t = xt
+        h_new, c_new = mcd_lstm_step(x_t, h, c, wx, wh, b, rows, keys, p_drop)
+        if lengths is not None:
+            h_new, c_new = cells.freeze_rows(t, lengths, h_new, c_new, h, c)
+        return (h_new, c_new), h_new
 
-    (hT, cT), ys = jax.lax.scan(step, (h0, c0), jnp.swapaxes(x_seq, 0, 1))
+    ts = jnp.arange(x_seq.shape[1], dtype=jnp.int32)
+    (hT, cT), ys = jax.lax.scan(step, (h0, c0),
+                                (jnp.swapaxes(x_seq, 0, 1), ts))
     return jnp.swapaxes(ys, 0, 1), hT, cT
 
 

@@ -1,1 +1,7 @@
-"""serve substrate."""
+"""serve substrate: static-batch LM engine + streaming session serving."""
+
+from repro.serve.sessions import CapacityError, Session, SessionStore
+from repro.serve.stream import ChunkResult, StreamingEngine
+
+__all__ = ["CapacityError", "ChunkResult", "Session", "SessionStore",
+           "StreamingEngine"]

@@ -1,0 +1,146 @@
+"""Per-session carried state for streaming Bayesian RNN serving.
+
+The paper's target workload is *continuous* monitoring: a Bayesian LSTM
+watches an unbounded signal (ECG leads, MRI series) and emits per-window
+uncertainty.  Serving that stream chunk-by-chunk needs exactly two pieces of
+state per session, and this module owns both:
+
+* the per-layer, per-MC-chain ``(h, c)`` carry — what the sequence-fused
+  kernel's ``(h0, c0)`` operands resume from at each chunk boundary; ``c``
+  stays in fp32 on the Pallas backends (the paper's 32-bit cell-state
+  policy) so the carry round-trips losslessly and chunked == unchunked is
+  bit-identical;
+* the ``(seed, rows)`` mask-stream coordinates.  A session's row ids are
+  allocated **once at admission** and never change, so every chunk of the
+  session redraws the *same* per-gate Bernoulli masks from the counter PRNG
+  — the paper's §II-B tying across T, extended across resume boundaries.
+  Masks are tied across the whole session, not per chunk: dropping a chunk
+  boundary anywhere in the signal changes nothing about the Bayesian draw.
+
+The store itself is a plain capacity-bounded registry — admission fails fast
+when full (the engine's batch is the admission-controlled unit of work) and
+eviction returns the final session so callers can checkpoint the carry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CapacityError(RuntimeError):
+    """Admission refused: the store already holds ``max_sessions`` sessions."""
+
+
+@dataclasses.dataclass
+class Session:
+    """One monitored stream: mask coordinates + carried recurrent state."""
+
+    sid: str
+    rows: jax.Array            # [S] uint32 — fixed mask-stream row ids
+    seed: Any                  # counter-PRNG base seed (shared, engine-wide)
+    state: list | None = None  # per-layer [(h [S,H], c [S,H]), ...] or fresh
+    steps: int = 0             # timesteps consumed so far
+    chunks: int = 0            # chunks served so far
+
+    @property
+    def fresh(self) -> bool:
+        return self.state is None
+
+
+class SessionStore:
+    """Capacity-bounded registry of live streaming sessions.
+
+    ``n_samples`` is S, the number of MC chains per session: each admitted
+    session reserves S consecutive mask-stream rows from a monotone
+    allocator, so concurrent (and successive) sessions draw independent
+    masks while each session's own masks stay tied across every chunk it
+    ever streams.  Row ids are never reused after eviction — a restarted
+    session is a *new* Bayesian draw unless the caller re-attaches the
+    evicted :class:`Session` object itself.
+    """
+
+    def __init__(self, n_samples: int, seed=0, *, max_sessions: int = 64,
+                 first_row: int = 0):
+        if n_samples < 1:
+            raise ValueError(f"n_samples must be >= 1, got {n_samples}")
+        self.n_samples = int(n_samples)
+        self.seed = seed
+        self.max_sessions = int(max_sessions)
+        self._next_row = int(first_row)
+        self._sessions: dict[str, Session] = {}
+
+    def admit(self, sid: str) -> Session:
+        """Register a new stream; allocates its S mask rows for life."""
+        if sid in self._sessions:
+            raise ValueError(f"session {sid!r} already admitted")
+        if len(self._sessions) >= self.max_sessions:
+            raise CapacityError(
+                f"store full ({self.max_sessions} sessions); evict first")
+        rows = jnp.arange(self._next_row, self._next_row + self.n_samples,
+                          dtype=jnp.uint32)
+        self._next_row += self.n_samples
+        sess = Session(sid=sid, rows=rows, seed=self.seed)
+        self._sessions[sid] = sess
+        return sess
+
+    def attach(self, session: Session) -> Session:
+        """Re-admit a previously evicted :class:`Session` object.
+
+        Restores its carried state *and* its original ``(seed, rows)`` mask
+        coordinates, so the resumed stream continues the same Bayesian draw
+        (masks stay tied across the eviction gap — this is the checkpoint/
+        restore path for long-lived monitoring streams).
+        """
+        if session.sid in self._sessions:
+            raise ValueError(f"session {session.sid!r} already admitted")
+        if len(self._sessions) >= self.max_sessions:
+            raise CapacityError(
+                f"store full ({self.max_sessions} sessions); evict first")
+        if session.seed != self.seed:
+            raise ValueError(
+                f"session {session.sid!r} was drawn under seed "
+                f"{session.seed!r}, store uses {self.seed!r} — reattaching "
+                "would silently change its masks")
+        if int(session.rows.shape[0]) != self.n_samples:
+            raise ValueError(
+                f"session {session.sid!r} carries "
+                f"{int(session.rows.shape[0])} MC chains, store serves "
+                f"{self.n_samples}")
+        attached = {int(r) for r in np.asarray(session.rows)}
+        for live in self._sessions.values():
+            if attached & {int(r) for r in np.asarray(live.rows)}:
+                raise ValueError(
+                    f"session {session.sid!r} rows collide with live "
+                    f"session {live.sid!r} — same (seed, rows) would "
+                    "correlate their Bayesian draws")
+        # Future admissions must not re-allocate the attached rows either.
+        self._next_row = max(self._next_row, max(attached) + 1)
+        self._sessions[session.sid] = session
+        return session
+
+    def get(self, sid: str) -> Session:
+        try:
+            return self._sessions[sid]
+        except KeyError:
+            raise KeyError(f"unknown session {sid!r} (admitted: "
+                           f"{sorted(self._sessions)})") from None
+
+    def evict(self, sid: str) -> Session:
+        """Remove a finished stream; returns it (final carry + coordinates)."""
+        self.get(sid)                       # raises the uniform KeyError
+        return self._sessions.pop(sid)
+
+    @property
+    def active(self) -> list[str]:
+        return list(self._sessions)
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def __contains__(self, sid: str) -> bool:
+        return sid in self._sessions

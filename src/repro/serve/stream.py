@@ -1,0 +1,241 @@
+"""Streaming engine: unbounded signals, chunk-by-chunk, one batched launch.
+
+The continuous-monitoring counterpart of ``repro.serve.engine``: where the
+LM engine serves static batches of prompts, this engine serves *sessions* —
+open-ended signals (ECG leads, sensor feeds) that arrive as ragged chunks.
+Per tick it
+
+1. collects every submitted chunk, pads them to a common T,
+2. folds each session's S MC chains into the batch axis (one weight fetch
+   feeds every chain of every session — the paper's sample-wise pipelining,
+   now also *session-wise*),
+3. resumes each row's carried ``(h, c)`` through the sequence-fused kernel
+   in **one ``pallas_seq`` launch per layer**, with per-row ``lengths``
+   freezing ragged rows at their own chunk end,
+4. emits per-chunk Bayesian uncertainty (``classification_summary`` /
+   ``regression_summary``) and stores the new carry.
+
+Bit-exactness contract: streaming passes always supply ``lengths`` (even
+when every chunk has the same T).  The lengths-enabled graph family is
+bit-identical across launch sizes, chunk splits, batch composition and
+backends, so a session's results never depend on how its signal was chunked
+or on which other sessions happened to share the batch — the invariant
+``tests/test_streaming.py`` pins down.  Masks stay tied across the whole
+session via the ``(seed, rows)`` coordinates in ``repro.serve.sessions``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autoencoder as _ae, classifier as _clf
+from repro.core.uncertainty import (ClassificationSummary, RegressionSummary,
+                                    classification_summary,
+                                    regression_summary)
+from repro.serve.sessions import SessionStore
+
+
+@dataclasses.dataclass
+class ChunkResult:
+    """Per-chunk Bayesian output for one session."""
+
+    sid: str
+    length: int                # timesteps in this chunk
+    steps_total: int           # timesteps consumed by the session so far
+    summary: Any               # ClassificationSummary | RegressionSummary
+                               # (leading batch axis squeezed away)
+
+
+class StreamingEngine:
+    """Stateful session serving for the ECG classifier / autoencoder models.
+
+    Args:
+      params: model parameters (``classifier.init`` / ``autoencoder.init``).
+      cfg: the matching ``ClassifierConfig`` or ``AutoencoderConfig``; its
+        ``mcd`` block fixes S (chains per session), p, placement and seed.
+      backend: ``run_stack`` execution path; ``"pallas_seq"`` is the serving
+        hot path (weights VMEM-resident across each chunk).
+      max_sessions: admission bound on concurrently-open sessions.
+      chunk_capacity: when set, every tick launches with a **fixed shape** —
+        chunks pad to this many timesteps and the batch pads to
+        ``max_sessions`` session slots (dummy rows, length 1, discarded).
+        One jit trace / XLA compile serves every tick, whatever the ragged
+        chunk lengths or tick composition; without it each new
+        ``(max chunk len, session count)`` pair retraces.  Chunks longer
+        than the capacity are rejected.
+      interpret: forwarded to the Pallas backends (default: auto off-TPU).
+    """
+
+    def __init__(self, params, cfg, *, backend: str = "pallas_seq",
+                 max_sessions: int = 64, chunk_capacity: int | None = None,
+                 interpret: bool | None = None):
+        if isinstance(cfg, _clf.ClassifierConfig):
+            self.kind = "classifier"
+        elif isinstance(cfg, _ae.AutoencoderConfig):
+            self.kind = "autoencoder"
+        else:
+            raise TypeError(f"unsupported config type {type(cfg).__name__}")
+        self.params = params
+        self.cfg = cfg
+        self.backend = backend
+        self.interpret = interpret
+        self.chunk_capacity = chunk_capacity
+        self.max_sessions = max_sessions
+        s = cfg.mcd.n_samples if cfg.mcd.any_bayesian else 1
+        self.n_samples = max(1, s)
+        self.store = SessionStore(self.n_samples, cfg.mcd.seed,
+                                  max_sessions=max_sessions)
+
+    # -- session lifecycle ---------------------------------------------------
+    def open_session(self, sid: str):
+        """Admit a stream; its S mask rows are fixed here, for life."""
+        return self.store.admit(sid)
+
+    def close_session(self, sid: str):
+        """Evict a finished stream; returns the Session (final carry)."""
+        return self.store.evict(sid)
+
+    def attach_session(self, session):
+        """Re-admit an evicted Session (same draw: state + (seed, rows))."""
+        return self.store.attach(session)
+
+    @property
+    def active_sessions(self) -> list[str]:
+        return self.store.active
+
+    # -- serving -------------------------------------------------------------
+    def step(self, chunks: Mapping[str, Any]) -> dict[str, ChunkResult]:
+        """Serve one chunk per submitting session, in one batched pass.
+
+        ``chunks`` maps session id → ``[t, input_dim]`` (or ``[t]`` when
+        ``input_dim == 1``) signal slices; ``t`` may differ per session
+        (ragged) and must be >= 1.  Every listed session must be open.
+        Returns per-session :class:`ChunkResult`; carried state advances.
+        """
+        if not chunks:
+            return {}
+        s = self.n_samples
+        sessions, xs, lens = [], [], []
+        for sid, chunk in chunks.items():
+            sess = self.store.get(sid)
+            x = np.asarray(chunk)
+            if x.ndim == 1:
+                x = x[:, None]
+            if x.ndim != 2 or x.shape[0] < 1:
+                raise ValueError(f"chunk for {sid!r} must be [t>=1, "
+                                 f"input_dim], got shape {tuple(x.shape)}")
+            sessions.append(sess)
+            xs.append(x)
+            lens.append(x.shape[0])
+
+        if self.chunk_capacity is not None and max(lens) > self.chunk_capacity:
+            raise ValueError(f"chunk of {max(lens)} steps exceeds "
+                             f"chunk_capacity={self.chunk_capacity}")
+        t_max = self.chunk_capacity or max(lens)
+        dtype = xs[0].dtype
+        # Fixed-shape mode pads idle session slots so one compiled graph
+        # serves every tick (dummy rows freeze after step 0, results dropped).
+        n_pad = ((self.max_sessions - len(sessions)) * s
+                 if self.chunk_capacity is not None else 0)
+        # Batch assembly stages in host numpy — one device transfer per
+        # operand per tick, not O(sessions) tiny dispatches.  Session-major,
+        # chain-minor: row k*S+j is chain j of session k, matching the
+        # concatenated per-session mask rows.
+        nb = len(sessions) * s + n_pad
+        x_host = np.zeros((nb, t_max, xs[0].shape[1]), dtype)
+        rows_host = np.zeros((nb,), np.uint32)
+        lens_host = np.ones((nb,), np.int32)
+        for k, (x, L, sess) in enumerate(zip(xs, lens, sessions)):
+            sl = slice(k * s, (k + 1) * s)
+            x_host[sl, :L] = x[None]
+            rows_host[sl] = np.asarray(sess.rows)
+            lens_host[sl] = L
+        x_batch = jnp.asarray(x_host)
+        rows = jnp.asarray(rows_host)
+        lengths = jnp.asarray(lens_host)
+        initial_state = self._gather_states(sessions, dtype, n_pad)
+
+        if self.kind == "classifier":
+            logits, states = _clf.apply(
+                self.params, x_batch, rows, self.cfg, backend=self.backend,
+                initial_state=initial_state, lengths=lengths,
+                return_state=True)
+        else:
+            mean, log_var, states = _ae.apply(
+                self.params, x_batch, rows, self.cfg, backend=self.backend,
+                initial_state=initial_state, lengths=lengths,
+                return_state=True)
+
+        # One batched summary over [S, n_sessions, ...] — per-session results
+        # are indexed out, not recomputed per session.
+        k_n = len(sessions)
+        if self.kind == "classifier":
+            per_chain = jnp.swapaxes(
+                logits.reshape(-1, s, logits.shape[-1])[:k_n], 0, 1)
+            batched = classification_summary(per_chain.astype(jnp.float32))
+        else:
+            shape = (-1, s) + mean.shape[1:]
+            mu = jnp.swapaxes(mean.reshape(shape)[:k_n], 0, 1)
+            lv = (None if log_var is None
+                  else jnp.swapaxes(log_var.reshape(shape)[:k_n], 0, 1))
+            batched = regression_summary(
+                mu.astype(jnp.float32),
+                None if lv is None else lv.astype(jnp.float32))
+
+        results: dict[str, ChunkResult] = {}
+        for k, (sess, L) in enumerate(zip(sessions, lens)):
+            sl = slice(k * s, (k + 1) * s)
+            if self.kind == "classifier":
+                summary = ClassificationSummary(*(v[k] for v in batched))
+            else:
+                summary = RegressionSummary(*(v[k, :L] for v in batched))
+            sess.state = [tuple(part[sl] for part in layer)
+                          for layer in states]
+            sess.steps += L
+            sess.chunks += 1
+            results[sess.sid] = ChunkResult(sid=sess.sid, length=L,
+                                            steps_total=sess.steps,
+                                            summary=summary)
+        return results
+
+    def _gather_states(self, sessions, dtype, n_pad: int = 0):
+        """Concatenate per-session carries into batch-aligned layer states.
+
+        Fresh sessions (and fixed-shape pad slots) contribute zeros in the
+        backend's own carry dtypes (h in the activation dtype; c in fp32 on
+        the Pallas backends, the activation dtype on reference), so a mixed
+        fresh/resumed batch is bit-identical to serving each session alone.
+        In fixed-shape mode zeros are always materialized: an all-fresh
+        first tick must present the same jit pytree as every later tick,
+        or the one-graph guarantee would break on tick two.
+        """
+        if all(sess.fresh for sess in sessions) and self.chunk_capacity is None:
+            return None
+        c_dtype = dtype if self.backend == "reference" else jnp.float32
+        hiddens = (self._encoder_hiddens())
+        layers = []
+        for li, hid in enumerate(hiddens):
+            hs, cs = [], []
+            for sess in sessions:
+                if sess.fresh:
+                    hs.append(jnp.zeros((self.n_samples, hid), dtype))
+                    cs.append(jnp.zeros((self.n_samples, hid), c_dtype))
+                else:
+                    h, c = sess.state[li]
+                    hs.append(h)
+                    cs.append(c)
+            if n_pad:
+                hs.append(jnp.zeros((n_pad, hid), dtype))
+                cs.append(jnp.zeros((n_pad, hid), c_dtype))
+            layers.append((jnp.concatenate(hs), jnp.concatenate(cs)))
+        return layers
+
+    def _encoder_hiddens(self):
+        if self.kind == "classifier":
+            return (self.cfg.hidden,) * self.cfg.num_layers
+        return self.cfg.encoder_hiddens

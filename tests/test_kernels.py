@@ -93,6 +93,29 @@ class TestMcdLstmKernel:
         np.testing.assert_allclose(np.asarray(ck), np.asarray(cr),
                                    rtol=1e-5, atol=1e-5)
 
+    def test_odd_batch_pads_to_block(self):
+        """B that block_b doesn't divide (e.g. a ragged session batch) pads
+        to the block multiple instead of failing the old divisibility
+        assert — same fallback as the sequence kernel."""
+        b, i, h = 13, 16, 16
+        ks = jax.random.split(jax.random.key(2), 6)
+        x = jax.random.normal(ks[0], (b, i))
+        hh = jax.random.normal(ks[1], (b, h))
+        c = jax.random.normal(ks[2], (b, h))
+        wx = jax.random.normal(ks[3], (i, 4, h)) * 0.1
+        wh = jax.random.normal(ks[4], (h, 4, h)) * 0.1
+        bias = jax.random.normal(ks[5], (4, h)) * 0.1
+        rows = jnp.arange(b, dtype=jnp.uint32)
+        keys = mcd_lstm.gate_keys(11, 2)
+        hk, ck = mcd_lstm.mcd_lstm_step(x, hh, c, wx, wh, bias, rows, keys,
+                                        0.125, block_b=4, block_h=16)
+        assert hk.shape == (b, h) and ck.shape == (b, h)
+        hr, cr = ref.mcd_lstm_step(x, hh, c, wx, wh, bias, rows, keys, 0.125)
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ck), np.asarray(cr),
+                                   rtol=1e-5, atol=1e-5)
+
     def test_fused_layer_equals_core_path(self):
         """Kernel scan over T == repro.core cells path, mask streams and all."""
         B, T, I, H = 8, 6, 48, 32

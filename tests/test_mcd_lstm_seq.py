@@ -84,7 +84,7 @@ class TestSeqKernel:
                                    rtol=1e-5, atol=1e-5)
 
     def test_odd_batch_blocks(self):
-        """block_b that does not divide B falls back to a divisor."""
+        """block_b that does not divide B pads to the next block multiple."""
         b, t, i, h = 6, 4, 16, 16
         x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
         keys = mcd_lstm.gate_keys(SEED, LAYER)
@@ -93,6 +93,131 @@ class TestSeqKernel:
         yr, _, _ = ref.mcd_lstm_seq(x_seq, wx, wh, bias, rows, keys, 0.125)
         np.testing.assert_allclose(np.asarray(ys), np.asarray(yr),
                                    rtol=1e-5, atol=1e-5)
+
+    def test_prime_batch_pads_instead_of_serializing(self):
+        """B prime (no divisor ≤ block_b except 1) must not degrade to bb=1:
+        the batch pads up to the block multiple and outputs slice back."""
+        b, t, i, h = 13, 3, 8, 8
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_lstm.gate_keys(SEED, LAYER)
+        ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(x_seq, wx, wh, bias, rows,
+                                               keys, 0.125, block_b=4)
+        yr, hr, cr = ref.mcd_lstm_seq(x_seq, wx, wh, bias, rows, keys, 0.125)
+        assert ys.shape == (b, t, h) and hT.shape == (b, h)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(cT), np.asarray(cr),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestCarriedState:
+    """The (h0, c0) streaming operands (ISSUE 2 tentpole, layer 1)."""
+
+    @pytest.mark.parametrize("p", [0.0, 0.25])
+    def test_resume_matches_oracle(self, p):
+        b, t, i, h = 6, 7, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_lstm.gate_keys(SEED, LAYER)
+        h0 = jax.random.normal(jax.random.key(5), (b, h)) * 0.5
+        c0 = jax.random.normal(jax.random.key(6), (b, h)).astype(jnp.float32)
+        ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(x_seq, wx, wh, bias, rows,
+                                               keys, p, h0=h0, c0=c0)
+        yr, hr, cr = ref.mcd_lstm_seq(x_seq, wx, wh, bias, rows, keys, p,
+                                      h0=h0, c0=c0)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(cT), np.asarray(cr),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("splits", [[4, 5], [1] * 9, [2, 1, 6]])
+    def test_chunked_equals_unchunked_bit_identical(self, splits):
+        """Arbitrary chunk boundaries (incl. length 1) are invisible: the
+        lengths-pinned graph family makes the comparison bit-exact."""
+        b, t, i, h = 6, 9, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_lstm.gate_keys(SEED, LAYER)
+        lens = lambda n: jnp.full((b,), n, jnp.int32)
+        full, hF, cF = mcd_lstm_seq.mcd_lstm_seq(x_seq, wx, wh, bias, rows,
+                                                 keys, 0.125, lengths=lens(t))
+        st, outs, pos = (None, None), [], 0
+        for n in splits:
+            ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(
+                x_seq[:, pos:pos + n], wx, wh, bias, rows, keys, 0.125,
+                h0=st[0], c0=st[1], lengths=lens(n))
+            st, pos = (hT, cT), pos + n
+            outs.append(ys)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate(outs, 1)), np.asarray(full))
+        np.testing.assert_array_equal(np.asarray(st[0]), np.asarray(hF))
+        np.testing.assert_array_equal(np.asarray(st[1]), np.asarray(cF))
+
+    def test_lengths_freeze_state_per_row(self):
+        """Ragged rows keep the state at their own length; live prefixes are
+        bit-identical to the full-length varlen pass."""
+        b, t, i, h = 6, 8, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_lstm.gate_keys(SEED, LAYER)
+        lens = jnp.array([8, 1, 3, 5, 2, 7], jnp.int32)
+        ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(x_seq, wx, wh, bias, rows,
+                                               keys, 0.125, lengths=lens)
+        full, _, _ = mcd_lstm_seq.mcd_lstm_seq(
+            x_seq, wx, wh, bias, rows, keys, 0.125,
+            lengths=jnp.full((b,), t, jnp.int32))
+        for r in range(b):
+            L = int(lens[r])
+            np.testing.assert_array_equal(np.asarray(ys[r, :L]),
+                                          np.asarray(full[r, :L]))
+            np.testing.assert_array_equal(np.asarray(hT[r]),
+                                          np.asarray(ys[r, L - 1]))
+        yr, hr, cr = ref.mcd_lstm_seq(x_seq, wx, wh, bias, rows, keys, 0.125,
+                                      lengths=lens)
+        np.testing.assert_array_equal(np.asarray(cT), np.asarray(cr))
+
+
+class TestBf16:
+    """bf16 weights/activations; c stays fp32 (ROADMAP 32-bit cell policy)."""
+
+    @pytest.mark.parametrize("p", [0.0, 0.125])
+    def test_bf16_matches_bf16_oracle(self, p):
+        b, t, i, h = 6, 6, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        to = lambda a: a.astype(jnp.bfloat16)
+        keys = mcd_lstm.gate_keys(SEED, LAYER)
+        ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(to(x_seq), to(wx), to(wh),
+                                               to(bias), rows, keys, p)
+        assert ys.dtype == jnp.bfloat16 and hT.dtype == jnp.bfloat16
+        assert cT.dtype == jnp.float32          # cell state stays 32-bit
+        yr, hr, cr = ref.mcd_lstm_seq(to(x_seq), to(wx), to(wh), to(bias),
+                                      rows, keys, p)
+        np.testing.assert_allclose(np.asarray(ys, jnp.float32),
+                                   np.asarray(yr, jnp.float32),
+                                   rtol=0.05, atol=0.05)
+        np.testing.assert_allclose(np.asarray(cT), np.asarray(cr),
+                                   rtol=0.05, atol=0.05)
+
+    def test_bf16_carried_state_resume_bit_identical(self):
+        """Chunk boundaries stay invisible in bf16: h round-trips in bf16
+        (its carry dtype) and c in fp32, so resume is lossless."""
+        b, t, i, h = 6, 8, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        to = lambda a: a.astype(jnp.bfloat16)
+        xb, wxb, whb, bb_ = to(x_seq), to(wx), to(wh), to(bias)
+        keys = mcd_lstm.gate_keys(SEED, LAYER)
+        lens = lambda n: jnp.full((b,), n, jnp.int32)
+        full, hF, cF = mcd_lstm_seq.mcd_lstm_seq(xb, wxb, whb, bb_, rows,
+                                                 keys, 0.125, lengths=lens(t))
+        st, outs, pos = (None, None), [], 0
+        for n in (3, 1, 4):
+            ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(
+                xb[:, pos:pos + n], wxb, whb, bb_, rows, keys, 0.125,
+                h0=st[0], c0=st[1], lengths=lens(n))
+            assert cT.dtype == jnp.float32
+            st, pos = (hT, cT), pos + n
+            outs.append(ys)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate(outs, 1), jnp.float32),
+            np.asarray(full, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(st[1]), np.asarray(cF))
 
 
 class TestRunStackBackends:

@@ -1,0 +1,429 @@
+"""Streaming session serving: carried state, chunk invariance, the engine.
+
+The load-bearing invariant (ISSUE 2 acceptance): decoding an unbounded
+signal chunk-by-chunk with carried ``(h, c)`` — through any backend — is
+bit-identical to one full-sequence pass, for arbitrary chunk boundaries
+including length-1 chunks, with the MC masks tied across the *whole*
+session.  Streaming passes always supply ``lengths``; that graph family is
+bit-stable across launch sizes, splits, batch composition and backends
+(see docs/kernels.md), which is what makes exact assertions possible here.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autoencoder as ae, classifier as clf, mcd, rnn
+from repro.core.uncertainty import classification_summary
+from repro.serve import (CapacityError, SessionStore, StreamingEngine)
+
+BACKENDS = ("reference", "pallas_step", "pallas_seq")
+
+
+def _stack(hiddens=(16, 16, 16), in_dim=4, placement="YNY", seed=5, key=0):
+    cfg = mcd.MCDConfig(p=0.125, placement=placement, seed=seed)
+    params = rnn.init_stack(jax.random.key(key), in_dim, hiddens)
+    return cfg, params
+
+
+def _masks(cfg, rows, in_dim, hiddens, backend):
+    if backend == "reference":
+        return rnn.sample_stack_masks(cfg, rows, in_dim, hiddens)
+    return rnn.stack_mask_plan(cfg, len(hiddens))
+
+
+def _full(n, b=6):
+    return jnp.full((b,), n, jnp.int32)
+
+
+class TestRunStackStreaming:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("splits", [[5, 12], [1] * 17, [3, 1, 6, 7]])
+    def test_chunked_equals_unchunked_bit_identical(self, backend, splits):
+        """Any split of T=17 (incl. all-ones) == one pass, exactly."""
+        hiddens = (16, 16, 16)
+        cfg, params = _stack(hiddens)
+        B, T = 6, 17
+        x = jax.random.normal(jax.random.key(1), (B, T, 4))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        masks = _masks(cfg, rows, 4, hiddens, backend)
+        full, st_full = rnn.run_stack(params, x, masks, cfg.p,
+                                      backend=backend, rows=rows,
+                                      seed=cfg.seed, lengths=_full(T),
+                                      return_all_states=True)
+        state, outs, pos = None, [], 0
+        for n in splits:
+            out, state = rnn.run_stack(params, x[:, pos:pos + n], masks,
+                                       cfg.p, backend=backend, rows=rows,
+                                       seed=cfg.seed, initial_state=state,
+                                       lengths=_full(n),
+                                       return_all_states=True)
+            outs.append(out)
+            pos += n
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate(outs, 1)), np.asarray(full))
+        for (h1, c1), (h2, c2) in zip(state, st_full):
+            np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+            np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+    def test_pallas_seq_chunked_equals_reference_full(self):
+        """The acceptance bullet: chunked pallas_seq streaming == a single
+        full-sequence *reference* pass, bit-identical."""
+        hiddens = (16, 16, 16)
+        cfg, params = _stack(hiddens)
+        B, T = 6, 17
+        x = jax.random.normal(jax.random.key(1), (B, T, 4))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        full_ref, _ = rnn.run_stack(
+            params, x, rnn.sample_stack_masks(cfg, rows, 4, hiddens), cfg.p,
+            lengths=_full(T))
+        plan = rnn.stack_mask_plan(cfg, 3)
+        for splits in ([5, 12], [1] * 17, [3, 1, 6, 7]):
+            state, outs, pos = None, [], 0
+            for n in splits:
+                out, state = rnn.run_stack(params, x[:, pos:pos + n], plan,
+                                           cfg.p, backend="pallas_seq",
+                                           rows=rows, seed=cfg.seed,
+                                           initial_state=state,
+                                           lengths=_full(n),
+                                           return_all_states=True)
+                outs.append(out)
+                pos += n
+            np.testing.assert_array_equal(
+                np.asarray(jnp.concatenate(outs, 1)), np.asarray(full_ref))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_ragged_lengths_freeze_per_row(self, backend):
+        """A ragged batch (per-row lengths, padded to max T) returns each
+        row's state at its own length: live prefixes are bit-identical to
+        the full-length pass of the same batch (lengths is a *data* input —
+        same program, so frozen rows cannot perturb live ones), and serving
+        a row alone agrees to fp tolerance (a different batch shape compiles
+        a different program, so solo extraction is ulp- not bit-exact)."""
+        hiddens = (8, 8)
+        cfg, params = _stack(hiddens, placement="YN")
+        B, T = 4, 9
+        x = jax.random.normal(jax.random.key(2), (B, T, 4))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        lens = jnp.array([9, 1, 4, 6], jnp.int32)
+        masks = _masks(cfg, rows, 4, hiddens, backend)
+        out, states = rnn.run_stack(params, x, masks, cfg.p, backend=backend,
+                                    rows=rows, seed=cfg.seed, lengths=lens,
+                                    return_all_states=True)
+        full, full_states = rnn.run_stack(params, x, masks, cfg.p,
+                                          backend=backend, rows=rows,
+                                          seed=cfg.seed, lengths=_full(T, B),
+                                          return_all_states=True)
+        for r in range(B):
+            L = int(lens[r])
+            np.testing.assert_array_equal(np.asarray(out[r, :L]),
+                                          np.asarray(full[r, :L]))
+            # frozen at own length: last layer's h equals its last live step
+            np.testing.assert_array_equal(np.asarray(states[-1][0][r]),
+                                          np.asarray(out[r, L - 1]))
+            solo_masks = _masks(cfg, rows[r:r + 1], 4, hiddens, backend)
+            solo, solo_states = rnn.run_stack(
+                params, x[r:r + 1, :L], solo_masks, cfg.p, backend=backend,
+                rows=rows[r:r + 1], seed=cfg.seed,
+                lengths=jnp.full((1,), L, jnp.int32), return_all_states=True)
+            np.testing.assert_allclose(np.asarray(out[r, :L]),
+                                       np.asarray(solo[0]),
+                                       rtol=1e-5, atol=1e-6)
+            for (h1, c1), (h2, c2) in zip(states, solo_states):
+                np.testing.assert_allclose(np.asarray(h1[r]),
+                                           np.asarray(h2[0]),
+                                           rtol=1e-5, atol=1e-6)
+                np.testing.assert_allclose(np.asarray(c1[r]),
+                                           np.asarray(c2[0]),
+                                           rtol=1e-5, atol=1e-6)
+
+    def test_ragged_states_agree_across_backends(self):
+        """Same ragged batch through all three backends: the lengths-pinned
+        graph family keeps the per-row carries bit-identical across them."""
+        hiddens = (8, 8)
+        cfg, params = _stack(hiddens, placement="YN")
+        B, T = 4, 9
+        x = jax.random.normal(jax.random.key(2), (B, T, 4))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        lens = jnp.array([9, 1, 4, 6], jnp.int32)
+        got = {}
+        for backend in BACKENDS:
+            masks = _masks(cfg, rows, 4, hiddens, backend)
+            _, states = rnn.run_stack(params, x, masks, cfg.p,
+                                      backend=backend, rows=rows,
+                                      seed=cfg.seed, lengths=lens,
+                                      return_all_states=True)
+            got[backend] = states
+        for backend in ("pallas_step", "pallas_seq"):
+            for (h1, c1), (h2, c2) in zip(got["reference"], got[backend]):
+                np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+                np.testing.assert_array_equal(
+                    np.asarray(c1, np.float32), np.asarray(c2, np.float32))
+
+    def test_return_all_states_shapes_and_dtypes(self):
+        hiddens = (16, 8)
+        cfg, params = _stack(hiddens, placement="YY")
+        B, T = 3, 5
+        x = jax.random.normal(jax.random.key(3), (B, T, 4))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        _, st_ref = rnn.run_stack(params, x,
+                                  rnn.sample_stack_masks(cfg, rows, 4, hiddens),
+                                  cfg.p, return_all_states=True)
+        _, st_seq = rnn.run_stack(params, x, rnn.stack_mask_plan(cfg, 2),
+                                  cfg.p, backend="pallas_seq", rows=rows,
+                                  seed=cfg.seed, return_all_states=True)
+        assert len(st_ref) == len(st_seq) == 2
+        for (h, c), hid in zip(st_seq, hiddens):
+            assert h.shape == (B, hid) and c.shape == (B, hid)
+            assert c.dtype == jnp.float32       # Pallas carries c in fp32
+        for (h, c), hid in zip(st_ref, hiddens):
+            assert h.shape == (B, hid) and c.dtype == x.dtype
+
+    def test_default_return_contract_unchanged(self):
+        """Without the new kwargs run_stack returns (out, (h_T, c_T)) of the
+        last layer with c in the input dtype — the pre-streaming contract."""
+        hiddens = (8, 8)
+        cfg, params = _stack(hiddens, placement="YN")
+        x = jax.random.normal(jax.random.key(4), (3, 5, 4))
+        rows = jnp.arange(3, dtype=jnp.uint32)
+        out, (hT, cT) = rnn.run_stack(params, x, rnn.stack_mask_plan(cfg, 2),
+                                      cfg.p, backend="pallas_seq", rows=rows,
+                                      seed=cfg.seed)
+        assert hT.shape == (3, 8) and cT.dtype == x.dtype
+
+
+class TestSessionStore:
+    def test_admission_rows_unique_and_stable(self):
+        store = SessionStore(n_samples=4, seed=7, max_sessions=3)
+        a = store.admit("a")
+        b = store.admit("b")
+        np.testing.assert_array_equal(np.asarray(a.rows), [0, 1, 2, 3])
+        np.testing.assert_array_equal(np.asarray(b.rows), [4, 5, 6, 7])
+        assert a.seed == 7 and store.get("a") is a
+        assert len(store) == 2 and "a" in store
+
+    def test_duplicate_admission_rejected(self):
+        store = SessionStore(n_samples=2)
+        store.admit("a")
+        with pytest.raises(ValueError, match="already admitted"):
+            store.admit("a")
+
+    def test_capacity_and_eviction(self):
+        store = SessionStore(n_samples=2, max_sessions=2)
+        store.admit("a")
+        store.admit("b")
+        with pytest.raises(CapacityError):
+            store.admit("c")
+        evicted = store.evict("a")
+        assert evicted.sid == "a" and "a" not in store
+        c = store.admit("c")                       # slot freed
+        # rows never reused: a new session is a new Bayesian draw
+        np.testing.assert_array_equal(np.asarray(c.rows), [4, 5])
+
+    def test_unknown_session(self):
+        store = SessionStore(n_samples=2)
+        with pytest.raises(KeyError, match="unknown session"):
+            store.get("nope")
+        with pytest.raises(KeyError, match="unknown session"):
+            store.evict("nope")
+
+    def test_attach_validates_coordinates(self):
+        store = SessionStore(n_samples=2, seed=7, max_sessions=2)
+        sess = store.admit("a")
+        evicted = store.evict("a")
+        store.attach(evicted)                       # round-trips
+        assert store.get("a") is sess
+        store.evict("a")
+        other = SessionStore(n_samples=2, seed=8).admit("b")
+        with pytest.raises(ValueError, match="seed"):
+            store.attach(other)
+        wrong_s = SessionStore(n_samples=3, seed=7).admit("c")
+        with pytest.raises(ValueError, match="chains"):
+            store.attach(wrong_s)
+
+    def test_attach_protects_row_allocator(self):
+        """Re-attaching into a fresh store (restart) must not let later
+        admissions re-allocate the attached rows, nor collide with live
+        sessions — shared (seed, rows) would correlate Bayesian draws."""
+        old = SessionStore(n_samples=2, seed=7)
+        old.admit("s0")
+        saved = old.admit("s1")                      # rows [2, 3]
+        fresh = SessionStore(n_samples=2, seed=7, max_sessions=4)
+        fresh.attach(saved)
+        nxt = fresh.admit("s2")                      # allocator bumped past 3
+        np.testing.assert_array_equal(np.asarray(nxt.rows), [4, 5])
+        colliding = SessionStore(n_samples=2, seed=7).admit("ghost")  # [0, 1]
+        fresh.admit("s3")                            # rows [6, 7] — fine
+        with pytest.raises(ValueError, match="collide"):
+            # a live session in `fresh` could then share rows — refuse
+            fresh2 = SessionStore(n_samples=2, seed=7, max_sessions=4)
+            fresh2.admit("live")                     # rows [0, 1]
+            fresh2.attach(colliding)
+
+
+class TestStreamingEngine:
+    def _cfg_params(self, s=3, seed=3):
+        cfg = clf.ClassifierConfig(
+            hidden=8, num_layers=2, num_classes=4,
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s,
+                              seed=seed))
+        return cfg, clf.init(jax.random.key(0), cfg)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_ragged_cobatched_equals_solo_full(self, backend):
+        """Ragged co-batched chunked serving == solo single-chunk serving,
+        bit-identical per session (batch composition is invisible)."""
+        cfg, params = self._cfg_params()
+        T = 11
+        sig_a = jax.random.normal(jax.random.key(1), (T, 1))
+        sig_b = jax.random.normal(jax.random.key(2), (T, 1))
+        eng = StreamingEngine(params, cfg, backend=backend, max_sessions=2)
+        eng.open_session("a")
+        eng.open_session("b")
+        eng.step({"a": sig_a[:4], "b": sig_b[:7]})     # ragged tick
+        eng.step({"a": sig_a[4:5], "b": sig_b[7:]})    # length-1 chunk for a
+        ra = eng.step({"a": sig_a[5:]})["a"]           # b sits this tick out
+        solo = StreamingEngine(params, cfg, backend=backend, max_sessions=1)
+        solo.open_session("a")
+        qa = solo.step({"a": sig_a})["a"]
+        np.testing.assert_array_equal(np.asarray(ra.summary.probs),
+                                      np.asarray(qa.summary.probs))
+        np.testing.assert_array_equal(
+            np.asarray(ra.summary.mutual_information),
+            np.asarray(qa.summary.mutual_information))
+        assert ra.steps_total == qa.steps_total == T
+
+    def test_matches_direct_classifier_pass(self):
+        """Engine output == a single full-sequence classifier pass on the
+        reference backend (masks tied across every chunk boundary)."""
+        cfg, params = self._cfg_params()
+        s = cfg.mcd.n_samples
+        T = 9
+        sig = jax.random.normal(jax.random.key(4), (T, 1))
+        eng = StreamingEngine(params, cfg, backend="pallas_seq",
+                              max_sessions=1)
+        eng.open_session("x")
+        res = None
+        for a in range(0, T, 2):                      # chunks of 2 then 1
+            res = eng.step({"x": sig[a:a + 2]})["x"]
+        rows = jnp.arange(s, dtype=jnp.uint32)
+        logits = clf.apply(params, jnp.broadcast_to(sig[None], (s, T, 1)),
+                           rows, cfg, backend="reference",
+                           lengths=jnp.full((s,), T, jnp.int32))
+        want = classification_summary(logits[:, None].astype(jnp.float32))
+        np.testing.assert_array_equal(np.asarray(res.summary.probs),
+                                      np.asarray(want.probs[0]))
+
+    def test_autoencoder_streaming(self):
+        cfg = ae.AutoencoderConfig(
+            hidden=8, num_layers=1,
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=2, seed=1))
+        params = ae.init(jax.random.key(0), cfg)
+        eng = StreamingEngine(params, cfg, backend="pallas_seq",
+                              max_sessions=2)
+        eng.open_session("a")
+        eng.open_session("b")
+        res = eng.step({"a": jnp.ones((5, 1)), "b": jnp.zeros((3, 1))})
+        assert res["a"].summary.mean.shape == (5, 1)
+        assert res["b"].summary.total.shape == (3, 1)
+        assert (np.asarray(res["a"].summary.total) >= 0).all()
+        res2 = eng.step({"a": jnp.ones((2, 1))})
+        assert res2["a"].steps_total == 7
+
+    def test_bookkeeping_and_eviction(self):
+        cfg, params = self._cfg_params(s=2)
+        eng = StreamingEngine(params, cfg, max_sessions=1)
+        eng.open_session("a")
+        with pytest.raises(CapacityError):
+            eng.open_session("b")
+        eng.step({"a": jnp.ones((3, 1))})
+        sess = eng.close_session("a")
+        assert sess.steps == 3 and sess.chunks == 1
+        assert sess.state is not None and eng.active_sessions == []
+        eng.open_session("b")                          # capacity freed
+
+    def test_evict_attach_resumes_same_draw(self):
+        """close → attach continues the stream bit-identically (same state,
+        same (seed, rows) coordinates — the checkpoint/restore path)."""
+        cfg, params = self._cfg_params()
+        T = 8
+        sig = jax.random.normal(jax.random.key(6), (T, 1))
+        eng = StreamingEngine(params, cfg, max_sessions=1)
+        eng.open_session("a")
+        eng.step({"a": sig[:3]})
+        frozen = eng.close_session("a")
+        eng.attach_session(frozen)
+        res = eng.step({"a": sig[3:]})["a"]
+        solo = StreamingEngine(params, cfg, max_sessions=1)
+        solo.open_session("a")
+        want = solo.step({"a": sig})["a"]
+        np.testing.assert_array_equal(np.asarray(res.summary.probs),
+                                      np.asarray(want.summary.probs))
+        assert res.steps_total == T and frozen.chunks == 2
+
+    def test_chunk_capacity_fixed_shapes(self):
+        """Fixed-shape mode (pad to capacity + idle slots) serves the same
+        results while reusing one compiled graph across ragged ticks."""
+        cfg, params = self._cfg_params()
+        T = 9
+        sig_a = jax.random.normal(jax.random.key(1), (T, 1))
+        sig_b = jax.random.normal(jax.random.key(2), (T, 1))
+        fixed = StreamingEngine(params, cfg, max_sessions=3, chunk_capacity=5)
+        fixed.open_session("a")
+        fixed.open_session("b")
+        fixed.step({"a": sig_a[:4], "b": sig_b[:5]})
+        fixed.step({"a": sig_a[4:6]})               # idle slots padded
+        ra = fixed.step({"a": sig_a[6:], "b": sig_b[5:]})
+        solo = StreamingEngine(params, cfg, max_sessions=1)
+        solo.open_session("a")
+        qa = solo.step({"a": sig_a})["a"]
+        np.testing.assert_allclose(np.asarray(ra["a"].summary.probs),
+                                   np.asarray(qa.summary.probs),
+                                   rtol=1e-5, atol=1e-6)
+        assert ra["a"].steps_total == ra["b"].steps_total == T
+        with pytest.raises(ValueError, match="chunk_capacity"):
+            fixed.step({"a": jnp.ones((6, 1))})
+        # one-graph guarantee: an all-fresh tick must present the same jit
+        # pytree as later ticks (states materialized, never None)
+        probe = StreamingEngine(params, cfg, max_sessions=2, chunk_capacity=5)
+        sess = probe.open_session("f")
+        assert probe._gather_states([sess], jnp.float32, 2) is not None
+
+    def test_autoencoder_cobatched_equals_solo(self):
+        """AE streaming: ragged co-batched == solo, bit-identical (decoder
+        inherits the lengths pin, so the whole pass stays on the pinned
+        graph family)."""
+        cfg = ae.AutoencoderConfig(
+            hidden=8, num_layers=1,
+            mcd=mcd.MCDConfig(p=0.125, placement="YNYN", n_samples=2,
+                              seed=1))
+        params = ae.init(jax.random.key(0), cfg)
+        T = 7
+        sig_a = jax.random.normal(jax.random.key(8), (T, 1))
+        sig_b = jax.random.normal(jax.random.key(9), (T, 1))
+        eng = StreamingEngine(params, cfg, backend="pallas_seq",
+                              max_sessions=2)
+        eng.open_session("a")
+        eng.open_session("b")
+        eng.step({"a": sig_a[:3], "b": sig_b[:5]})
+        ra = eng.step({"a": sig_a[3:], "b": sig_b[5:]})["a"]
+        solo = StreamingEngine(params, cfg, backend="pallas_seq",
+                               max_sessions=1)
+        solo.open_session("a")
+        solo.step({"a": sig_a[:3]})
+        qa = solo.step({"a": sig_a[3:]})["a"]
+        np.testing.assert_array_equal(np.asarray(ra.summary.mean),
+                                      np.asarray(qa.summary.mean))
+        np.testing.assert_array_equal(np.asarray(ra.summary.total),
+                                      np.asarray(qa.summary.total))
+
+    def test_bad_chunks_rejected(self):
+        cfg, params = self._cfg_params(s=2)
+        eng = StreamingEngine(params, cfg, max_sessions=2)
+        eng.open_session("a")
+        with pytest.raises(KeyError, match="unknown session"):
+            eng.step({"zzz": jnp.ones((3, 1))})
+        with pytest.raises(ValueError, match="t>=1"):
+            eng.step({"a": jnp.ones((0, 1))})
+        assert eng.step({}) == {}
