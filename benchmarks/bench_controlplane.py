@@ -1,0 +1,129 @@
+"""Control-plane costs: admission, durable snapshots, adaptive shapes.
+
+Three questions the PR 3 control plane has to answer with numbers:
+
+* **admission** — how many submit→drain operations per second the priority
+  queue sustains against a churning store (host-side bookkeeping; it must
+  be negligible next to a model tick);
+* **snapshot/restore** — wall-clock of persisting / rebuilding a full
+  store of live sessions through ``repro.ckpt`` (atomic + sha256), vs the
+  number of live sessions — the budget for the snapshot cadence;
+* **pad waste** — padded-but-dead chain-timesteps under a static
+  ``chunk_capacity`` vs the adaptive ladder, over a long-tailed synthetic
+  chunk-length trace.  The static number is what an operator guesses; the
+  adaptive number is what the scheduler earns (while keeping compiles
+  bounded by the ladder length).
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.serve import (AdmissionQueue, AdaptiveTickScheduler, SessionStore,
+                         restore_store, snapshot_store)
+
+
+def _host_us(fn, iters=3):
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
+def bench_admission(n_requests=2000, capacity=64):
+    def churn():
+        store = SessionStore(n_samples=4, max_sessions=capacity)
+        queue = AdmissionQueue(max_pending=n_requests)
+        rng = np.random.default_rng(0)
+        served = 0
+        for k in range(n_requests):
+            queue.submit(f"s{k}", priority=int(rng.integers(0, 3)))
+        while len(queue) or len(store):
+            queue.drain(store)
+            for sid in store.active:        # every live stream finishes
+                store.evict(sid)
+                served += 1
+        assert served == n_requests
+    us = _host_us(churn)
+    common.emit(f"controlplane.admission.N{n_requests}", us,
+                f"requests_per_s={n_requests / (us * 1e-6):.0f}")
+
+
+def _filled_store(n_sessions, s=4, hidden=8, layers=2):
+    store = SessionStore(n_samples=s, max_sessions=n_sessions)
+    for k in range(n_sessions):
+        sess = store.admit(f"s{k}")
+        sess.state = [(jnp.zeros((s, hidden)) + k,
+                       jnp.zeros((s, hidden), jnp.float32) + k)
+                      for _ in range(layers)]
+        sess.steps, sess.chunks = 100 * k, k
+    return store
+
+
+def bench_snapshot(n_sessions):
+    store = _filled_store(n_sessions)
+    tmp = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        us_save = _host_us(lambda: snapshot_store(tmp, store, step=0))
+        us_load = _host_us(lambda: restore_store(tmp, step=0))
+        common.emit(f"controlplane.snapshot.K{n_sessions}", us_save,
+                    f"sessions={n_sessions}")
+        common.emit(f"controlplane.restore.K{n_sessions}", us_load,
+                    f"sessions={n_sessions}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _chunk_trace(n_ticks=400, n_sessions=8, seed=0):
+    """Long-tailed chunk lengths: mostly short beats, rare long bursts."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(8, 32, size=(n_ticks, n_sessions))
+    burst = rng.random((n_ticks, n_sessions)) < 0.05
+    return np.where(burst, rng.integers(100, 240, size=base.shape), base)
+
+
+def bench_pad_waste():
+    trace = _chunk_trace()
+    n_sessions = trace.shape[1]
+
+    def waste(capacity_fn):
+        live = padded = 0
+        for lens in trace:
+            cap = capacity_fn(lens)
+            live += int(lens.sum())
+            padded += cap * n_sessions
+        return 1.0 - live / padded
+
+    # A static capacity must cover the trace max (the engine rejects longer
+    # chunks), so the honest static baseline is the top rung; smaller
+    # static settings are shown as what they'd cost *if* the load allowed.
+    for cap in (64, 128, 256):
+        common.emit(f"controlplane.pad_waste.static{cap}", 0.0,
+                    f"pad_waste={waste(lambda lens, c=cap: c):.3f}"
+                    + ("" if cap >= trace.max() else ";rejects_bursts"))
+    for pct in (100.0, 90.0):
+        sched = AdaptiveTickScheduler(percentile=pct)
+        w = waste(lambda lens: sched.plan(lens))
+        shapes = AdaptiveTickScheduler(percentile=pct)
+        used = len({shapes.plan(lens) for lens in trace})
+        common.emit(f"controlplane.pad_waste.adaptive_p{pct:.0f}", 0.0,
+                    f"pad_waste={w:.3f};distinct_shapes={used}")
+
+
+def run():
+    bench_admission()
+    for k in (4, 16, 64):
+        bench_snapshot(k)
+    bench_pad_waste()
+
+
+if __name__ == "__main__":
+    run()

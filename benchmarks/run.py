@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV per benchmark line.
   table5/6     bench_opt_modes       (optimization framework outputs)
   kernels      bench_kernels         (fused vs unfused)
   streaming    bench_streaming       (stateful session serving sweep)
+  controlplane bench_controlplane    (admission, snapshot/restore, pad waste)
   roofline     roofline              (dry-run derived terms, all 40 cells)
 """
 
@@ -18,10 +19,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_dse_sweep, bench_kernels, bench_latency,
-                            bench_opt_modes, bench_quantization,
-                            bench_resource_model, bench_sampling,
-                            bench_streaming, roofline)
+    from benchmarks import (bench_controlplane, bench_dse_sweep,
+                            bench_kernels, bench_latency, bench_opt_modes,
+                            bench_quantization, bench_resource_model,
+                            bench_sampling, bench_streaming, roofline)
     benches = [
         ("dse_sweep", bench_dse_sweep),
         ("sampling", bench_sampling),
@@ -31,6 +32,7 @@ def main() -> None:
         ("opt_modes", bench_opt_modes),
         ("kernels", bench_kernels),
         ("streaming", bench_streaming),
+        ("controlplane", bench_controlplane),
         ("roofline", roofline),
     ]
     failed = 0

@@ -45,8 +45,15 @@ def _leaf_names(tree):
     return out
 
 
-def save(directory: str, step: int, tree) -> str:
-    """Atomically save a pytree as step-<step>/ under directory."""
+def save(directory: str, step: int, tree, *, meta=None) -> str:
+    """Atomically save a pytree as step-<step>/ under directory.
+
+    ``meta``: optional JSON-serializable dict stored inside ``manifest.json``
+    — it rides the same atomic rename as the arrays, so callers that need
+    structural metadata alongside the leaves (e.g. the serving control
+    plane's session registry) never see arrays without their meta or vice
+    versa.  Read it back with :func:`load_meta`.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step-{step:010d}")
     tmp = os.path.join(directory, f".tmp-{step:010d}")
@@ -56,6 +63,8 @@ def save(directory: str, step: int, tree) -> str:
     leaves = jax.tree_util.tree_leaves(tree)
     names = _leaf_names(tree)
     manifest = {"step": step, "leaves": []}
+    if meta is not None:
+        manifest["meta"] = json.loads(json.dumps(meta))  # fail fast if not JSON
     for name, leaf in zip(names, leaves):
         arr = np.asarray(jax.device_get(leaf))
         path = os.path.join(tmp, name + ".npy")
@@ -83,28 +92,84 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore(directory: str, step: int, like, shardings=None):
+def _reinterpret(arr, want: str, name: str, path: str):
+    """Give extended dtypes their identity back on load.
+
+    numpy serializes ml_dtypes arrays (bfloat16, fp8, …) as opaque void
+    records; the manifest remembers the true dtype string, so a mismatched
+    load is re-viewed through ml_dtypes.  Bit-exact either way — the bytes
+    on disk are the bytes that were checksummed.
+    """
+    if str(arr.dtype) == want:
+        return arr
+    try:
+        import ml_dtypes
+        return arr.view(np.dtype(getattr(ml_dtypes, want)))
+    except (ImportError, AttributeError, TypeError) as e:
+        raise IOError(f"cannot reinterpret {name} in {path} as "
+                      f"{want!r}: {e}") from None
+
+
+def load_meta(directory: str, step: int):
+    """The ``meta`` dict a checkpoint was saved with, or None."""
+    path = os.path.join(directory, f"step-{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("meta")
+
+
+def restore(directory: str, step: int, like, shardings=None, *,
+            partial: bool = False):
     """Restore into the structure of ``like``; verify checksums.
 
     ``shardings``: optional pytree of jax.sharding.Sharding matching ``like``
     — pass target-mesh shardings to reshard elastically on restore.
+
+    ``partial``: when True, ``like`` may name only a *subset* of the saved
+    leaves (matched by flattened path name) — the hook the serving control
+    plane uses to restore a few sessions out of a store-wide snapshot.  A
+    leaf of ``like`` that the manifest doesn't know is still an error:
+    partial restore narrows the read, it never invents data.  When False
+    (the default), ``like`` must cover *every* saved leaf — a truncated
+    like-tree is a caller bug, not a silent partial restore.
     """
     path = os.path.join(directory, f"step-{step:010d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     names = _leaf_names(like)
     by_name = {e["name"]: e for e in manifest["leaves"]}
+    if not partial and (missing := set(by_name) - set(names)):
+        raise ValueError(
+            f"like-tree misses {len(missing)} saved leaves (e.g. "
+            f"{sorted(missing)[:3]}); pass partial=True for a subset "
+            "restore")
+    if partial:
+        # The __k duplicate-name disambiguation is positional over the FULL
+        # tree; a subset like-tree re-derives different positions, so a
+        # name that was deduplicated at save time cannot be addressed
+        # safely — refuse rather than silently return a sibling's data.
+        for name in names:
+            if f"{name}__1" in by_name or re.search(r"__\d+$", name):
+                raise ValueError(
+                    f"leaf name {name!r} was disambiguated positionally at "
+                    "save time; a partial restore cannot address it safely "
+                    "— restore the full tree or save under unique keys")
     leaves = []
     shard_leaves = (jax.tree_util.tree_leaves(shardings)
                     if shardings is not None else [None] * len(names))
     for name, shard in zip(names, shard_leaves):
-        entry = by_name[name]
+        try:
+            entry = by_name[name]
+        except KeyError:
+            raise KeyError(
+                f"leaf {name!r} not in checkpoint {path}"
+                + (" (partial restore reads a subset, it cannot add leaves)"
+                   if partial else "")) from None
         fpath = os.path.join(path, name + ".npy")
         with open(fpath, "rb") as f:
             data = f.read()
         if hashlib.sha256(data).hexdigest() != entry["sha256"]:
             raise IOError(f"checksum mismatch for {name} in {path}")
-        arr = np.load(fpath)
+        arr = _reinterpret(np.load(fpath), entry["dtype"], name, path)
         leaves.append(jax.device_put(arr, shard) if shard is not None else arr)
     treedef = jax.tree_util.tree_structure(like)
     return jax.tree_util.tree_unflatten(treedef, leaves)
@@ -116,7 +181,7 @@ def resume_or_none(directory: str, like, shardings=None):
     while step is not None:
         try:
             return step, restore(directory, step, like, shardings)
-        except (IOError, FileNotFoundError, KeyError):
+        except (IOError, FileNotFoundError, KeyError, ValueError):
             # corrupt/partial: fall back to the previous step
             older = [s for s in
                      (int(d.split("-")[1]) for d in os.listdir(directory)

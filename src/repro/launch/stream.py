@@ -1,13 +1,24 @@
 """Streaming session-serving launcher: continuous ECG monitoring.
 
-Opens N concurrent sessions, each an unbounded synthetic-ECG signal
+Opens concurrent sessions, each an unbounded synthetic-ECG signal
 (concatenated ECG5000-compatible beats), and decodes them chunk-by-chunk
 through the sequence-fused Pallas kernel with carried per-session state —
 per-chunk Bayesian uncertainty over the signal-so-far.
 
+The PR 3 control plane is wired in: ``--overload`` admits more streams
+than the store holds (they wait in the priority admission queue and go
+live as rows free up), ``--capacity auto`` lets the adaptive scheduler
+pick the launch shape per tick, and ``--snapshot-dir``/``--resume`` make
+the whole thing crash-safe — kill the process at any tick and relaunch
+with ``--resume`` to continue every stream bit-identically.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.stream --sessions 4 --chunk-len 20 \
       --samples 8 --beats 2 --backend pallas_seq
+  PYTHONPATH=src python -m repro.launch.stream --sessions 2 --overload 6 \
+      --capacity auto --snapshot-dir /tmp/snap --snapshot-every 3
+  PYTHONPATH=src python -m repro.launch.stream --sessions 2 --overload 6 \
+      --capacity auto --snapshot-dir /tmp/snap --resume
 """
 
 from __future__ import annotations
@@ -18,9 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt import checkpoint
 from repro.core import classifier as clf, mcd
 from repro.data import ecg
-from repro.serve import StreamingEngine
+from repro.serve import StreamingEngine, summarize
 
 
 def build_streams(n_sessions: int, beats: int, seed: int):
@@ -37,7 +49,11 @@ def build_streams(n_sessions: int, beats: int, seed: int):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--sessions", type=int, default=4,
+                    help="store capacity: concurrently-live streams")
+    ap.add_argument("--overload", type=int, default=None,
+                    help="total streams to serve (> --sessions exercises "
+                    "the admission queue; default: --sessions)")
     ap.add_argument("--chunk-len", type=int, default=20)
     ap.add_argument("--beats", type=int, default=2,
                     help="ECG beats (T=140 each) per session stream")
@@ -50,57 +66,123 @@ def main():
     ap.add_argument("--p", type=float, default=0.125)
     ap.add_argument("--ragged", action="store_true",
                     help="jitter chunk lengths per session per tick")
+    ap.add_argument("--capacity", default="fixed",
+                    choices=("fixed", "auto", "dynamic"),
+                    help="launch-shape policy: fixed=--chunk-len, "
+                    "auto=adaptive ladder, dynamic=per-tick max")
+    ap.add_argument("--max-pending", type=int, default=256,
+                    help="admission-queue backpressure bound")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="durable session snapshots (crash-safe resume)")
+    ap.add_argument("--snapshot-every", type=int, default=5,
+                    help="snapshot cadence in ticks")
+    ap.add_argument("--snapshot-keep", type=int, default=3,
+                    help="snapshots retained (older ones pruned; an "
+                    "unbounded history would fill the disk on exactly "
+                    "the long-running streams snapshots exist for)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest snapshot in --snapshot-dir "
+                    "and continue every stream where it left off")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    total = args.overload or args.sessions
+    if args.resume and not args.snapshot_dir:
+        ap.error("--resume requires --snapshot-dir")
 
     cfg = clf.ClassifierConfig(
         hidden=args.hidden, num_layers=args.layers,
         mcd=mcd.MCDConfig(p=args.p, placement=args.placement,
                           n_samples=args.samples, seed=args.seed))
     params = clf.init(jax.random.key(args.seed), cfg)
-    # Fixed-shape mode: ragged ticks and draining sessions all reuse one
-    # compiled graph (chunks never exceed --chunk-len by construction).
+    capacity = {"fixed": args.chunk_len, "auto": "auto",
+                "dynamic": None}[args.capacity]
     eng = StreamingEngine(params, cfg, backend=args.backend,
                           max_sessions=args.sessions,
-                          chunk_capacity=args.chunk_len)
+                          chunk_capacity=capacity,
+                          max_pending=args.max_pending)
 
-    streams, labels = build_streams(args.sessions, args.beats, args.seed)
-    for k in range(args.sessions):
-        eng.open_session(f"ecg-{k}")
-    print(f"streaming {args.sessions} sessions × {args.beats} beats "
-          f"(T={ecg.T_STEPS} each) | S={args.samples} chains/session "
-          f"p={cfg.mcd.p} B={mcd.placement_str(cfg.mcd.placement)} "
-          f"backend={args.backend}")
+    # Streams are regenerated deterministically from their generation
+    # params; the per-stream cursor lives *in* the session (steps served
+    # so far), so a resumed process only needs the snapshot + those params
+    # to pick up.  The params ride the snapshot — a resume with different
+    # flags would otherwise silently serve different signal content.
+    done: set[str] = set()
+    if args.resume:
+        extra = eng.restore(args.snapshot_dir)
+        done = set(extra.get("done", []))
+        gen = extra.get("gen")
+        if gen and (gen["total"], gen["beats"]) != (total, args.beats):
+            print(f"resume: adopting snapshot stream params "
+                  f"total={gen['total']} beats={gen['beats']} "
+                  f"(CLI values differ)")
+        if gen:
+            total, args.beats = int(gen["total"]), int(gen["beats"])
+        print(f"resumed tick {eng.tick}: live={eng.active_sessions} "
+              f"queued={eng.queued_sessions} done={sorted(done)}")
+        # (--seed / --samples mismatches are already rejected by
+        # eng.restore: they would change the Bayesian draw itself.)
+    streams, labels = build_streams(total, args.beats, args.seed)
+    if not args.resume:
+        # Admit everything up front: the first --sessions go live, the
+        # rest wait in the queue (earlier streams get higher priority —
+        # think triage order) and go live as streams finish.
+        for k in range(total):
+            live = eng.admit(f"ecg-{k}", priority=total - k)
+            tag = "live" if live is not None else "queued"
+            print(f"admit ecg-{k}: {tag}")
+
+    print(f"streaming {total} sessions ({args.sessions} live rows) × "
+          f"{args.beats} beats (T={ecg.T_STEPS} each) | S={args.samples} "
+          f"chains/session p={cfg.mcd.p} "
+          f"B={mcd.placement_str(cfg.mcd.placement)} "
+          f"backend={args.backend} capacity={args.capacity}")
 
     rng = np.random.default_rng(args.seed + 1)
-    pos = [0] * args.sessions
-    tick = 0
-    while any(pos[k] < len(streams[k]) for k in range(args.sessions)):
+    while len(done) < total:
         chunks = {}
-        for k in range(args.sessions):
-            if pos[k] >= len(streams[k]):
+        for sid in eng.active_sessions:
+            k = int(sid.split("-")[1])
+            pos = eng.store.get(sid).steps
+            if pos >= len(streams[k]):
                 continue
             n = args.chunk_len
             if args.ragged:
                 n = int(rng.integers(1, args.chunk_len + 1))
-            chunks[f"ecg-{k}"] = jnp.asarray(
-                streams[k][pos[k]:pos[k] + n], jnp.float32)
-            pos[k] += n
+            chunks[sid] = jnp.asarray(streams[k][pos:pos + n], jnp.float32)
         results = eng.step(chunks)
         line = []
-        for sid, res in results.items():
+        for sid, res in sorted(results.items()):
             su = res.summary
             cls = int(np.argmax(np.asarray(su.probs)))
             line.append(f"{sid}@{res.steps_total:4d} cls={cls} "
                         f"H={float(su.predictive_entropy):5.3f} "
                         f"MI={float(su.mutual_information):6.4f}")
-        print(f"tick {tick:3d} | " + " | ".join(line))
-        tick += 1
+        m = eng.last_metrics
+        stat = (f"cap={m.capacity} q={m.queue_depth} "
+                f"waste={m.pad_waste:4.2f}" if m else "idle")
+        print(f"tick {eng.tick:3d} [{stat}] | " + " | ".join(line))
 
-    for k in range(args.sessions):
-        sess = eng.close_session(f"ecg-{k}")
-        print(f"ecg-{k}: served {sess.steps} steps in {sess.chunks} chunks "
-              f"(beat labels {labels[k]})")
+        for sid in list(eng.active_sessions):
+            k = int(sid.split("-")[1])
+            if eng.store.get(sid).steps >= len(streams[k]):
+                sess = eng.close_session(sid)      # frees a row; queue drains
+                done.add(sid)
+                print(f"{sid}: served {sess.steps} steps in {sess.chunks} "
+                      f"chunks (beat labels {labels[k]})")
+        if args.snapshot_dir and eng.tick % args.snapshot_every == 0:
+            path = eng.snapshot(args.snapshot_dir, extra={
+                "done": sorted(done),
+                "gen": {"total": total, "beats": args.beats,
+                        "seed": args.seed}})
+            checkpoint.keep_last(args.snapshot_dir, args.snapshot_keep)
+            print(f"  snapshot -> {path}")
+
+    if eng.metrics:
+        agg = summarize(eng.metrics)
+        print(f"served {sum(m.live_steps for m in eng.metrics)} signal "
+              f"steps over {agg['ticks']} ticks | "
+              f"capacities used {agg['capacities_used']} | "
+              f"pad waste {agg['pad_waste']:4.2f}")
 
 
 if __name__ == "__main__":

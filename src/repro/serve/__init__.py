@@ -1,7 +1,20 @@
-"""serve substrate: static-batch LM engine + streaming session serving."""
+"""serve substrate: static-batch LM engine + streaming session serving.
 
+Data plane: ``sessions`` (carried state + mask coordinates) and ``stream``
+(the batched tick loop).  Control plane: ``admission`` (async queue with
+bounded backpressure), ``persistence`` (crash-safe snapshots over
+``repro.ckpt``) and ``scheduler`` (adaptive launch shapes + tick metrics).
+"""
+
+from repro.serve.admission import AdmissionQueue, QueueFull, Ticket
+from repro.serve.persistence import (load_snapshot_meta, restore_store,
+                                     snapshot_store)
+from repro.serve.scheduler import (AdaptiveTickScheduler, TickMetrics,
+                                   pow2_ladder, summarize)
 from repro.serve.sessions import CapacityError, Session, SessionStore
 from repro.serve.stream import ChunkResult, StreamingEngine
 
-__all__ = ["CapacityError", "ChunkResult", "Session", "SessionStore",
-           "StreamingEngine"]
+__all__ = ["AdmissionQueue", "AdaptiveTickScheduler", "CapacityError",
+           "ChunkResult", "QueueFull", "Session", "SessionStore",
+           "StreamingEngine", "Ticket", "TickMetrics", "load_snapshot_meta",
+           "pow2_ladder", "restore_store", "snapshot_store", "summarize"]

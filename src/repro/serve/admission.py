@@ -1,0 +1,130 @@
+"""Async admission with bounded backpressure for streaming sessions.
+
+PR 2's ``SessionStore`` fails fast: at capacity, ``admit`` raises
+:class:`~repro.serve.sessions.CapacityError` and the stream is simply not
+served.  That is the wrong failure mode for the paper's deployment — a
+patient monitor that silently drops a new stream at peak load is exactly
+the unsafe behaviour the Bayesian uncertainty machinery exists to prevent.
+
+This module turns admission into a *queue*: ``submit`` never races the
+store, it records the request (sid, priority, optional evicted
+:class:`~repro.serve.sessions.Session` to re-attach) and the engine drains
+the queue into freed rows at tick boundaries.  Backpressure is explicit and
+bounded — when ``max_pending`` requests are already waiting, ``submit``
+raises the typed :class:`QueueFull` so upstream load-shedding can happen at
+the edge, with a reason, instead of deep in the serving loop.
+
+Ordering is priority-first (higher wins — an ICU stream preempts the
+wait-list), FIFO within a priority class.  The queue holds no array state
+for fresh admissions; a re-attach request carries its evicted ``Session``
+(state + ``(seed, rows)`` coordinates), so draining it resumes the same
+Bayesian draw.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Iterator
+
+from repro.serve.sessions import Session, SessionStore
+
+
+class QueueFull(RuntimeError):
+    """Admission refused: ``max_pending`` requests are already waiting."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Ticket:
+    """One queued admission request (drain order: priority desc, then FIFO)."""
+
+    sid: str
+    priority: int
+    seq: int                        # FIFO tiebreak within a priority class
+    session: Session | None = None  # set for re-attach (evicted carry)
+
+
+class AdmissionQueue:
+    """Bounded priority queue feeding a :class:`SessionStore`.
+
+    ``submit`` enqueues; ``drain(store)`` admits (or re-attaches) as many
+    waiting requests as the store has room for, in priority order.  The
+    engine calls ``drain`` at every tick boundary and after every eviction,
+    so a freed row is reused on the very next tick.
+    """
+
+    def __init__(self, max_pending: int = 256):
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.max_pending = int(max_pending)
+        self._heap: list[tuple[int, int, Ticket]] = []
+        self._pending: dict[str, Ticket] = {}
+        self._seq = 0
+
+    def submit(self, sid: str, *, priority: int = 0,
+               session: Session | None = None) -> Ticket:
+        """Queue an admission (or, with ``session``, a re-attach) request."""
+        if session is not None and session.sid != sid:
+            raise ValueError(f"ticket sid {sid!r} != session.sid "
+                             f"{session.sid!r}")
+        if sid in self._pending:
+            raise ValueError(f"session {sid!r} already queued")
+        if len(self._pending) >= self.max_pending:
+            raise QueueFull(
+                f"admission queue full ({self.max_pending} pending); "
+                "shed load upstream or raise max_pending")
+        ticket = Ticket(sid=sid, priority=int(priority), seq=self._seq,
+                        session=session)
+        self._seq += 1
+        self._pending[sid] = ticket
+        heapq.heappush(self._heap, (-ticket.priority, ticket.seq, ticket))
+        return ticket
+
+    def cancel(self, sid: str) -> bool:
+        """Withdraw a waiting request; False if it was not queued."""
+        hit = self._pending.pop(sid, None) is not None
+        # Deletion is lazy (drain skips stale heap entries), but a store
+        # pinned at capacity never drains — compact so submit/cancel churn
+        # can't grow the heap (and any carried Sessions) without bound.
+        if hit and len(self._heap) > 2 * len(self._pending) + 8:
+            self._heap = [(-t.priority, t.seq, t)
+                          for t in self._pending.values()]
+            heapq.heapify(self._heap)
+        return hit
+
+    def drain(self, store: SessionStore) -> list[Session]:
+        """Admit waiting requests into free store rows, best-priority first.
+
+        Returns the sessions that went live this drain.  A re-attach whose
+        coordinates the store rejects (seed/rows mismatch) is dropped from
+        the queue and re-raised — it could never succeed later.
+        """
+        admitted: list[Session] = []
+        while self._pending and len(store) < store.max_sessions:
+            _, _, ticket = heapq.heappop(self._heap)
+            if self._pending.get(ticket.sid) is not ticket:
+                continue                      # cancelled (lazy deletion)
+            del self._pending[ticket.sid]
+            if ticket.session is not None:
+                admitted.append(store.attach(ticket.session))
+            else:
+                admitted.append(store.admit(ticket.sid))
+        return admitted
+
+    def waiting(self) -> list[Ticket]:
+        """Live tickets in drain order (priority desc, FIFO within)."""
+        live = [t for t in self._pending.values()]
+        return sorted(live, key=lambda t: (-t.priority, t.seq))
+
+    @property
+    def depth(self) -> int:
+        return len(self._pending)
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def __contains__(self, sid: str) -> bool:
+        return sid in self._pending
+
+    def __iter__(self) -> Iterator[Ticket]:
+        return iter(self.waiting())

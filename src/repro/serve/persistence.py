@@ -1,0 +1,221 @@
+"""Durable session state: crash-safe snapshots of the streaming store.
+
+The data plane (PR 2) keeps every live stream's state in process memory —
+per-chain ``(h, c)`` carries plus ``(seed, rows)`` mask coordinates.  Kill
+the process and every patient stream is gone, which the ROADMAP's streaming-
+hardening item calls out as incompatible with continuous monitoring.
+
+This module makes that state durable on top of :mod:`repro.ckpt.checkpoint`
+— the same atomic, sha256-manifested format the trainer uses, so a crash
+mid-snapshot can never leave a readable-but-corrupt latest:
+
+* arrays (each session's ``rows`` and per-layer ``(h, c)`` carry) go into
+  the checkpoint tree, keyed by sid;
+* everything structural — the allocator cursor, per-session step/chunk
+  cursors, queue order/priorities, scheduler window — rides as JSON ``meta``
+  inside the same manifest (``ckpt.save(meta=...)``), so arrays and
+  bookkeeping commit in one ``os.replace``.
+
+Restore is *exact*, not approximate: the counter-PRNG tied-mask design means
+masks are pure functions of ``(seed, rows)`` and are simply recomputed;
+``c`` carries round-trip in fp32 (the Pallas accumulator dtype); nothing
+stochastic lives outside the snapshot.  A killed process therefore resumes
+every live stream **bit-identically** — the invariant
+``tests/test_controlplane.py`` pins across all three backends, including
+across a ``chunk_capacity`` change at resume (the lengths-pinned graph
+family is shape-independent).
+
+A queued re-attach (an evicted session waiting in the admission queue with
+its carry) is state too — snapshots include it, so a crash can't silently
+drop a waiting patient either.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.serve.admission import AdmissionQueue
+from repro.serve.sessions import Session, SessionStore
+
+FORMAT_VERSION = 1
+
+_KEY_RE = re.compile(r"[^\w.-]+")
+
+
+def _tree_key(sid: str, used: set[str]) -> str:
+    """A collision-free checkpoint key for a sid.
+
+    Sids are free-form ('ward 3' and 'ward_3' may coexist) but checkpoint
+    leaf names are sanitized, so two sids could alias the same leaf and a
+    *partial* restore could silently read the wrong patient's carry.  The
+    key actually used is made unique here and recorded in the meta, so
+    restores always address arrays by the recorded key, never by a
+    re-derived (and possibly ambiguous) name.
+    """
+    base = _KEY_RE.sub("_", sid).strip("_") or "sid"
+    key, n = base, 1
+    while key in used:
+        key = f"{base}__{n}"
+        n += 1
+    used.add(key)
+    return key
+
+
+def _session_tree(sess: Session) -> dict:
+    entry = {"rows": np.asarray(sess.rows)}
+    if sess.state is not None:
+        entry["state"] = [[np.asarray(h), np.asarray(c)]
+                          for h, c in sess.state]
+    return entry
+
+
+def _session_meta(sess: Session) -> dict:
+    return {"steps": int(sess.steps), "chunks": int(sess.chunks),
+            "layers": None if sess.state is None else len(sess.state)}
+
+
+def _session_like(meta: dict) -> dict:
+    like = {"rows": 0}
+    if meta["layers"] is not None:
+        like["state"] = [[0, 0] for _ in range(meta["layers"])]
+    return like
+
+
+def _rebuild_session(sid: str, meta: dict, arrays: dict, seed) -> Session:
+    state = None
+    if meta["layers"] is not None:
+        state = [(jnp.asarray(h), jnp.asarray(c))
+                 for h, c in arrays["state"]]
+    return Session(sid=sid, rows=jnp.asarray(arrays["rows"]), seed=seed,
+                   state=state, steps=int(meta["steps"]),
+                   chunks=int(meta["chunks"]))
+
+
+def snapshot_store(directory: str, store: SessionStore, *,
+                   step: int | None = None, queue: AdmissionQueue | None = None,
+                   extra: dict | None = None) -> str:
+    """Atomically snapshot a store (and optionally its admission queue).
+
+    ``step`` defaults to one past the latest snapshot in ``directory`` (a
+    monotone history; prune with ``ckpt.keep_last``).  ``extra`` is caller
+    JSON riding in the manifest (engines stash tick counters etc. there).
+    Returns the snapshot path.
+    """
+    if step is None:
+        latest = ckpt.latest_step(directory)
+        step = 0 if latest is None else latest + 1
+    tree: dict = {}
+    used: set[str] = set()
+    meta: dict = {
+        "format": FORMAT_VERSION,
+        "n_samples": store.n_samples,
+        "seed": store.seed,
+        "max_sessions": store.max_sessions,
+        "next_row": store.next_row,
+        "sessions": {},
+        "queue": [],
+    }
+    for sess in store.sessions():
+        key = _tree_key(sess.sid, used)
+        tree[key] = _session_tree(sess)
+        meta["sessions"][sess.sid] = dict(_session_meta(sess), key=key)
+    if queue is not None:
+        for ticket in queue.waiting():
+            entry = {"sid": ticket.sid, "priority": ticket.priority,
+                     "attached": ticket.session is not None}
+            if ticket.session is not None:
+                # A queued re-attach carries live state — it must survive
+                # the crash with the same fidelity as an admitted session.
+                key = _tree_key(ticket.sid, used)
+                tree[key] = _session_tree(ticket.session)
+                entry["session"] = dict(_session_meta(ticket.session),
+                                        key=key)
+            meta["queue"].append(entry)
+    if extra is not None:
+        meta["extra"] = extra
+    return ckpt.save(directory, step, tree, meta=meta)
+
+
+def load_snapshot_meta(directory: str, step: int | None = None) -> dict:
+    """The snapshot's meta dict (resolving ``step=None`` to the latest)."""
+    if step is None:
+        step = ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no snapshot under {directory!r}")
+    meta = ckpt.load_meta(directory, step)
+    if meta is None or "sessions" not in meta:
+        raise IOError(f"{directory!r} step {step} is not a session snapshot")
+    if meta.get("format") != FORMAT_VERSION:
+        raise IOError(f"snapshot format {meta.get('format')!r}, "
+                      f"expected {FORMAT_VERSION}")
+    meta["step"] = step
+    return meta
+
+
+def restore_store(directory: str, *, step: int | None = None,
+                  sids: list[str] | None = None,
+                  queue: AdmissionQueue | None = None,
+                  max_sessions: int | None = None,
+                  ) -> tuple[SessionStore, dict]:
+    """Rebuild a :class:`SessionStore` from a snapshot, bit-identically.
+
+    ``sids`` restores only a subset of the saved sessions — live, queued
+    re-attach and fresh wait-list entries alike (partial-tree read through
+    ``ckpt.restore``; e.g. shedding low-priority streams on a smaller
+    replacement host); the allocator cursor is restored either way, so
+    unrestored sessions' rows are never re-drawn by later admissions.
+    ``queue``: an :class:`AdmissionQueue` to refill with the snapshotted
+    wait-list (priorities and FIFO order preserved; re-attach tickets get
+    their sessions rebuilt).  Returns ``(store, meta)``.
+    """
+    meta = load_snapshot_meta(directory, step)
+    step = meta["step"]
+    queued_attached = {e["sid"]: e for e in meta["queue"] if e["attached"]}
+    queued_fresh = {e["sid"] for e in meta["queue"] if not e["attached"]}
+    known = set(meta["sessions"]) | set(queued_attached) | queued_fresh
+    want = known if sids is None else set(sids)
+    if want - known:
+        raise KeyError(f"snapshot has no session(s) {sorted(want - known)}")
+    if queue is None and (lost := want - set(meta["sessions"])):
+        raise ValueError(
+            f"session(s) {sorted(lost)} are wait-list entries; pass queue= "
+            "(or a sids= selection excluding them) — a restore must never "
+            "silently drop a waiting stream")
+    # Arrays are addressed by the snapshot's recorded keys, never by a
+    # re-derived sid sanitization — two sids that alias the same leaf name
+    # can therefore never cross-contaminate a partial restore.  Fresh
+    # wait-list entries carry no arrays; selecting them just re-queues.
+    keys, like = {}, {}
+    for sid in want - queued_fresh:
+        smeta = (meta["sessions"].get(sid)
+                 or queued_attached[sid]["session"])
+        keys[sid] = smeta["key"]
+        like[smeta["key"]] = _session_like(smeta)
+    loaded = ckpt.restore(directory, step, like, partial=True) if like else {}
+    arrays = {sid: loaded[key] for sid, key in keys.items()}
+
+    # The cursor outlives the sessions (first_row): rows of unrestored (or
+    # long-evicted) streams stay burned, so no post-restore admission can
+    # ever repeat a pre-crash Bayesian draw.
+    store = SessionStore(meta["n_samples"], meta["seed"],
+                         max_sessions=max_sessions or meta["max_sessions"],
+                         first_row=int(meta["next_row"]))
+    for sid, smeta in meta["sessions"].items():
+        if sid not in want:
+            continue
+        store.attach(_rebuild_session(sid, smeta, arrays[sid], meta["seed"]))
+    if queue is not None:
+        for entry in meta["queue"]:
+            if entry["sid"] not in want:     # the sids filter selects the
+                continue                     # wait-list too, both kinds
+            sess = None
+            if entry["attached"]:
+                sess = _rebuild_session(entry["sid"], entry["session"],
+                                        arrays[entry["sid"]], meta["seed"])
+            queue.submit(entry["sid"], priority=entry["priority"],
+                         session=sess)
+    return store, meta

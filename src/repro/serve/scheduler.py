@@ -1,0 +1,152 @@
+"""Adaptive tick scheduling: pick the launch shape from the observed load.
+
+The streaming engine has two shape policies from PR 2: dynamic (pad each
+tick to its own max chunk length — minimal FLOPs, but every new
+``(T, batch)`` pair retraces and recompiles) and fixed (hand-set
+``chunk_capacity`` — one compiled graph forever, but the operator has to
+guess the right capacity up front and eats the pad waste of a bad guess).
+
+This scheduler closes the loop: it watches the ragged chunk-length
+distribution and, per tick, picks a capacity from a small **ladder** of
+pre-warmable fixed shapes.  Compilation stays bounded by the ladder length
+(each rung is one graph, exactly like PR 2's fixed-shape mode), while the
+rung tracks the observed load — a quiet night of short chunks slides down
+to a small rung, a burst of long chunks climbs, and the mask/carry numerics
+never notice because the lengths-pinned graph family is bit-identical
+across launch shapes (docs/kernels.md).
+
+Per tick it also emits :class:`TickMetrics` — rows occupied, queue depth,
+pad waste, tokens/sec — the control-plane observables the ROADMAP's
+"serve heavy traffic" north star needs before any autoscaling can exist.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable, Sequence
+
+
+def pow2_ladder(max_capacity: int, *, first: int = 8) -> tuple[int, ...]:
+    """Power-of-two rungs ``first..>=max_capacity`` (the default ladder)."""
+    if max_capacity < 1:
+        raise ValueError(f"max_capacity must be >= 1, got {max_capacity}")
+    rungs, c = [], max(1, first)
+    while c < max_capacity:
+        rungs.append(c)
+        c *= 2
+    rungs.append(max(c, max_capacity))
+    return tuple(rungs)
+
+
+@dataclasses.dataclass
+class TickMetrics:
+    """Per-tick control-plane observables (host-side, no device sync)."""
+
+    tick: int
+    capacity: int          # launch T this tick (ladder rung / fixed / max len)
+    n_chunks: int          # sessions served this tick
+    live_rows: int         # session-chain rows carrying real data
+    batch_rows: int        # launch rows incl. idle-slot padding
+    queue_depth: int       # admissions still waiting after the drain
+    live_steps: int        # sum of chunk lengths (signal timesteps served)
+    live_chain_steps: int  # live_steps x S MC chains (chain-timesteps)
+    padded_steps: int      # batch_rows * capacity (chain-timesteps launched)
+    pad_waste: float       # 1 - live_chain_steps/padded_steps
+    duration_s: float      # wall-clock of the engine tick (dispatch incl.)
+    tokens_per_sec: float  # live chain-timesteps / duration (proxy off-TPU)
+
+
+class AdaptiveTickScheduler:
+    """Pick ``chunk_capacity`` online from the ragged-chunk distribution.
+
+    Args:
+      ladder: ascending candidate capacities; each rung is one compiled
+        graph, so ``len(ladder)`` bounds total recompiles for life.
+      window: how many recent chunk lengths inform the choice.
+      percentile: the rung must cover this percentile of the window (100 =
+        the windowed max).  Lower values shrink pad waste for long-tailed
+        loads at the cost of climbing a rung when an outlier does arrive.
+        The current tick's own max is always covered regardless.
+    """
+
+    def __init__(self, ladder: Sequence[int] | None = None, *,
+                 max_capacity: int = 512, window: int = 64,
+                 percentile: float = 100.0):
+        self.ladder = tuple(sorted(ladder)) if ladder \
+            else pow2_ladder(max_capacity)
+        if not self.ladder or any(c < 1 for c in self.ladder):
+            raise ValueError(f"bad capacity ladder {self.ladder}")
+        if not 0.0 < percentile <= 100.0:
+            raise ValueError(f"percentile must be in (0, 100], "
+                             f"got {percentile}")
+        self.percentile = float(percentile)
+        self._window: deque[int] = deque(maxlen=int(window))
+
+    @property
+    def max_capacity(self) -> int:
+        return self.ladder[-1]
+
+    def plan(self, lens: Iterable[int]) -> int:
+        """Record this tick's chunk lengths; return the capacity to launch.
+
+        Chunks longer than the top rung are rejected exactly like PR 2's
+        fixed-shape mode rejects over-capacity chunks — the ladder is the
+        pre-warmed shape budget, not a suggestion.
+        """
+        lens = [int(n) for n in lens]
+        if not lens:
+            return self.ladder[0]
+        need = max(lens)
+        if need > self.ladder[-1]:
+            raise ValueError(
+                f"chunk of {need} steps exceeds the capacity ladder "
+                f"(top rung {self.ladder[-1]}); split the chunk or extend "
+                "the ladder")
+        self._window.extend(lens)
+        target = max(need, self._percentile_target())
+        for rung in self.ladder:
+            if rung >= target:
+                return rung
+        return self.ladder[-1]
+
+    def _percentile_target(self) -> int:
+        win = sorted(self._window)
+        if not win:
+            return self.ladder[0]
+        k = max(0, min(len(win) - 1,
+                       int(round(self.percentile / 100.0 * len(win))) - 1))
+        return win[k]
+
+    # -- persistence hooks (repro.serve.persistence) -------------------------
+    def state(self) -> dict:
+        """JSON-able state: the observation window."""
+        return {"window": list(self._window)}
+
+    def load_state(self, state: dict) -> None:
+        self._window.extend(int(n) for n in state.get("window", ()))
+
+
+def summarize(metrics: Sequence[TickMetrics]) -> dict:
+    """Aggregate control-plane observables over recorded ticks.
+
+    The engine's ``metrics`` list is the single source of truth (the
+    scheduler holds no copy); feed it here for the roll-up an operator or
+    autoscaler wants: pad waste, distinct launch shapes (compiled-graph
+    count), queue depth, chain-timesteps/sec.
+    """
+    if not metrics:
+        return {"ticks": 0}
+    live = sum(m.live_chain_steps for m in metrics)
+    padded = sum(m.padded_steps for m in metrics)
+    dur = sum(m.duration_s for m in metrics)
+    return {
+        "ticks": len(metrics),
+        "capacities_used": sorted({m.capacity for m in metrics}),
+        "live_chain_steps": live,
+        "padded_steps": padded,
+        "pad_waste": 1.0 - live / padded if padded else 0.0,
+        "mean_queue_depth": (sum(m.queue_depth for m in metrics)
+                             / len(metrics)),
+        "tokens_per_sec": live / dur if dur > 0 else 0.0,
+    }

@@ -139,6 +139,17 @@ class SessionStore:
     def active(self) -> list[str]:
         return list(self._sessions)
 
+    def sessions(self) -> list[Session]:
+        """Live sessions in admission order (snapshot iteration order)."""
+        return list(self._sessions.values())
+
+    @property
+    def next_row(self) -> int:
+        """The allocator cursor — part of the durable-snapshot format:
+        restoring it is what keeps post-restart admissions from re-drawing
+        the rows (and hence the Bayesian draws) of pre-crash sessions."""
+        return self._next_row
+
     def __len__(self) -> int:
         return len(self._sessions)
 

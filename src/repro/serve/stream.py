@@ -22,22 +22,33 @@ backends, so a session's results never depend on how its signal was chunked
 or on which other sessions happened to share the batch — the invariant
 ``tests/test_streaming.py`` pins down.  Masks stay tied across the whole
 session via the ``(seed, rows)`` coordinates in ``repro.serve.sessions``.
+
+The control plane (PR 3) sits on top of this data plane: async admission
+with priorities and bounded backpressure (``admit``/``repro.serve.
+admission``), crash-safe durability (``snapshot``/``restore`` over
+``repro.serve.persistence``), and an adaptive launch-shape scheduler with
+per-tick metrics (``chunk_capacity="auto"``, ``repro.serve.scheduler``).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
 from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autoencoder as _ae, classifier as _clf
+from repro.core import autoencoder as _ae, classifier as _clf, mcd as _mcd
 from repro.core.uncertainty import (ClassificationSummary, RegressionSummary,
                                     classification_summary,
                                     regression_summary)
-from repro.serve.sessions import SessionStore
+from repro.serve import persistence as _persist
+from repro.serve.admission import AdmissionQueue
+from repro.serve.scheduler import AdaptiveTickScheduler, TickMetrics
+from repro.serve.sessions import Session, SessionStore
 
 
 @dataclasses.dataclass
@@ -61,18 +72,33 @@ class StreamingEngine:
       backend: ``run_stack`` execution path; ``"pallas_seq"`` is the serving
         hot path (weights VMEM-resident across each chunk).
       max_sessions: admission bound on concurrently-open sessions.
-      chunk_capacity: when set, every tick launches with a **fixed shape** —
-        chunks pad to this many timesteps and the batch pads to
+      chunk_capacity: when an int, every tick launches with a **fixed
+        shape** — chunks pad to this many timesteps and the batch pads to
         ``max_sessions`` session slots (dummy rows, length 1, discarded).
         One jit trace / XLA compile serves every tick, whatever the ragged
         chunk lengths or tick composition; without it each new
         ``(max chunk len, session count)`` pair retraces.  Chunks longer
-        than the capacity are rejected.
+        than the capacity are rejected.  ``"auto"`` delegates the choice to
+        an :class:`AdaptiveTickScheduler` — per tick the launch T is picked
+        from a small ladder of pre-warmable shapes tracking the observed
+        chunk-length distribution (compiles bounded by the ladder length;
+        batch still pads to ``max_sessions``).  All three policies are
+        bit-identical: the lengths-pinned graph family doesn't care about
+        launch shape.
+      max_pending: admission-queue bound (``admit`` backpressure).
+      ladder: capacity candidates for ``chunk_capacity="auto"`` (default:
+        powers of two up to 512, see ``scheduler.pow2_ladder``).
+      metrics_window: how many recent :class:`TickMetrics` ``metrics``
+        retains (bounded — the engine targets unbounded streams).
       interpret: forwarded to the Pallas backends (default: auto off-TPU).
     """
 
     def __init__(self, params, cfg, *, backend: str = "pallas_seq",
-                 max_sessions: int = 64, chunk_capacity: int | None = None,
+                 max_sessions: int = 64,
+                 chunk_capacity: int | str | None = None,
+                 max_pending: int = 256, ladder=None,
+                 scheduler: AdaptiveTickScheduler | None = None,
+                 metrics_window: int = 4096,
                  interpret: bool | None = None):
         if isinstance(cfg, _clf.ClassifierConfig):
             self.kind = "classifier"
@@ -86,27 +112,174 @@ class StreamingEngine:
         self.interpret = interpret
         self.chunk_capacity = chunk_capacity
         self.max_sessions = max_sessions
+        self._scheduler = None
+        if chunk_capacity == "auto":
+            # A caller-tuned scheduler (percentile, window) wins over the
+            # default ladder-only construction.
+            self._scheduler = scheduler or AdaptiveTickScheduler(ladder)
+        elif isinstance(chunk_capacity, str):
+            raise ValueError(f"chunk_capacity must be an int, None or "
+                             f"'auto', got {chunk_capacity!r}")
+        # Fixed-shape launches (idle session slots padded) for both the
+        # hand-set capacity and the adaptive ladder — one graph per shape.
+        self._fixed = chunk_capacity is not None
         s = cfg.mcd.n_samples if cfg.mcd.any_bayesian else 1
         self.n_samples = max(1, s)
         self.store = SessionStore(self.n_samples, cfg.mcd.seed,
                                   max_sessions=max_sessions)
+        self.queue = AdmissionQueue(max_pending)
+        self.tick = 0
+        # Bounded: the engine is built for unbounded streams — an
+        # ever-growing per-tick list would leak on exactly that workload.
+        # summarize() rolls up whatever the window holds.
+        self.metrics: deque[TickMetrics] = deque(maxlen=metrics_window)
 
     # -- session lifecycle ---------------------------------------------------
     def open_session(self, sid: str):
-        """Admit a stream; its S mask rows are fixed here, for life."""
+        """Admit a stream *now* or fail fast with ``CapacityError``.
+
+        The synchronous path — callers that would rather wait for a freed
+        row than handle the error use :meth:`admit`.  Its S mask rows are
+        fixed here, for life.
+        """
         return self.store.admit(sid)
 
+    def admit(self, sid: str, *, priority: int = 0,
+              session: Session | None = None):
+        """Queue a stream for admission; drain it into any free row now.
+
+        The asynchronous path: never raises ``CapacityError`` — at capacity
+        the request waits (bounded by ``max_pending``; ``QueueFull`` beyond
+        that) and goes live when an eviction or tick boundary frees a row,
+        highest ``priority`` first, FIFO within a class.  ``session`` makes
+        it a re-attach request (an evicted carry resumes the same draw).
+        Returns the live :class:`Session` if admitted immediately, else
+        None (it is queued; watch ``queued_sessions``).
+        """
+        if sid in self.store:
+            raise ValueError(f"session {sid!r} already admitted")
+        if session is not None:
+            # Fail the statically-checkable mismatches *here*, not later
+            # inside whichever step()/close_session() happens to drain the
+            # ticket (where the error would hit an unrelated caller and,
+            # in close_session, cost them the evicted carry).
+            if session.seed != self.store.seed:
+                raise ValueError(
+                    f"session {sid!r} was drawn under seed "
+                    f"{session.seed!r}, engine uses {self.store.seed!r}")
+            if int(session.rows.shape[0]) != self.n_samples:
+                raise ValueError(
+                    f"session {sid!r} carries {int(session.rows.shape[0])} "
+                    f"MC chains, engine serves {self.n_samples}")
+        self.queue.submit(sid, priority=priority, session=session)
+        self._drain()
+        live = self.store
+        return live.get(sid) if sid in live else None
+
     def close_session(self, sid: str):
-        """Evict a finished stream; returns the Session (final carry)."""
-        return self.store.evict(sid)
+        """Evict a finished stream; returns the Session (final carry).
+
+        The freed row is immediately offered to the admission queue.
+        """
+        sess = self.store.evict(sid)
+        self._drain()
+        return sess
 
     def attach_session(self, session):
         """Re-admit an evicted Session (same draw: state + (seed, rows))."""
         return self.store.attach(session)
 
+    def _drain(self):
+        return self.queue.drain(self.store)
+
     @property
     def active_sessions(self) -> list[str]:
         return self.store.active
+
+    @property
+    def queued_sessions(self) -> list[str]:
+        """Sids still waiting for a row, in drain order."""
+        return [t.sid for t in self.queue.waiting()]
+
+    @property
+    def last_metrics(self) -> TickMetrics | None:
+        return self.metrics[-1] if self.metrics else None
+
+    # -- durability ----------------------------------------------------------
+    def snapshot(self, directory: str, *, step: int | None = None,
+                 extra: dict | None = None) -> str:
+        """Atomic, crash-safe snapshot of every live + queued stream.
+
+        Durable state is exactly: per-session per-chain ``(h, c)`` carries,
+        ``(seed, rows)`` mask coordinates, step/chunk cursors, the row
+        allocator, the admission wait-list, the scheduler's observation
+        window and the tick counter.  Masks themselves are *not* stored —
+        the counter PRNG recomputes them from ``(seed, rows)``, which is
+        why restore is bit-exact.  Model params ride the training
+        checkpoint, not the session snapshot.
+        """
+        engine_meta = {"tick": self.tick, "kind": self.kind,
+                       "backend": self.backend,
+                       "mcd": {"p": float(self.cfg.mcd.p),
+                               "placement":
+                                   _mcd.placement_str(self.cfg.mcd.placement)}}
+        if self._scheduler is not None:
+            engine_meta["sched"] = self._scheduler.state()
+        if extra is not None:
+            engine_meta["extra"] = extra
+        return _persist.snapshot_store(directory, self.store, step=step,
+                                       queue=self.queue, extra=engine_meta)
+
+    def restore(self, directory: str, *, step: int | None = None,
+                sids: list[str] | None = None) -> dict:
+        """Resume every snapshotted stream into this (fresh) engine.
+
+        Replaces the store, wait-list and tick counter with the snapshot's;
+        serving then continues bit-identically to the uninterrupted run
+        (any backend, any ``chunk_capacity`` — including one different
+        from the snapshotting process's).  Returns the engine ``extra``
+        meta stashed by :meth:`snapshot`.  The engine must be freshly
+        constructed (no live sessions) with a matching model config.
+        """
+        if self.store.sessions() or len(self.queue):
+            raise RuntimeError("restore() needs a fresh engine: live or "
+                               "queued sessions would collide")
+        # Size the replacement queue to hold the snapshot's whole wait-list
+        # — a valid snapshot must restore even if this process was launched
+        # with a smaller max_pending than the one that wrote it.
+        peek = _persist.load_snapshot_meta(directory, step)
+        queue = AdmissionQueue(max(self.queue.max_pending,
+                                   len(peek["queue"]) or 1))
+        store, meta = _persist.restore_store(
+            directory, step=peek["step"], sids=sids, queue=queue,
+            max_sessions=self.max_sessions)
+        if meta["n_samples"] != self.n_samples:
+            raise ValueError(
+                f"snapshot serves {meta['n_samples']} MC chains/session, "
+                f"engine config serves {self.n_samples}")
+        if meta["seed"] != self.cfg.mcd.seed:
+            raise ValueError(
+                f"snapshot drawn under seed {meta['seed']!r}, engine uses "
+                f"{self.cfg.mcd.seed!r} — resuming would change the masks")
+        engine_meta = meta.get("extra") or {}
+        if engine_meta.get("kind") not in (None, self.kind):
+            raise ValueError(f"snapshot is a {engine_meta['kind']} stream, "
+                             f"engine is a {self.kind}")
+        # p/placement change the mask *values* even under the same (seed,
+        # rows) — resuming across them would silently alter the draw.
+        snap_mcd = engine_meta.get("mcd")
+        here_mcd = {"p": float(self.cfg.mcd.p),
+                    "placement": _mcd.placement_str(self.cfg.mcd.placement)}
+        if snap_mcd is not None and snap_mcd != here_mcd:
+            raise ValueError(
+                f"snapshot streamed under mcd {snap_mcd}, engine uses "
+                f"{here_mcd} — resuming would silently change the masks")
+        self.store = store
+        self.queue = queue
+        self.tick = int(engine_meta.get("tick", 0))
+        if self._scheduler is not None and "sched" in engine_meta:
+            self._scheduler.load_state(engine_meta["sched"])
+        return engine_meta.get("extra", {})
 
     # -- serving -------------------------------------------------------------
     def step(self, chunks: Mapping[str, Any]) -> dict[str, ChunkResult]:
@@ -117,8 +290,10 @@ class StreamingEngine:
         (ragged) and must be >= 1.  Every listed session must be open.
         Returns per-session :class:`ChunkResult`; carried state advances.
         """
+        self._drain()          # tick boundary: freed rows feed the wait-list
         if not chunks:
             return {}
+        t_start = time.perf_counter()
         s = self.n_samples
         sessions, xs, lens = [], [], []
         for sid, chunk in chunks.items():
@@ -133,15 +308,19 @@ class StreamingEngine:
             xs.append(x)
             lens.append(x.shape[0])
 
-        if self.chunk_capacity is not None and max(lens) > self.chunk_capacity:
-            raise ValueError(f"chunk of {max(lens)} steps exceeds "
-                             f"chunk_capacity={self.chunk_capacity}")
-        t_max = self.chunk_capacity or max(lens)
+        if self._scheduler is not None:
+            t_max = self._scheduler.plan(lens)
+        elif self.chunk_capacity is not None:
+            if max(lens) > self.chunk_capacity:
+                raise ValueError(f"chunk of {max(lens)} steps exceeds "
+                                 f"chunk_capacity={self.chunk_capacity}")
+            t_max = self.chunk_capacity
+        else:
+            t_max = max(lens)
         dtype = xs[0].dtype
-        # Fixed-shape mode pads idle session slots so one compiled graph
-        # serves every tick (dummy rows freeze after step 0, results dropped).
-        n_pad = ((self.max_sessions - len(sessions)) * s
-                 if self.chunk_capacity is not None else 0)
+        # Fixed-shape modes pad idle session slots so one compiled graph per
+        # shape serves every tick (dummy rows freeze after step 0, dropped).
+        n_pad = (self.max_sessions - len(sessions)) * s if self._fixed else 0
         # Batch assembly stages in host numpy — one device transfer per
         # operand per tick, not O(sessions) tiny dispatches.  Session-major,
         # chain-minor: row k*S+j is chain j of session k, matching the
@@ -201,6 +380,22 @@ class StreamingEngine:
             results[sess.sid] = ChunkResult(sid=sess.sid, length=L,
                                             steps_total=sess.steps,
                                             summary=summary)
+
+        # Control-plane observables (host wall-clock; on CPU interpret the
+        # dispatch is effectively synchronous, on TPU it's a dispatch proxy).
+        dur = time.perf_counter() - t_start
+        live_steps = int(sum(lens))
+        m = TickMetrics(
+            tick=self.tick, capacity=int(t_max), n_chunks=len(sessions),
+            live_rows=len(sessions) * s, batch_rows=nb,
+            queue_depth=len(self.queue), live_steps=live_steps,
+            live_chain_steps=live_steps * s,
+            padded_steps=nb * int(t_max),
+            pad_waste=1.0 - (live_steps * s) / (nb * int(t_max)),
+            duration_s=dur,
+            tokens_per_sec=live_steps * s / dur if dur > 0 else 0.0)
+        self.metrics.append(m)
+        self.tick += 1
         return results
 
     def _gather_states(self, sessions, dtype, n_pad: int = 0):
@@ -214,7 +409,7 @@ class StreamingEngine:
         first tick must present the same jit pytree as every later tick,
         or the one-graph guarantee would break on tick two.
         """
-        if all(sess.fresh for sess in sessions) and self.chunk_capacity is None:
+        if all(sess.fresh for sess in sessions) and not self._fixed:
             return None
         c_dtype = dtype if self.backend == "reference" else jnp.float32
         hiddens = (self._encoder_hiddens())

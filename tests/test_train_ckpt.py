@@ -140,3 +140,48 @@ class TestCheckpoint:
         checkpoint.keep_last(d, 2)
         steps = sorted(int(f.split("-")[1]) for f in os.listdir(d))
         assert steps == [3, 4]
+
+    def test_meta_rides_the_manifest(self, tmp_path):
+        """save(meta=) commits JSON alongside the arrays atomically; it comes
+        back via load_meta and never perturbs the array restore."""
+        d = str(tmp_path / "ck")
+        tree = {"x": jnp.ones(3)}
+        checkpoint.save(d, 1, tree, meta={"cursor": 7, "sids": ["a", "b"]})
+        assert checkpoint.load_meta(d, 1) == {"cursor": 7,
+                                              "sids": ["a", "b"]}
+        np.testing.assert_array_equal(
+            np.asarray(checkpoint.restore(d, 1, tree)["x"]), np.ones(3))
+        checkpoint.save(d, 2, tree)                  # meta stays optional
+        assert checkpoint.load_meta(d, 2) is None
+
+    def test_meta_must_be_json(self, tmp_path):
+        with pytest.raises(TypeError):
+            checkpoint.save(str(tmp_path / "ck"), 1, {"x": jnp.ones(2)},
+                            meta={"bad": jnp.ones(2)})
+
+    def test_partial_restore_subset(self, tmp_path):
+        """A like-tree naming a subset of the saved leaves restores just
+        that subset; a leaf the manifest doesn't know stays an error."""
+        d = str(tmp_path / "ck")
+        tree = {"a": {"w": jnp.arange(4.0)}, "b": {"w": jnp.arange(2.0)}}
+        checkpoint.save(d, 1, tree)
+        sub = checkpoint.restore(d, 1, {"a": {"w": 0}}, partial=True)
+        np.testing.assert_array_equal(np.asarray(sub["a"]["w"]),
+                                      np.arange(4.0))
+        with pytest.raises(KeyError, match="not in checkpoint"):
+            checkpoint.restore(d, 1, {"zz": {"w": 0}}, partial=True)
+        # without partial=True a truncated like-tree is a caller bug
+        with pytest.raises(ValueError, match="partial=True"):
+            checkpoint.restore(d, 1, {"a": {"w": 0}})
+
+    def test_partial_restore_refuses_deduped_names(self, tmp_path):
+        """'a b' and 'a_b' sanitize to the same leaf name; the positional
+        __k disambiguation is full-tree-order dependent, so a partial
+        restore must refuse rather than silently return a sibling's
+        array."""
+        d = str(tmp_path / "ck")
+        checkpoint.save(d, 1, {"a b": jnp.zeros(2), "a_b": jnp.ones(2)})
+        with pytest.raises(ValueError, match="disambiguated"):
+            checkpoint.restore(d, 1, {"a_b": 0}, partial=True)
+        full = checkpoint.restore(d, 1, {"a b": 0, "a_b": 0})
+        np.testing.assert_array_equal(np.asarray(full["a_b"]), np.ones(2))
