@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core import cells, mcd
-from repro.kernels import mcd_lstm, ops, ref
+from repro.kernels import mcd_gru, mcd_lstm, ops, ref
 
 
 def sweep_step_vs_seq():
@@ -63,6 +63,50 @@ def sweep_step_vs_seq():
                     f"weight_refetches_per_seq={T}")
 
 
+def sweep_gru_step_vs_seq():
+    """GRU tokens/sec, step vs sequence fusion — the 3-gate counterpart.
+
+    Same shapes as the LSTM sweep so the rows compare directly: the GRU
+    trades one gate MVM (and the cell-state tail) for the reset-gate
+    product, the paper framework's cheaper algorithmic configuration.
+    """
+    seed, layer, p = 0, 0, 0.125
+    for B, T, H, S in ((8, 16, 16, 1), (8, 16, 32, 1), (4, 32, 16, 2)):
+        I = H
+        ks = jax.random.split(jax.random.key(0), 2)
+        wx = jax.random.normal(ks[0], (I, 3, H)) * 0.1
+        wh = jax.random.normal(ks[1], (H, 3, H)) * 0.1
+        b = jnp.zeros((3, H))
+        rows = jnp.arange(S * B, dtype=jnp.uint32)
+        x_seq = jax.random.normal(jax.random.key(1), (S * B, T, I))
+        keys = mcd_gru.gate_keys(seed, layer)
+        tokens = S * B * T
+
+        def step_fused(x):
+            return ops.fused_gru_layer(wx, wh, b, x, rows, seed, layer, p)[0]
+
+        def seq_fused(x):
+            return ops.fused_gru_seq(wx, wh, b, x, rows, seed, layer, p)[0]
+
+        def ref_scan(x):
+            return ref.mcd_gru_seq(x, wx, wh, b, rows, keys, p)[0]
+
+        t_step = common.time_call(step_fused, x_seq, iters=2)
+        t_seq = common.time_call(seq_fused, x_seq, iters=2)
+        t_ref = common.time_call(jax.jit(ref_scan), x_seq, iters=3)
+        tag = f"B{B}.T{T}.H{H}.S{S}"
+        common.emit(f"kernel.gru.step_fused.{tag}", t_step,
+                    f"tokens_per_s={tokens / (t_step * 1e-6):.0f};"
+                    f"kernel_entries={T}")
+        common.emit(f"kernel.gru.seq_fused.{tag}", t_seq,
+                    f"tokens_per_s={tokens / (t_seq * 1e-6):.0f};"
+                    f"kernel_entries=1;"
+                    f"speedup_vs_step={t_step / t_seq:.2f}x")
+        common.emit(f"kernel.gru.jnp_ref_scan.{tag}", t_ref,
+                    f"tokens_per_s={tokens / (t_ref * 1e-6):.0f};"
+                    f"weight_refetches_per_seq={T}")
+
+
 def run():
     B, T, I, H = 64, 140, 32, 32
     ks = jax.random.split(jax.random.key(0), 3)
@@ -90,6 +134,7 @@ def run():
                 f"mask_buffer_bytes=0;hbm_saved={mask_bytes}B/layer;"
                 f"validated=interpret(tests/test_kernels.py)")
     sweep_step_vs_seq()
+    sweep_gru_step_vs_seq()
 
 
 if __name__ == "__main__":

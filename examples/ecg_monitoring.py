@@ -25,6 +25,7 @@ nothing stochastic lives outside the snapshot (masks recompute from
     PYTHONPATH=src python examples/ecg_monitoring.py [--steps 120]
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke   # CI: tiny + fast
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke --kill-resume
+    PYTHONPATH=src python examples/ecg_monitoring.py --smoke --cell gru
 """
 
 import argparse
@@ -68,6 +69,9 @@ def main():
     ap.add_argument("--sessions", type=int, default=3)
     ap.add_argument("--chunk-len", type=int, default=28)
     ap.add_argument("--backend", default="pallas_seq")
+    ap.add_argument("--cell", default="lstm", choices=("lstm", "gru"),
+                    help="recurrent unit (§III-A: GRU drops into the same "
+                    "per-gate MCD design; streamed with h-only carries)")
     ap.add_argument("--mi-alarm", type=float, default=0.15,
                     help="epistemic (MI) escalation threshold, nats")
     ap.add_argument("--smoke", action="store_true",
@@ -84,7 +88,7 @@ def main():
 
     # Paper's best ECG classifier config (H=8, NL=3, placement YNY).
     cfg = clf.ClassifierConfig(
-        hidden=8, num_layers=3, num_classes=ecg.NUM_CLASSES,
+        hidden=8, num_layers=3, num_classes=ecg.NUM_CLASSES, cell=args.cell,
         mcd=mcd.MCDConfig(p=0.125, placement="YNY",
                           n_samples=args.samples, seed=0))
     tx, ty, ex, ey = ecg.make_ecg5000(seed=0)
@@ -101,7 +105,7 @@ def main():
     for k in range(args.sessions):
         eng.open_session(f"patient-{k}")
     print(f"monitoring {args.sessions} sessions, chunk={args.chunk_len}, "
-          f"S={args.samples}, backend={args.backend}, "
+          f"S={args.samples}, cell={args.cell}, backend={args.backend}, "
           f"model trained {args.steps} steps")
 
     pos = 0

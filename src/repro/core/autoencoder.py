@@ -28,6 +28,7 @@ class AutoencoderConfig:
     input_dim: int = 1
     hidden: int = 16          # H
     num_layers: int = 2       # NL (per encoder / per decoder)
+    cell: str = "lstm"        # recurrent unit (rnn.CELLS); §III-A GRU drop-in
     mcd: mcd.MCDConfig = dataclasses.field(
         default_factory=lambda: mcd.MCDConfig(placement="YNYN"))
     heteroscedastic: bool = True
@@ -45,8 +46,10 @@ def init(key: jax.Array, cfg: AutoencoderConfig, dtype=jnp.float32) -> dict[str,
     k_enc, k_dec, k_head = jax.random.split(key, 3)
     out_dim = 2 * cfg.input_dim if cfg.heteroscedastic else cfg.input_dim
     return {
-        "encoder": rnn.init_stack(k_enc, cfg.input_dim, cfg.encoder_hiddens, dtype),
-        "decoder": rnn.init_stack(k_dec, cfg.hidden // 2, cfg.decoder_hiddens, dtype),
+        "encoder": rnn.init_stack(k_enc, cfg.input_dim, cfg.encoder_hiddens,
+                                  dtype, cell=cfg.cell),
+        "decoder": rnn.init_stack(k_dec, cfg.hidden // 2, cfg.decoder_hiddens,
+                                  dtype, cell=cfg.cell),
         "head": linear.init_dense(k_head, cfg.hidden, out_dim, dtype),
     }
 
@@ -77,11 +80,11 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
     if backend == "reference":
         enc_masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.input_dim,
                                            cfg.encoder_hiddens, layer_offset=0,
-                                           dtype=x_seq.dtype)
+                                           dtype=x_seq.dtype, cell=cfg.cell)
         dec_masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.hidden // 2,
                                            cfg.decoder_hiddens,
                                            layer_offset=cfg.num_layers,
-                                           dtype=x_seq.dtype)
+                                           dtype=x_seq.dtype, cell=cfg.cell)
     else:  # Pallas backends regenerate masks in-kernel — nothing to sample.
         enc_masks = rnn.stack_mask_plan(cfg.mcd, cfg.num_layers)
         dec_masks = rnn.stack_mask_plan(cfg.mcd, cfg.num_layers,
@@ -93,7 +96,8 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
                                   backend=backend, rows=rows,
                                   seed=cfg.mcd.seed,
                                   initial_state=initial_state,
-                                  lengths=lengths, return_all_states=True)
+                                  lengths=lengths, return_all_states=True,
+                                  cell=cfg.cell)
     h_T = enc_states[-1][0]
     # Repeat the encoding T times (cached-replay in hardware).  The decoder
     # is replayed fresh per chunk — only encoder state streams forward — but
@@ -102,7 +106,8 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
     dec_in = jnp.broadcast_to(h_T[:, None, :], (h_T.shape[0], T, h_T.shape[1]))
     dec_out, _ = rnn.run_stack(params["decoder"], dec_in, dec_masks, cfg.mcd.p,
                                backend=backend, rows=rows, seed=cfg.mcd.seed,
-                               layer_offset=cfg.num_layers, lengths=lengths)
+                               layer_offset=cfg.num_layers, lengths=lengths,
+                               cell=cfg.cell)
     y = linear.dense(params["head"], dec_out)
     if cfg.heteroscedastic:
         mean, log_var = jnp.split(y, 2, axis=-1)

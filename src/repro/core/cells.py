@@ -56,11 +56,19 @@ def freeze_rows(t, lengths, h_new, c_new, h_old, c_old):
     return jnp.where(live, h_new, h_old), jnp.where(live, c_new, c_old)
 
 
-def gate_stacked(params: LSTMParams):
-    """Pallas-kernel weight layout: ``[4, in, H] → ([in, 4, H], [H, 4, H], b)``.
+def freeze_rows_h(t, lengths, h_new, h_old):
+    """:func:`freeze_rows` for cells whose carry is ``h`` alone (GRU)."""
+    live = (t < lengths.astype(jnp.int32))[:, None]
+    return jnp.where(live, h_new, h_old)
+
+
+def gate_stacked(params):
+    """Pallas-kernel weight layout: ``[G, in, H] → ([in, G, H], [H, G, H], b)``.
 
     The kernels tile the hidden axis, so each tile wants the contiguous
-    4-gate stack for its hidden columns (gate axis second, not first).
+    G-gate stack for its hidden columns (gate axis second, not first).
+    Works for both cells: G=4 (:class:`LSTMParams`) and G=3
+    (:class:`GRUParams`).
     """
     return (jnp.moveaxis(params.wx, 0, 1), jnp.moveaxis(params.wh, 0, 1),
             params.b)
@@ -118,17 +126,37 @@ def init_gru(key: jax.Array, in_dim: int, hidden: int,
 
 
 def gru_step(params: GRUParams, h: jax.Array, x: jax.Array,
-             zx: jax.Array | None, zh: jax.Array | None, p: float):
-    """GRU step with per-gate masks (paper §III-A notes GRU drops in directly)."""
+             zx: jax.Array | None, zh: jax.Array | None, p: float,
+             compute_dtype=None):
+    """GRU step with per-gate masks (paper §III-A notes GRU drops in directly).
+
+    Args:
+      h: [B, H] carry (the GRU's entire recurrent state — no cell state).
+      x: [B, I] input at time t.
+      zx: [B, 3, I] or None; zh: [B, 3, H] or None — keep-masks tied across T,
+        gate order (r, z, n).
+      p: dropout probability (for inverted scaling).
+    Returns:
+      h_new [B, H].  Same dtype policy as :func:`lstm_step`: inputs and
+      weights compute in ``compute_dtype`` (default: x's dtype, so bf16 in →
+      bf16 matmuls) while the gate accumulations, bias adds and the convex
+      ``(1-z)·n + z·h`` update run in fp32.
+    """
+    cd = compute_dtype or x.dtype
     wx, wh, b = params
-    xg = jnp.broadcast_to(x[:, None, :], (x.shape[0], 3, x.shape[1]))
-    hg = jnp.broadcast_to(h[:, None, :], (h.shape[0], 3, h.shape[1]))
+    xg = jnp.broadcast_to(x[:, None, :], (x.shape[0], 3, x.shape[1])).astype(cd)
+    hg = jnp.broadcast_to(h[:, None, :], (h.shape[0], 3, h.shape[1])).astype(cd)
     xg = mcd.apply_mask(xg, zx, p)
     hg = mcd.apply_mask(hg, zh, p)
-    gx = jnp.einsum("bgi,gih->bgh", xg, wx, preferred_element_type=jnp.float32)
-    gh = jnp.einsum("bgh,ghk->bgk", hg, wh, preferred_element_type=jnp.float32)
-    r = jax.nn.sigmoid(gx[:, 0] + gh[:, 0] + b[0])
-    zt = jax.nn.sigmoid(gx[:, 1] + gh[:, 1] + b[1])
-    n = jnp.tanh(gx[:, 2] + r * gh[:, 2] + b[2])
+    gx = jnp.einsum("bgi,gih->bgh", xg, wx.astype(cd),
+                    preferred_element_type=jnp.float32)
+    gh = jnp.einsum("bgh,ghk->bgk", hg, wh.astype(cd),
+                    preferred_element_type=jnp.float32)
+    bf = b.astype(jnp.float32)
+    r = jax.nn.sigmoid(gx[:, 0] + gh[:, 0] + bf[0])
+    zt = jax.nn.sigmoid(gx[:, 1] + gh[:, 1] + bf[1])
+    # The candidate's bias stays outside the reset product (r gates only the
+    # recurrent matmul) — the kernels replicate this placement exactly.
+    n = jnp.tanh(gx[:, 2] + r * gh[:, 2] + bf[2])
     h_new = (1.0 - zt) * n + zt * h.astype(jnp.float32)
     return h_new.astype(h.dtype)

@@ -17,6 +17,7 @@ class ClassifierConfig:
     hidden: int = 8           # H
     num_layers: int = 3       # NL (encoder only — fully pipelined in hardware)
     num_classes: int = 4
+    cell: str = "lstm"        # recurrent unit (rnn.CELLS); §III-A GRU drop-in
     mcd: mcd.MCDConfig = dataclasses.field(
         default_factory=lambda: mcd.MCDConfig(placement="YNY"))
 
@@ -25,7 +26,8 @@ def init(key: jax.Array, cfg: ClassifierConfig, dtype=jnp.float32) -> dict[str, 
     k_enc, k_head = jax.random.split(key)
     hiddens = (cfg.hidden,) * cfg.num_layers
     return {
-        "encoder": rnn.init_stack(k_enc, cfg.input_dim, hiddens, dtype),
+        "encoder": rnn.init_stack(k_enc, cfg.input_dim, hiddens, dtype,
+                                  cell=cfg.cell),
         "head": linear.init_dense(k_head, cfg.hidden, cfg.num_classes, dtype),
     }
 
@@ -49,13 +51,13 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
     hiddens = (cfg.hidden,) * cfg.num_layers
     # Pallas backends regenerate masks in-kernel — don't materialize them.
     masks = (rnn.sample_stack_masks(cfg.mcd, rows, cfg.input_dim, hiddens,
-                                    dtype=x_seq.dtype)
+                                    dtype=x_seq.dtype, cell=cfg.cell)
              if backend == "reference"
              else rnn.stack_mask_plan(cfg.mcd, cfg.num_layers))
     _, states = rnn.run_stack(params["encoder"], x_seq, masks, cfg.mcd.p,
                               return_sequence=False, backend=backend,
                               rows=rows, seed=cfg.mcd.seed,
                               initial_state=initial_state, lengths=lengths,
-                              return_all_states=True)
+                              return_all_states=True, cell=cfg.cell)
     logits = linear.dense(params["head"], states[-1][0])
     return (logits, states) if return_state else logits

@@ -37,6 +37,10 @@ KIND_H = 1        # LSTM hidden-side gate masks
 KIND_FEAT = 2     # generic per-site feature mask (transformer/ssm blocks)
 
 GATES = ("i", "f", "g", "o")
+GRU_GATES = ("r", "z", "n")   # GRU gate ids 0..2 in the same (kind, gate)
+                              # coordinate space — a model is one cell type,
+                              # so LSTM gate i and GRU gate r never coexist
+                              # under the same (seed, layer).
 
 
 def parse_placement(b: str | Sequence[bool]) -> tuple[bool, ...]:
@@ -122,6 +126,22 @@ def lstm_gate_masks(seed, layer: int, rows: jax.Array, in_dim: int,
                                  gate=g, dtype=dtype) for g in range(4)], axis=-2)
     zh = jnp.stack([feature_mask(seed, layer, rows, hidden_dim, p, kind=KIND_H,
                                  gate=g, dtype=dtype) for g in range(4)], axis=-2)
+    return zx, zh
+
+
+def gru_gate_masks(seed, layer: int, rows: jax.Array, in_dim: int,
+                   hidden_dim: int, p: float, dtype=jnp.float32):
+    """The six per-gate masks for one GRU layer (paper §III-A drop-in).
+
+    Returns ``(z_x, z_h)`` with shapes ``rows.shape + (3, in_dim)`` and
+    ``rows.shape + (3, hidden_dim)`` — one mask per gate (r, z, n), tied
+    across all T time steps, drawn from the same ``(kind, gate)`` stream
+    namespace as the LSTM masks.
+    """
+    zx = jnp.stack([feature_mask(seed, layer, rows, in_dim, p, kind=KIND_X,
+                                 gate=g, dtype=dtype) for g in range(3)], axis=-2)
+    zh = jnp.stack([feature_mask(seed, layer, rows, hidden_dim, p, kind=KIND_H,
+                                 gate=g, dtype=dtype) for g in range(3)], axis=-2)
     return zx, zh
 
 

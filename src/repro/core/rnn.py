@@ -1,4 +1,4 @@
-"""Cascaded LSTM stacks with time-step scanning and MCD mask pre-sampling.
+"""Cascaded recurrent (LSTM/GRU) stacks with MCD mask pre-sampling.
 
 Structure mirrors the paper's pipelined cascade (Fig. 5): layer i's output at
 time t feeds layer i+1 at time t — on the FPGA that is wave pipelining; under
@@ -24,27 +24,42 @@ import jax.numpy as jnp
 from repro.core import cells, mcd
 
 
+#: Recurrent cell types ``run_stack`` (and everything above it) dispatches
+#: on.  Paper §III-A: the per-gate MCD design "drops in directly" for GRU —
+#: same mask-stream contract, 3 gates instead of 4, h-only carry.
+CELLS = ("lstm", "gru")
+
+
+def _check_cell(cell: str) -> None:
+    if cell not in CELLS:
+        raise ValueError(f"cell must be one of {CELLS}, got {cell!r}")
+
+
 def init_stack(key: jax.Array, in_dim: int, hiddens: Sequence[int],
-               dtype=jnp.float32) -> list[cells.LSTMParams]:
+               dtype=jnp.float32, *, cell: str = "lstm") -> list:
+    _check_cell(cell)
+    init = cells.init_gru if cell == "gru" else cells.init_lstm
     params = []
     dims = [in_dim, *hiddens]
     for i, (d_in, d_h) in enumerate(zip(dims[:-1], dims[1:])):
         key, sub = jax.random.split(key)
-        params.append(cells.init_lstm(sub, d_in, d_h, dtype))
+        params.append(init(sub, d_in, d_h, dtype))
     return params
 
 
 def sample_stack_masks(cfg: mcd.MCDConfig, rows: jax.Array, in_dim: int,
                        hiddens: Sequence[int], *, layer_offset: int = 0,
-                       dtype=jnp.float32):
+                       dtype=jnp.float32, cell: str = "lstm"):
     """Pre-sample (z_x, z_h) per layer; None where the layer is pointwise."""
+    _check_cell(cell)
+    gate_masks = mcd.gru_gate_masks if cell == "gru" else mcd.lstm_gate_masks
     masks = []
     dims = [in_dim, *hiddens]
     for i, (d_in, d_h) in enumerate(zip(dims[:-1], dims[1:])):
         layer = layer_offset + i
         if cfg.any_bayesian and cfg.bayesian(layer) and cfg.p > 0.0:
-            masks.append(mcd.lstm_gate_masks(cfg.seed, layer, rows, d_in, d_h,
-                                             cfg.p, dtype=dtype))
+            masks.append(gate_masks(cfg.seed, layer, rows, d_in, d_h,
+                                    cfg.p, dtype=dtype))
         else:
             masks.append((None, None))
     return masks
@@ -71,13 +86,18 @@ def stack_mask_plan(cfg: mcd.MCDConfig, n_layers: int, *,
             for i in range(n_layers)]
 
 
-def run_stack(params: Sequence[cells.LSTMParams], x_seq: jax.Array,
+def run_stack(params: Sequence, x_seq: jax.Array,
               masks, p: float, *, return_sequence: bool = True,
               backend: str = "reference", rows: jax.Array | None = None,
               seed=0, layer_offset: int = 0, interpret: bool | None = None,
               initial_state=None, lengths: jax.Array | None = None,
-              return_all_states: bool = False):
-    """Run a cascaded LSTM stack over a [B, T, I] sequence.
+              return_all_states: bool = False, cell: str = "lstm"):
+    """Run a cascaded recurrent stack over a [B, T, I] sequence.
+
+    ``cell`` selects the recurrent unit (:data:`CELLS`): ``"lstm"`` (the
+    paper's main datapath) or ``"gru"`` (§III-A drop-in — 3 gates, no cell
+    state).  Every backend serves both cells, and the per-layer state pytree
+    follows the cell: ``(h, c)`` pairs for LSTM, ``(h,)`` 1-tuples for GRU.
 
     Backends (``repro.kernels.ops.LSTM_BACKENDS``):
       * ``"reference"``: the jnp wavefront scan below, consuming the
@@ -90,47 +110,64 @@ def run_stack(params: Sequence[cells.LSTMParams], x_seq: jax.Array,
     (``cfg.seed``) and ``layer_offset``.  A layer whose ``masks`` entry is
     ``(None, None)`` runs with p=0 on every backend.
 
-    Streaming session state (all three backends):
-      * ``initial_state``: per-layer list of ``(h, c)`` pairs resuming a
+    Streaming session state (all three backends, both cells):
+      * ``initial_state``: per-layer list of state tuples resuming a
         previous chunk's carry (``None`` entries or ``None`` itself = zeros).
         Feed back exactly what ``return_all_states=True`` returned — the
         carry dtypes round-trip losslessly, keeping chunked == unchunked
-        bit-identical per backend (Pallas backends hand back ``c`` in fp32,
-        the 32-bit cell-state policy; reference in its carry dtype).
+        bit-identical per backend (Pallas backends hand back LSTM ``c`` in
+        fp32, the 32-bit cell-state policy; the GRU carry is ``h`` in the
+        activation dtype on every backend).
       * ``lengths``: int [B] freezing each row's state once ``t >= length``
         so ragged chunks can pad to a common T in one batched launch.
       * ``return_all_states=True``: the second return value becomes the full
-        per-layer ``[(h_T, c_T), ...]`` list (what a session must store).
+        per-layer ``[(h_T, c_T), ...]`` (LSTM) / ``[(h_T,), ...]`` (GRU)
+        list (what a session must store).
 
     Returns (outputs [B, T, H_last] if return_sequence else None,
-             (h_T, c_T) of the last layer — or the per-layer list).
+             the last layer's state — ``(h_T, c_T)`` / ``(h_T,)`` — or the
+             per-layer list).
     """
+    _check_cell(cell)
     if backend != "reference":
         return _run_stack_pallas(params, x_seq, masks, p, backend=backend,
                                  return_sequence=return_sequence, rows=rows,
                                  seed=seed, layer_offset=layer_offset,
                                  interpret=interpret,
                                  initial_state=initial_state, lengths=lengths,
-                                 return_all_states=return_all_states)
+                                 return_all_states=return_all_states,
+                                 cell=cell)
     if any(zx is IN_KERNEL_MASKS for zx, _ in masks):
         raise ValueError("stack_mask_plan() entries carry no mask values; "
                          "the reference backend needs sample_stack_masks()")
     batch = x_seq.shape[0]
     dtype = x_seq.dtype
-    carries = _seed_carries(params, initial_state, batch, dtype)
+    carries = _seed_carries(params, initial_state, batch, dtype, cell)
     xs = jnp.swapaxes(x_seq, 0, 1)  # [T, B, I] time-major for scan
     varlen = lengths is not None
     lens = lengths.astype(jnp.int32) if varlen else None
+    gru = cell == "gru"
 
     def step(carry, xt):
         x_t, t = xt
         new_carry = []
         inp = x_t
-        for (h, c), layer_params, (zx, zh) in zip(carry, params, masks):
-            h_new, c_new = cells.lstm_step(layer_params, h, c, inp, zx, zh, p)
-            if varlen:
-                h_new, c_new = cells.freeze_rows(t, lens, h_new, c_new, h, c)
-            new_carry.append((h_new, c_new))
+        for state, layer_params, (zx, zh) in zip(carry, params, masks):
+            if gru:
+                (h,) = state
+                h_new = cells.gru_step(layer_params, h, inp, zx, zh, p)
+                if varlen:
+                    h_new = cells.freeze_rows_h(t, lens, h_new, h)
+                new_state = (h_new,)
+            else:
+                h, c = state
+                h_new, c_new = cells.lstm_step(layer_params, h, c, inp,
+                                               zx, zh, p)
+                if varlen:
+                    h_new, c_new = cells.freeze_rows(t, lens, h_new, c_new,
+                                                     h, c)
+                new_state = (h_new, c_new)
+            new_carry.append(new_state)
             inp = h_new
         return new_carry, (inp if return_sequence else jnp.zeros((0,), dtype))
 
@@ -140,22 +177,26 @@ def run_stack(params: Sequence[cells.LSTMParams], x_seq: jax.Array,
     return out, (final_carry if return_all_states else final_carry[-1])
 
 
-def _seed_carries(params, initial_state, batch, dtype):
-    """Per-layer (h, c) carries: zeros, or the resumed session state as-is."""
+def _seed_carries(params, initial_state, batch, dtype, cell="lstm"):
+    """Per-layer state carries: zeros, or the resumed session state as-is.
+
+    Cell-aware pytrees: LSTM layers carry ``(h, c)``, GRU layers ``(h,)``.
+    """
+    parts = 1 if cell == "gru" else 2
     carries = []
     for i, layer_params in enumerate(params):
         hidden = layer_params.wh.shape[-1]
         state = initial_state[i] if initial_state is not None else None
         if state is None:
-            state = (jnp.zeros((batch, hidden), dtype),
-                     jnp.zeros((batch, hidden), dtype))
+            state = tuple(jnp.zeros((batch, hidden), dtype)
+                          for _ in range(parts))
         carries.append(tuple(state))
     return carries
 
 
 def _run_stack_pallas(params, x_seq, masks, p, *, backend, return_sequence,
                       rows, seed, layer_offset, interpret, initial_state,
-                      lengths, return_all_states):
+                      lengths, return_all_states, cell):
     """Kernel-backed stack: layers run whole-sequence, one after another.
 
     The wavefront trick above exists to fuse the scan body across layers; the
@@ -171,22 +212,27 @@ def _run_stack_pallas(params, x_seq, masks, p, *, backend, return_sequence,
         raise ValueError(f"backend={backend!r} needs the mask-stream `rows` "
                          "(the same ids passed to sample_stack_masks)")
     seq = backend == "pallas_seq"
+    gru = cell == "gru"
+    stack_layer = ops.gru_stack_layer if gru else ops.lstm_stack_layer
     inp = x_seq
     states = []
     for i, (layer_params, (zx, _)) in enumerate(zip(params, masks)):
         p_eff = p if zx is not None else 0.0
         state0 = initial_state[i] if initial_state is not None else None
-        inp, carry = ops.lstm_stack_layer(*layer_params, inp, rows, seed,
-                                          layer_offset + i, p_eff, seq=seq,
-                                          initial_state=state0,
-                                          lengths=lengths,
-                                          interpret=interpret)
+        inp, carry = stack_layer(*layer_params, inp, rows, seed,
+                                 layer_offset + i, p_eff, seq=seq,
+                                 initial_state=state0,
+                                 lengths=lengths,
+                                 interpret=interpret)
         states.append(carry)
     out = inp if return_sequence else None
     if return_all_states:
-        # Session-resume form: c stays fp32 (the kernels' carry dtype), so a
-        # chunk boundary round-trips the cell state losslessly.
+        # Session-resume form: LSTM c stays fp32 (the kernels' carry dtype),
+        # so a chunk boundary round-trips the cell state losslessly; the GRU
+        # carry is h in the activation dtype already.
         return out, states
+    if gru:
+        return out, states[-1]                  # (h_T,) — no dtype to match
     # Match the reference carry contract: c in the input dtype (the kernels
     # hand back their fp32 accumulator).
     hT, cT = states[-1]

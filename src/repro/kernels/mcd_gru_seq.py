@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: sequence-fused Bayesian GRU layer.
+
+The GRU counterpart of :mod:`repro.kernels.mcd_lstm_seq` — same residency
+story (weights fetched into VMEM once, the sequence streams through the
+resident datapath), same streaming contract, one structural difference: the
+GRU's entire recurrent state is ``h``, so there is a single VMEM scratch
+carry and a single carried-state operand.
+
+* Grid ``(B/bb, T)`` with time as an ``"arbitrary"`` (sequential) dimension;
+  the weight BlockSpecs map every grid step to the same block so
+  ``wx [I,3,H]`` / ``wh [H,3,H]`` are fetched once; only the ``[bb, 1, I]``
+  input slice streams per step.
+* ``h`` lives in VMEM scratch across grid steps (seeded from ``h0`` at
+  ``t == 0``), stored in the activation dtype each step — exactly the
+  per-step rounding of :func:`repro.core.cells.gru_step`, which is what
+  makes a chunk boundary (bf16 ``h`` out, bf16 ``h`` back in) lossless and
+  chunked == unchunked bit-identical.  The gate math runs in fp32.
+* The 3-gate Bernoulli keep-masks (r, z, n) are recomputed in-register each
+  step from the 6 ``gate_keys`` streams; keys carry no time coordinate, so
+  recomputation is the paper's tied-across-T semantics.
+* ``lengths`` freezes a row's ``h`` once ``t >= lengths[row]`` (ragged
+  chunks pad to a common T, each row comes back at its own last real step);
+  ``block_b`` pads a non-dividing batch up to the block multiple.
+
+No hidden-tile grid axis, for the same dependency reason as the LSTM
+sequence kernel (docs/kernels.md): step t needs all H columns of
+``h_{t-1}`` — and for the GRU twice over, since ``h`` feeds both the
+recurrent matmuls and the ``z·h`` convex update.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.mcd_gru import _gru_update
+
+
+def _kernel(rows_ref, keys_ref, lens_ref, x_ref, h0_ref, wx_ref, wh_ref,
+            b_ref, ys_ref, ht_ref, h_scr, *,
+            p_drop: float, in_dim: int, hidden: int, varlen: bool):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _reset():
+        # Carried-state entry point: a fresh sequence passes zeros here; a
+        # resumed session passes the previous chunk's h_T.
+        h_scr[...] = h0_ref[...]
+
+    rows = rows_ref[...][:, 0]
+    x = x_ref[:, 0, :]              # [bb, I] — this step's input slice
+    h = h_scr[...]                  # [bb, H] — carried entirely in VMEM
+    # Gate body shared with the step kernel; the keys are t-independent so
+    # recomputing the masks here every step *is* tying them across time.
+    h_new = _gru_update(x, h, h, rows, keys_ref, wx_ref, wh_ref, b_ref,
+                        p_drop=p_drop, in_dim=in_dim,
+                        hidden=hidden).astype(h_scr.dtype)
+    if varlen:
+        # Rows whose chunk ended before this step keep their carried state —
+        # the final h_T output is each row's state at its own length.
+        live = t < lens_ref[...]                  # [bb, 1]
+        h_new = jnp.where(live, h_new, h_scr[...])
+    h_scr[...] = h_new
+    ys_ref[:, 0, :] = h_new.astype(ys_ref.dtype)
+    ht_ref[...] = h_new.astype(ht_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("p_drop", "block_b", "interpret"))
+def mcd_gru_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
+                rows: jax.Array, keys: jax.Array, p_drop: float, *,
+                h0: jax.Array | None = None,
+                lengths: jax.Array | None = None,
+                block_b: int = 128, interpret: bool = True):
+    """Sequence-fused Bayesian GRU layer, optionally resuming carried state.
+
+    x_seq: [B, T, I]; wx: [I, 3, H]; wh: [H, 3, H]; b: [3, H];
+    rows: [B] mask row ids; keys: [1, 6] from
+    :func:`repro.kernels.mcd_gru.gate_keys`.
+    h0 [B, H] seeds the carried state (zeros when omitted — a fresh
+    sequence); it round-trips in the activation dtype, the GRU's only carry.
+    lengths [B] (int) freezes a row's state at its own chunk length so ragged
+    chunks can pad to a common T in one launch.
+    Returns (ys [B, T, H], h_T [B, H]); with ``lengths``, h_T is each row's
+    state at ``t = lengths[row]`` and ``ys[:, t >= lengths[row]]`` repeats
+    the frozen h.
+    """
+    B, T, I = x_seq.shape
+    H = wh.shape[0]
+    bb = min(block_b, B)
+    varlen = lengths is not None
+    h0 = jnp.zeros((B, H), x_seq.dtype) if h0 is None else h0.astype(x_seq.dtype)
+    lens = (jnp.full((B,), T, jnp.int32) if lengths is None
+            else lengths.astype(jnp.int32))
+    rows2 = rows.astype(jnp.int32).reshape(B, 1)
+    pad = -B % bb        # pad to the block multiple (prime/odd batch sizes)
+    if pad:
+        zb = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        x_seq, rows2, h0, lens = map(zb, (x_seq, rows2, h0, lens))
+    Bp = B + pad
+    lens2 = lens.reshape(Bp, 1)
+    grid = (Bp // bb, T)
+    ys, hT = pl.pallas_call(
+        functools.partial(_kernel, p_drop=p_drop, in_dim=I, hidden=H,
+                          varlen=varlen),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, 1), lambda i, t: (i, 0)),        # rows
+            pl.BlockSpec((1, 6), lambda i, t: (0, 0)),         # keys
+            pl.BlockSpec((bb, 1), lambda i, t: (i, 0)),        # lengths
+            pl.BlockSpec((bb, 1, I), lambda i, t: (i, t, 0)),  # x_t slice
+            pl.BlockSpec((bb, H), lambda i, t: (i, 0)),        # h0
+            pl.BlockSpec((I, 3, H), lambda i, t: (0, 0, 0)),   # wx — resident
+            pl.BlockSpec((H, 3, H), lambda i, t: (0, 0, 0)),   # wh — resident
+            pl.BlockSpec((3, H), lambda i, t: (0, 0)),         # bias
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 1, H), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, T, H), x_seq.dtype),
+            jax.ShapeDtypeStruct((Bp, H), x_seq.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bb, H), x_seq.dtype),    # h carry — the whole state
+        ],
+        compiler_params=compat.compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(rows2, keys, lens2, x_seq, h0, wx, wh, b)
+    if pad:
+        ys, hT = ys[:B], hT[:B]
+    return ys, hT

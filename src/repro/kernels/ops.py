@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cells, mcd
-from repro.kernels import bernoulli_mask, mcd_lstm, mcd_lstm_seq, mcd_matmul
+from repro.core.rnn import CELLS  # noqa: F401 — single-source cell registry
+from repro.kernels import (bernoulli_mask, mcd_gru, mcd_gru_seq, mcd_lstm,
+                           mcd_lstm_seq, mcd_matmul)
 
 #: Stack-layer execution paths (see ``repro.core.rnn.run_stack``):
 #: "reference"    pure-jnp cells (sharding-friendly, the numerical oracle)
@@ -139,4 +141,80 @@ def lstm_stack_layer(wx: jax.Array, wh: jax.Array, b: jax.Array,
     h0, c0 = initial_state if initial_state is not None else (None, None)
     fn = fused_lstm_seq if seq else fused_lstm_layer
     return fn(wx4, wh4, b, x_seq, rows, seed, layer, p_drop, h0=h0, c0=c0,
+              lengths=lengths, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("p_drop", "interpret"))
+def fused_gru_layer(wx3: jax.Array, wh3: jax.Array, b: jax.Array,
+                    x_seq: jax.Array, rows: jax.Array, seed, layer: int,
+                    p_drop: float, h0: jax.Array | None = None,
+                    lengths: jax.Array | None = None,
+                    interpret: bool | None = None):
+    """Scan the fused GRU cell kernel over time (per-step fusion baseline).
+
+    wx3: [I, 3, H]; wh3: [H, 3, H]; b: [3, H]; x_seq: [B, T, I].
+    ``h0`` resumes carried state (zeros when omitted); ``lengths`` freezes
+    each row's state at its own chunk length (ragged batching).
+    Returns (outputs [B, T, H], (h_T,)) — the carry is a 1-tuple because the
+    GRU's entire recurrent state is ``h``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    B, T, _ = x_seq.shape
+    H = wh3.shape[0]
+    keys = mcd_gru.gate_keys(seed, layer)
+    h0 = jnp.zeros((B, H), x_seq.dtype) if h0 is None else h0.astype(x_seq.dtype)
+
+    def step(h, xt):
+        x_t, t = xt
+        h_new = mcd_gru.mcd_gru_step(x_t, h, wx3, wh3, b, rows, keys, p_drop,
+                                     interpret=interpret)
+        if lengths is not None:
+            h_new = cells.freeze_rows_h(t, lengths, h_new, h)
+        return h_new, h_new
+
+    ts = jnp.arange(T, dtype=jnp.int32)
+    hT, ys = jax.lax.scan(step, h0, (jnp.swapaxes(x_seq, 0, 1), ts))
+    return jnp.swapaxes(ys, 0, 1), (hT,)
+
+
+@functools.partial(jax.jit, static_argnames=("p_drop", "interpret"))
+def fused_gru_seq(wx3: jax.Array, wh3: jax.Array, b: jax.Array,
+                  x_seq: jax.Array, rows: jax.Array, seed, layer: int,
+                  p_drop: float, h0: jax.Array | None = None,
+                  lengths: jax.Array | None = None,
+                  interpret: bool | None = None):
+    """One kernel launch for the whole GRU sequence (weights VMEM-resident).
+
+    Same contract as :func:`fused_gru_layer`, but the 3-gate weights stay
+    resident across all T timesteps instead of being re-fetched per scan
+    iteration (the ``mcd_gru_seq`` kernel).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    keys = mcd_gru.gate_keys(seed, layer)
+    ys, hT = mcd_gru_seq.mcd_gru_seq(x_seq, wx3, wh3, b, rows, keys, p_drop,
+                                     h0=h0, lengths=lengths,
+                                     interpret=interpret)
+    return ys, (hT,)
+
+
+@functools.partial(jax.jit, static_argnames=("p_drop", "seq", "interpret"))
+def gru_stack_layer(wx: jax.Array, wh: jax.Array, b: jax.Array,
+                    x_seq: jax.Array, rows: jax.Array, seed, layer,
+                    p_drop: float, *, seq: bool,
+                    initial_state=None, lengths: jax.Array | None = None,
+                    interpret: bool | None = None):
+    """Core-layout GRU entry for ``run_stack``'s Pallas backends.
+
+    Mirrors :func:`lstm_stack_layer`: takes ``repro.core.cells.GRUParams``
+    layout (wx: [3, I, H]; wh: [3, H, H]), transposes to the gate-stacked
+    kernel layout inside jit, traces ``layer`` (shared compiles across
+    same-shaped layers).  ``initial_state`` is the 1-tuple ``(h0,)`` carry
+    a streaming session stores for a GRU layer.
+    """
+    wx3, wh3, b = cells.gate_stacked(cells.GRUParams(wx, wh, b))
+    (h0,) = initial_state if initial_state is not None else (None,)
+    fn = fused_gru_seq if seq else fused_gru_layer
+    return fn(wx3, wh3, b, x_seq, rows, seed, layer, p_drop, h0=h0,
               lengths=lengths, interpret=interpret)

@@ -80,6 +80,53 @@ def mcd_lstm_seq(x_seq, wx, wh, b, rows, keys, p_drop: float,
     return jnp.swapaxes(ys, 0, 1), hT, cT
 
 
+def mcd_gru_seq(x_seq, wx, wh, b, rows, keys, p_drop: float,
+                h0=None, lengths=None):
+    """Sequence oracle: scan :func:`mcd_gru_step` over T from h0.
+
+    x_seq: [B, T, I]; wx: [I, 3, H]; wh: [H, 3, H]; b: [3, H]; keys: [1, 6].
+    Returns (ys [B, T, H], h_T [B, H]) — the GRU's whole carry is ``h``, in
+    the activation dtype.  ``h0`` defaults to zeros; ``lengths`` [B] freezes
+    each row's state at its own chunk length, mirroring the kernel.
+    """
+    B = x_seq.shape[0]
+    H = wh.shape[0]
+    h0 = (jnp.zeros((B, H), x_seq.dtype) if h0 is None
+          else h0.astype(x_seq.dtype))
+
+    def step(h, xt):
+        x_t, t = xt
+        h_new = mcd_gru_step(x_t, h, wx, wh, b, rows, keys, p_drop)
+        if lengths is not None:
+            h_new = cells.freeze_rows_h(t, lengths, h_new, h)
+        return h_new, h_new
+
+    ts = jnp.arange(x_seq.shape[1], dtype=jnp.int32)
+    hT, ys = jax.lax.scan(step, h0, (jnp.swapaxes(x_seq, 0, 1), ts))
+    return jnp.swapaxes(ys, 0, 1), hT
+
+
+def mcd_gru_step(x, h, wx, wh, b, rows, keys, p_drop: float):
+    """wx: [I, 3, H]; wh: [H, 3, H]; b: [3, H]; keys: [1, 6] (r, z, n)."""
+    gx, gh = [], []
+    for g in range(3):
+        if p_drop > 0.0:
+            sx = jnp.asarray(1.0 / (1.0 - p_drop), x.dtype)
+            xg = jnp.where(_mask(keys[0, g], rows, x.shape[1], p_drop),
+                           x * sx, 0.0)
+            hg = jnp.where(_mask(keys[0, 3 + g], rows, h.shape[1], p_drop),
+                           h * sx, 0.0)
+        else:
+            xg, hg = x, h
+        gx.append(jnp.dot(xg, wx[:, g, :], preferred_element_type=jnp.float32))
+        gh.append(jnp.dot(hg, wh[:, g, :], preferred_element_type=jnp.float32))
+    r = jax.nn.sigmoid(gx[0] + gh[0] + b[0].astype(jnp.float32))
+    z = jax.nn.sigmoid(gx[1] + gh[1] + b[1].astype(jnp.float32))
+    n = jnp.tanh(gx[2] + r * gh[2] + b[2].astype(jnp.float32))
+    h_new = (1.0 - z) * n + z * h.astype(jnp.float32)
+    return h_new.astype(h.dtype)
+
+
 def mcd_lstm_step(x, h, c, wx, wh, b, rows, keys, p_drop: float):
     """wx: [I, 4, H]; wh: [H, 4, H]; b: [4, H]; keys: [1, 8]."""
     gates = []

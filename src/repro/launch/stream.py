@@ -15,6 +15,7 @@ with ``--resume`` to continue every stream bit-identically.
 Usage:
   PYTHONPATH=src python -m repro.launch.stream --sessions 4 --chunk-len 20 \
       --samples 8 --beats 2 --backend pallas_seq
+  PYTHONPATH=src python -m repro.launch.stream --sessions 4 --cell gru
   PYTHONPATH=src python -m repro.launch.stream --sessions 2 --overload 6 \
       --capacity auto --snapshot-dir /tmp/snap --snapshot-every 3
   PYTHONPATH=src python -m repro.launch.stream --sessions 2 --overload 6 \
@@ -60,6 +61,9 @@ def main():
     ap.add_argument("--samples", type=int, default=8, help="S MC chains")
     ap.add_argument("--backend", default="pallas_seq",
                     choices=("reference", "pallas_step", "pallas_seq"))
+    ap.add_argument("--cell", default="lstm", choices=("lstm", "gru"),
+                    help="recurrent unit (paper §III-A: GRU drops into the "
+                    "same per-gate MCD design; h-only carried state)")
     ap.add_argument("--hidden", type=int, default=8)
     ap.add_argument("--layers", type=int, default=3)
     ap.add_argument("--placement", default="YNY")
@@ -90,7 +94,7 @@ def main():
         ap.error("--resume requires --snapshot-dir")
 
     cfg = clf.ClassifierConfig(
-        hidden=args.hidden, num_layers=args.layers,
+        hidden=args.hidden, num_layers=args.layers, cell=args.cell,
         mcd=mcd.MCDConfig(p=args.p, placement=args.placement,
                           n_samples=args.samples, seed=args.seed))
     params = clf.init(jax.random.key(args.seed), cfg)
@@ -135,7 +139,8 @@ def main():
           f"{args.beats} beats (T={ecg.T_STEPS} each) | S={args.samples} "
           f"chains/session p={cfg.mcd.p} "
           f"B={mcd.placement_str(cfg.mcd.placement)} "
-          f"backend={args.backend} capacity={args.capacity}")
+          f"cell={args.cell} backend={args.backend} "
+          f"capacity={args.capacity}")
 
     rng = np.random.default_rng(args.seed + 1)
     while len(done) < total:

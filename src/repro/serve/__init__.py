@@ -6,7 +6,8 @@ bounded backpressure), ``persistence`` (crash-safe snapshots over
 ``repro.ckpt``) and ``scheduler`` (adaptive launch shapes + tick metrics).
 """
 
-from repro.serve.admission import AdmissionQueue, QueueFull, Ticket
+from repro.serve.admission import (AdmissionQueue, DrainRejected, QueueFull,
+                                   Ticket)
 from repro.serve.persistence import (load_snapshot_meta, restore_store,
                                      snapshot_store)
 from repro.serve.scheduler import (AdaptiveTickScheduler, TickMetrics,
@@ -15,6 +16,7 @@ from repro.serve.sessions import CapacityError, Session, SessionStore
 from repro.serve.stream import ChunkResult, StreamingEngine
 
 __all__ = ["AdmissionQueue", "AdaptiveTickScheduler", "CapacityError",
-           "ChunkResult", "QueueFull", "Session", "SessionStore",
-           "StreamingEngine", "Ticket", "TickMetrics", "load_snapshot_meta",
-           "pow2_ladder", "restore_store", "snapshot_store", "summarize"]
+           "ChunkResult", "DrainRejected", "QueueFull", "Session",
+           "SessionStore", "StreamingEngine", "Ticket", "TickMetrics",
+           "load_snapshot_meta", "pow2_ladder", "restore_store",
+           "snapshot_store", "summarize"]

@@ -27,11 +27,33 @@ import dataclasses
 import heapq
 from typing import Iterator
 
-from repro.serve.sessions import Session, SessionStore
+from repro.serve.sessions import CapacityError, Session, SessionStore
 
 
 class QueueFull(RuntimeError):
     """Admission refused: ``max_pending`` requests are already waiting."""
+
+
+class DrainRejected(RuntimeError):
+    """One or more tickets could not be admitted during a drain.
+
+    Raised *after* the drain completes: every admissible ticket behind a bad
+    one still went live this drain, and the exception carries the full
+    partial result so no admitted session is ever unreported —
+
+    * ``admitted``: the sessions that went live (already in the store);
+    * ``rejected``: ``[(Ticket, Exception), ...]`` for the tickets the store
+      refused (dropped from the queue — they could never succeed later).
+    """
+
+    def __init__(self, admitted: list[Session], rejected: list):
+        self.admitted = admitted
+        self.rejected = rejected
+        sids = ", ".join(repr(t.sid) for t, _ in rejected)
+        super().__init__(
+            f"drain rejected ticket(s) {sids} "
+            f"({len(admitted)} session(s) still admitted this drain): "
+            + "; ".join(str(err) for _, err in rejected))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,20 +117,32 @@ class AdmissionQueue:
     def drain(self, store: SessionStore) -> list[Session]:
         """Admit waiting requests into free store rows, best-priority first.
 
-        Returns the sessions that went live this drain.  A re-attach whose
-        coordinates the store rejects (seed/rows mismatch) is dropped from
-        the queue and re-raised — it could never succeed later.
+        Returns the sessions that went live this drain.  A ticket the store
+        rejects (re-attach seed/rows mismatch, sid collision) is dropped
+        from the queue — it could never succeed later — but it must not
+        poison the drain: the remaining tickets still get their shot at the
+        free rows, and only then is :class:`DrainRejected` raised, carrying
+        both the admitted sessions and the rejected tickets.  (The old
+        raise-on-first-failure behaviour discarded the admitted list —
+        sessions already live in the store went unreported — and starved
+        every ticket queued behind the bad one for the tick.)
         """
         admitted: list[Session] = []
+        rejected: list[tuple[Ticket, Exception]] = []
         while self._pending and len(store) < store.max_sessions:
             _, _, ticket = heapq.heappop(self._heap)
             if self._pending.get(ticket.sid) is not ticket:
                 continue                      # cancelled (lazy deletion)
             del self._pending[ticket.sid]
-            if ticket.session is not None:
-                admitted.append(store.attach(ticket.session))
-            else:
-                admitted.append(store.admit(ticket.sid))
+            try:
+                if ticket.session is not None:
+                    admitted.append(store.attach(ticket.session))
+                else:
+                    admitted.append(store.admit(ticket.sid))
+            except (ValueError, CapacityError) as err:
+                rejected.append((ticket, err))
+        if rejected:
+            raise DrainRejected(admitted, rejected)
         return admitted
 
     def waiting(self) -> list[Ticket]:

@@ -68,28 +68,36 @@ def _tree_key(sid: str, used: set[str]) -> str:
 def _session_tree(sess: Session) -> dict:
     entry = {"rows": np.asarray(sess.rows)}
     if sess.state is not None:
-        entry["state"] = [[np.asarray(h), np.asarray(c)]
-                          for h, c in sess.state]
+        # Cell-agnostic: each layer's carry is a tuple of parts — (h, c) for
+        # LSTM sessions, (h,) for GRU — serialized part by part.
+        entry["state"] = [[np.asarray(part) for part in layer]
+                          for layer in sess.state]
     return entry
 
 
 def _session_meta(sess: Session) -> dict:
-    return {"steps": int(sess.steps), "chunks": int(sess.chunks),
+    meta = {"steps": int(sess.steps), "chunks": int(sess.chunks),
             "layers": None if sess.state is None else len(sess.state)}
+    if sess.state is not None:
+        # Carry arity per layer ((h, c) → 2, (h,) → 1); absent in pre-GRU
+        # snapshots, which were all 2-part LSTM carries.
+        meta["parts"] = len(sess.state[0])
+    return meta
 
 
 def _session_like(meta: dict) -> dict:
     like = {"rows": 0}
     if meta["layers"] is not None:
-        like["state"] = [[0, 0] for _ in range(meta["layers"])]
+        parts = int(meta.get("parts", 2))
+        like["state"] = [[0] * parts for _ in range(meta["layers"])]
     return like
 
 
 def _rebuild_session(sid: str, meta: dict, arrays: dict, seed) -> Session:
     state = None
     if meta["layers"] is not None:
-        state = [(jnp.asarray(h), jnp.asarray(c))
-                 for h, c in arrays["state"]]
+        state = [tuple(jnp.asarray(part) for part in layer)
+                 for layer in arrays["state"]]
     return Session(sid=sid, rows=jnp.asarray(arrays["rows"]), seed=seed,
                    state=state, steps=int(meta["steps"]),
                    chunks=int(meta["chunks"]))

@@ -28,14 +28,21 @@ from typing import Iterable, Sequence
 
 
 def pow2_ladder(max_capacity: int, *, first: int = 8) -> tuple[int, ...]:
-    """Power-of-two rungs ``first..>=max_capacity`` (the default ladder)."""
+    """Power-of-two rungs up to a top rung of exactly ``max_capacity``.
+
+    Every rung honors ``max_capacity`` — the ladder is the operator's stated
+    launch-shape budget, and the scheduler rejects chunks above its top rung,
+    so a rung above the cap would silently accept chunks longer than the
+    operator allowed (that was a real bug: ``pow2_ladder(4)`` used to return
+    ``(8,)``, and ``pow2_ladder(100)`` topped out at 128).
+    """
     if max_capacity < 1:
         raise ValueError(f"max_capacity must be >= 1, got {max_capacity}")
-    rungs, c = [], max(1, first)
+    rungs, c = [], min(max(1, first), max_capacity)
     while c < max_capacity:
         rungs.append(c)
         c *= 2
-    rungs.append(max(c, max_capacity))
+    rungs.append(max_capacity)
     return tuple(rungs)
 
 

@@ -46,7 +46,7 @@ from repro.core.uncertainty import (ClassificationSummary, RegressionSummary,
                                     classification_summary,
                                     regression_summary)
 from repro.serve import persistence as _persist
-from repro.serve.admission import AdmissionQueue
+from repro.serve.admission import AdmissionQueue, DrainRejected
 from repro.serve.scheduler import AdaptiveTickScheduler, TickMetrics
 from repro.serve.sessions import Session, SessionStore
 
@@ -123,6 +123,9 @@ class StreamingEngine:
         # Fixed-shape launches (idle session slots padded) for both the
         # hand-set capacity and the adaptive ladder — one graph per shape.
         self._fixed = chunk_capacity is not None
+        # Recurrent cell type drives the carry pytree arity: LSTM sessions
+        # store per-layer (h, c), GRU sessions (h,) — see _gather_states.
+        self.cell = getattr(cfg, "cell", "lstm")
         s = cfg.mcd.n_samples if cfg.mcd.any_bayesian else 1
         self.n_samples = max(1, s)
         self.store = SessionStore(self.n_samples, cfg.mcd.seed,
@@ -133,6 +136,10 @@ class StreamingEngine:
         # ever-growing per-tick list would leak on exactly that workload.
         # summarize() rolls up whatever the window holds.
         self.metrics: deque[TickMetrics] = deque(maxlen=metrics_window)
+        # Tickets the store refused mid-drain ((Ticket, error) pairs, newest
+        # last).  A drain rejection concerns the ticket's *owner*, not
+        # whichever caller happened to trigger the drain — see _drain.
+        self.dropped_admissions: deque = deque(maxlen=metrics_window)
 
     # -- session lifecycle ---------------------------------------------------
     def open_session(self, sid: str):
@@ -172,7 +179,19 @@ class StreamingEngine:
                     f"session {sid!r} carries {int(session.rows.shape[0])} "
                     f"MC chains, engine serves {self.n_samples}")
         self.queue.submit(sid, priority=priority, session=session)
-        self._drain()
+        try:
+            self.queue.drain(self.store)
+        except DrainRejected as err:
+            # The caller is synchronously present for *its own* ticket: if
+            # the drain rejected it (e.g. a row collision only the store
+            # can detect), re-raise rather than return the None that means
+            # "queued" — the ticket is gone and would never go live.
+            # Other sessions' poison is contained as in _drain.
+            mine = next((e for t, e in err.rejected if t.sid == sid), None)
+            self.dropped_admissions.extend(
+                (t, e) for t, e in err.rejected if t.sid != sid)
+            if mine is not None:
+                raise mine from err
         live = self.store
         return live.get(sid) if sid in live else None
 
@@ -190,7 +209,17 @@ class StreamingEngine:
         return self.store.attach(session)
 
     def _drain(self):
-        return self.queue.drain(self.store)
+        # DrainRejected stops at this layer: the poison is some *other*
+        # session's ticket, and raising here would fail an unrelated caller
+        # — close_session would lose the evicted carry it must return, a
+        # successful admit() would look failed, step() would drop its tick.
+        # The drain already completed (healthy tickets went live); record
+        # the rejects for the operator and keep serving.
+        try:
+            return self.queue.drain(self.store)
+        except DrainRejected as err:
+            self.dropped_admissions.extend(err.rejected)
+            return err.admitted
 
     @property
     def active_sessions(self) -> list[str]:
@@ -219,7 +248,7 @@ class StreamingEngine:
         checkpoint, not the session snapshot.
         """
         engine_meta = {"tick": self.tick, "kind": self.kind,
-                       "backend": self.backend,
+                       "backend": self.backend, "cell": self.cell,
                        "mcd": {"p": float(self.cfg.mcd.p),
                                "placement":
                                    _mcd.placement_str(self.cfg.mcd.placement)}}
@@ -265,6 +294,14 @@ class StreamingEngine:
         if engine_meta.get("kind") not in (None, self.kind):
             raise ValueError(f"snapshot is a {engine_meta['kind']} stream, "
                              f"engine is a {self.kind}")
+        # The carry pytree arity follows the cell — resuming LSTM (h, c)
+        # carries into a GRU engine (or vice versa) could only mis-structure
+        # the states (and the mask gate count differs anyway).
+        snap_cell = engine_meta.get("cell", "lstm")
+        if snap_cell != self.cell:
+            raise ValueError(f"snapshot streamed through a {snap_cell} "
+                             f"stack, engine runs {self.cell} — the carries "
+                             "are not interchangeable")
         # p/placement change the mask *values* even under the same (seed,
         # rows) — resuming across them would silently alter the draw.
         snap_mcd = engine_meta.get("mcd")
@@ -402,32 +439,35 @@ class StreamingEngine:
         """Concatenate per-session carries into batch-aligned layer states.
 
         Fresh sessions (and fixed-shape pad slots) contribute zeros in the
-        backend's own carry dtypes (h in the activation dtype; c in fp32 on
-        the Pallas backends, the activation dtype on reference), so a mixed
-        fresh/resumed batch is bit-identical to serving each session alone.
-        In fixed-shape mode zeros are always materialized: an all-fresh
-        first tick must present the same jit pytree as every later tick,
-        or the one-graph guarantee would break on tick two.
+        backend's own carry dtypes (h in the activation dtype; LSTM c in
+        fp32 on the Pallas backends, the activation dtype on reference), so
+        a mixed fresh/resumed batch is bit-identical to serving each session
+        alone.  The per-layer pytree follows the cell: ``(h, c)`` for LSTM,
+        ``(h,)`` for GRU — whatever ``run_stack`` returned is what a session
+        stored, part by part.  In fixed-shape mode zeros are always
+        materialized: an all-fresh first tick must present the same jit
+        pytree as every later tick, or the one-graph guarantee would break
+        on tick two.
         """
         if all(sess.fresh for sess in sessions) and not self._fixed:
             return None
         c_dtype = dtype if self.backend == "reference" else jnp.float32
+        part_dtypes = (dtype,) if self.cell == "gru" else (dtype, c_dtype)
         hiddens = (self._encoder_hiddens())
         layers = []
         for li, hid in enumerate(hiddens):
-            hs, cs = [], []
+            parts = [[] for _ in part_dtypes]
             for sess in sessions:
                 if sess.fresh:
-                    hs.append(jnp.zeros((self.n_samples, hid), dtype))
-                    cs.append(jnp.zeros((self.n_samples, hid), c_dtype))
+                    for acc, dt in zip(parts, part_dtypes):
+                        acc.append(jnp.zeros((self.n_samples, hid), dt))
                 else:
-                    h, c = sess.state[li]
-                    hs.append(h)
-                    cs.append(c)
+                    for acc, part in zip(parts, sess.state[li]):
+                        acc.append(part)
             if n_pad:
-                hs.append(jnp.zeros((n_pad, hid), dtype))
-                cs.append(jnp.zeros((n_pad, hid), c_dtype))
-            layers.append((jnp.concatenate(hs), jnp.concatenate(cs)))
+                for acc, dt in zip(parts, part_dtypes):
+                    acc.append(jnp.zeros((n_pad, hid), dt))
+            layers.append(tuple(jnp.concatenate(acc) for acc in parts))
         return layers
 
     def _encoder_hiddens(self):

@@ -20,9 +20,9 @@ import pytest
 from repro.ckpt import checkpoint
 from repro.core import classifier as clf, mcd
 from repro.serve import (AdmissionQueue, AdaptiveTickScheduler, CapacityError,
-                         QueueFull, Session, SessionStore, StreamingEngine,
-                         pow2_ladder, restore_store, snapshot_store,
-                         summarize)
+                         DrainRejected, QueueFull, Session, SessionStore,
+                         StreamingEngine, pow2_ladder, restore_store,
+                         snapshot_store, summarize)
 
 BACKENDS = ("reference", "pallas_step", "pallas_seq")
 
@@ -96,6 +96,81 @@ class TestAdmissionQueue:
         assert back is evicted                      # same draw, same rows
         np.testing.assert_array_equal(np.asarray(back.rows), [0, 1])
 
+    def test_drain_is_exception_safe(self):
+        """Regression (ISSUE 4): a re-attach the store rejects mid-drain
+        used to abort the drain — the already-admitted sessions were never
+        reported and every ticket behind the bad one was starved for the
+        tick.  Now the drain finishes first, then raises the typed
+        DrainRejected carrying the partial result."""
+        store = SessionStore(n_samples=2, seed=7, max_sessions=4)
+        bad = SessionStore(n_samples=2, seed=999).admit("bad")  # wrong seed
+        q = AdmissionQueue()
+        q.submit("hi", priority=9)
+        q.submit("bad", priority=5, session=bad)
+        q.submit("low", priority=0)
+        with pytest.raises(DrainRejected, match="bad") as exc_info:
+            q.drain(store)
+        err = exc_info.value
+        assert isinstance(err, RuntimeError)        # typed, but compatible
+        # both healthy tickets went live — including the one queued BEHIND
+        # the bad one — and both are reported in the partial result
+        assert [s.sid for s in err.admitted] == ["hi", "low"]
+        assert store.active == ["hi", "low"]
+        # the poison ticket is gone from the queue (it can never succeed)
+        assert [(t.sid, type(e).__name__) for t, e in err.rejected] == \
+            [("bad", "ValueError")]
+        assert q.depth == 0 and "bad" not in q
+
+    def test_engine_contains_drain_rejection(self):
+        """The poison is the ticket owner's problem, not the caller's:
+        close_session still returns the evicted carry, the healthy ticket
+        behind the poison still goes live, and the reject is recorded in
+        engine.dropped_admissions instead of raised at an unrelated call."""
+        cfg, params = _cfg_params()
+        eng = StreamingEngine(params, cfg, max_sessions=2)
+        eng.open_session("live1")                    # rows 0..2, stays live
+        eng.open_session("hog")                      # rows 3..5, evicted below
+        # passes admit()'s eager seed/chain checks but collides on rows with
+        # live1 — only SessionStore.attach can reject it, mid-drain
+        clash = SessionStore(n_samples=3, seed=3).admit("clash")
+        eng.admit("clash", priority=9, session=clash)
+        eng.admit("ok", priority=0)                  # queued behind the poison
+        evicted = eng.close_session("hog")           # triggers the drain
+        assert evicted.sid == "hog"                  # carry not lost
+        assert eng.active_sessions == ["live1", "ok"]
+        assert eng.queued_sessions == []
+        (ticket, err), = eng.dropped_admissions
+        assert ticket.sid == "clash" and "collide" in str(err)
+
+    def test_admit_reraises_own_tickets_rejection(self):
+        """When the synchronous drain inside admit() rejects the caller's
+        OWN ticket, admit must raise — returning None would read as
+        'queued' while the ticket is permanently gone."""
+        cfg, params = _cfg_params()
+        eng = StreamingEngine(params, cfg, max_sessions=2)
+        eng.open_session("live1")                    # rows 0..2
+        # passes the eager seed/chain checks; only attach sees the collision
+        clash = SessionStore(n_samples=3, seed=3).admit("clash")
+        with pytest.raises(ValueError, match="collide"):
+            eng.admit("clash", session=clash)
+        assert eng.queued_sessions == []             # not silently parked
+        assert len(eng.dropped_admissions) == 0      # raised, not swallowed
+        assert eng.active_sessions == ["live1"]
+
+    def test_drain_reports_multiple_rejections(self):
+        store = SessionStore(n_samples=2, seed=7, max_sessions=4)
+        other = SessionStore(n_samples=2, seed=999)
+        q = AdmissionQueue()
+        q.submit("x", priority=3, session=other.admit("x"))
+        q.submit("ok")
+        q.submit("y", priority=1, session=other.admit("y"))
+        with pytest.raises(DrainRejected) as exc_info:
+            q.drain(store)
+        err = exc_info.value
+        assert [s.sid for s in err.admitted] == ["ok"]
+        assert sorted(t.sid for t, _ in err.rejected) == ["x", "y"]
+        assert store.active == ["ok"] and q.depth == 0
+
     def test_store_capacity_error_stays_runtimeerror(self):
         """The typed exception contract: CapacityError subclasses
         RuntimeError so pre-PR 3 callers keep working."""
@@ -110,8 +185,25 @@ class TestAdmissionQueue:
 class TestScheduler:
     def test_pow2_ladder(self):
         assert pow2_ladder(512) == (8, 16, 32, 64, 128, 256, 512)
-        assert pow2_ladder(100) == (8, 16, 32, 64, 128)
-        assert pow2_ladder(1)[-1] >= 1
+        assert pow2_ladder(100) == (8, 16, 32, 64, 100)
+        assert pow2_ladder(1) == (1,)
+
+    def test_pow2_ladder_honors_max_capacity(self):
+        """Regression (ISSUE 4): pow2_ladder(4) returned (8,) — a single
+        rung *above* the operator's cap, so the scheduler silently accepted
+        chunks longer than the stated maximum.  No rung may exceed the cap,
+        and the top rung must equal it (chunks up to the cap still fit)."""
+        assert pow2_ladder(4) == (4,)
+        for cap in (1, 3, 4, 7, 8, 9, 100, 512):
+            ladder = pow2_ladder(cap)
+            assert ladder[-1] == cap
+            assert all(r <= cap for r in ladder)
+            assert list(ladder) == sorted(set(ladder))
+        # and the scheduler built on it now rejects what the operator capped
+        s = AdaptiveTickScheduler(pow2_ladder(4))
+        assert s.max_capacity == 4 and s.plan([4]) == 4
+        with pytest.raises(ValueError, match="ladder"):
+            s.plan([5])
 
     def test_rung_tracks_the_window(self):
         s = AdaptiveTickScheduler((4, 16, 64), window=4)
@@ -279,6 +371,24 @@ class TestPersistence:
             np.testing.assert_array_equal(np.asarray(got.get(sid).rows),
                                           np.asarray(store.get(sid).rows))
 
+    def test_h_only_carry_roundtrips(self, tmp_path):
+        """GRU sessions store (h,) 1-tuples per layer — the snapshot format
+        records the carry arity and restores the same pytree shape."""
+        store = SessionStore(n_samples=2, seed=5, max_sessions=2)
+        g = store.admit("g")
+        g.state = [(jnp.arange(8, dtype=jnp.bfloat16).reshape(2, 4),)
+                   for _ in range(3)]
+        g.steps, g.chunks = 9, 2
+        snapshot_store(str(tmp_path), store)
+        got, meta = restore_store(str(tmp_path))
+        assert meta["sessions"]["g"]["parts"] == 1
+        gg = got.get("g")
+        assert [len(layer) for layer in gg.state] == [1, 1, 1]
+        for (h,), (h0,) in zip(gg.state, g.state):
+            assert h.dtype == h0.dtype
+            np.testing.assert_array_equal(np.asarray(h, jnp.float32),
+                                          np.asarray(h0, jnp.float32))
+
     def test_snapshot_steps_are_monotone_and_prunable(self, tmp_path):
         store, _, _ = self._store_with_state()
         p0 = snapshot_store(str(tmp_path), store)
@@ -338,6 +448,54 @@ class TestKillRestoreInvariance:
             np.testing.assert_array_equal(
                 np.asarray(got[sid].summary.mutual_information),
                 np.asarray(want[sid].summary.mutual_information))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_gru_kill_restore_bit_identical(self, backend, tmp_path):
+        """GRU parity for the acceptance invariant: h-only carries snapshot
+        and restore bit-identically on every backend."""
+        cfg = clf.ClassifierConfig(
+            hidden=8, num_layers=2, num_classes=4, cell="gru",
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=3, seed=3))
+        params = clf.init(jax.random.key(0), cfg)
+        T = 10
+        sig = jax.random.normal(jax.random.key(1), (T, 1))
+
+        gold = StreamingEngine(params, cfg, backend=backend, max_sessions=1)
+        gold.open_session("a")
+        gold.step({"a": sig[:4]})
+        want = gold.step({"a": sig[4:]})["a"]
+
+        victim = StreamingEngine(params, cfg, backend=backend,
+                                 max_sessions=1)
+        victim.open_session("a")
+        victim.step({"a": sig[:4]})
+        victim.snapshot(str(tmp_path))
+        del victim                                   # the crash
+
+        revived = StreamingEngine(params, cfg, backend=backend,
+                                  max_sessions=1)
+        revived.restore(str(tmp_path))
+        got = revived.step({"a": sig[4:]})["a"]
+        assert got.steps_total == want.steps_total == T
+        np.testing.assert_array_equal(np.asarray(got.summary.probs),
+                                      np.asarray(want.summary.probs))
+        np.testing.assert_array_equal(
+            np.asarray(got.summary.mutual_information),
+            np.asarray(want.summary.mutual_information))
+
+    def test_restore_refuses_cell_mismatch(self, tmp_path):
+        """LSTM (h, c) carries must not resume into a GRU engine (or vice
+        versa) — the pytrees are not interchangeable."""
+        cfg, params = _cfg_params()
+        eng = StreamingEngine(params, cfg, max_sessions=1)
+        eng.open_session("a")
+        eng.snapshot(str(tmp_path))
+        g_cfg = clf.ClassifierConfig(
+            hidden=8, num_layers=2, num_classes=4, cell="gru",
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=3, seed=3))
+        with pytest.raises(ValueError, match="cell|gru|lstm"):
+            StreamingEngine(clf.init(jax.random.key(0), g_cfg), g_cfg,
+                            max_sessions=1).restore(str(tmp_path))
 
     @pytest.mark.parametrize("capacity", [8, "auto"])
     def test_restore_across_chunk_capacity_change(self, capacity, tmp_path):

@@ -49,3 +49,73 @@ def test_gru_pointwise_no_mask():
     x = jax.random.normal(jax.random.key(1), (B, I))
     h = cells.gru_step(p, jnp.zeros((B, H)), x, None, None, 0.0)
     assert np.isfinite(np.asarray(h)).all()
+
+
+class TestGruComputeDtype:
+    """The lstm_step dtype-policy alignment (ISSUE 4 satellite): bf16
+    inputs/weights, fp32 gate accumulation — gru_step previously had no
+    ``compute_dtype`` and never cast its weights."""
+
+    def _setup(self, B=4, I=12, H=8):
+        p = cells.init_gru(jax.random.key(0), I, H)
+        x = jax.random.normal(jax.random.key(1), (B, I))
+        h = jax.random.normal(jax.random.key(2), (B, H)) * 0.3
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        zx = jnp.stack([mcd.feature_mask(0, 0, rows, I, 0.125, gate=g)
+                        for g in range(3)], axis=-2)
+        zh = jnp.stack([mcd.feature_mask(0, 0, rows, H, 0.125,
+                                         kind=mcd.KIND_H, gate=g)
+                        for g in range(3)], axis=-2)
+        return p, x, h, zx, zh
+
+    def test_bf16_inputs_cast_weights(self):
+        """compute_dtype defaults to x's dtype: bf16 activations against
+        fp32 params must compute in bf16 — same as casting params up front
+        — not silently promote the matmuls to fp32."""
+        p, x, h, zx, zh = self._setup()
+        to = lambda a: a.astype(jnp.bfloat16)
+        got = cells.gru_step(p, to(h), to(x), to(zx), to(zh), 0.125)
+        pre = cells.GRUParams(*(to(w) for w in p))
+        want = cells.gru_step(pre, to(h), to(x), to(zx), to(zh), 0.125)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
+
+    def test_explicit_compute_dtype_casts_weights(self):
+        """fp32 params + compute_dtype=bf16 must equal pre-cast bf16 params
+        under the same knob — i.e. the weights really are cast (the old
+        gru_step never touched them), while the output follows h's dtype."""
+        p, x, h, zx, zh = self._setup()
+        got = cells.gru_step(p, h, x, zx, zh, 0.125,
+                             compute_dtype=jnp.bfloat16)
+        assert got.dtype == h.dtype == jnp.float32
+        pre = cells.GRUParams(*(w.astype(jnp.bfloat16) for w in p))
+        want = cells.gru_step(pre, h, x, zx, zh, 0.125,
+                              compute_dtype=jnp.bfloat16)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fp32_default_unchanged(self):
+        """The default path (fp32 in, no compute_dtype) is numerically the
+        pre-fix graph: casts are no-ops."""
+        p, x, h, zx, zh = self._setup()
+        a = cells.gru_step(p, h, x, zx, zh, 0.125)
+        b = cells.gru_step(p, h, x, zx, zh, 0.125,
+                           compute_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bf16_accumulation_stays_fp32(self):
+        """bf16 end to end stays finite and close to the fp32 trajectory —
+        the convex update and gate sums run in fp32 regardless of
+        compute_dtype."""
+        p, x, h, zx, zh = self._setup()
+        to = lambda a: a.astype(jnp.bfloat16)
+        pre = cells.GRUParams(*(to(w) for w in p))
+        hb = to(h)
+        for _ in range(5):
+            hb = cells.gru_step(pre, hb, to(x), to(zx), to(zh), 0.125)
+        assert hb.dtype == jnp.bfloat16
+        hf = h
+        for _ in range(5):
+            hf = cells.gru_step(p, hf, x, zx, zh, 0.125)
+        np.testing.assert_allclose(np.asarray(hb, np.float32),
+                                   np.asarray(hf), rtol=0.1, atol=0.1)

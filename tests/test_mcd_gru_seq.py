@@ -1,0 +1,317 @@
+"""Sequence-fused MCD-GRU kernel vs per-step kernel scan vs jnp oracle.
+
+GRU parity with the LSTM stack (ISSUE 4 tentpole): for the same
+``mcd_gru.gate_keys`` streams the sequence kernel draws bit-identical 3-gate
+masks to the per-step kernel and the reference, its h trajectory matches for
+any T, and the ``cell="gru"`` dispatch keeps all three ``run_stack``
+backends bit-identical — including carried state and ragged ``lengths``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autoencoder as ae, cells, classifier as clf, mcd, rnn
+from repro.kernels import mcd_gru, mcd_gru_seq, ops, ref
+
+SEED, LAYER = 11, 2
+BACKENDS = ("reference", "pallas_step", "pallas_seq")
+
+
+def _layer(b, t, i, h, key=0):
+    ks = jax.random.split(jax.random.key(key), 3)
+    wx = jax.random.normal(ks[0], (i, 3, h)) * 0.1
+    wh = jax.random.normal(ks[1], (h, 3, h)) * 0.1
+    bias = jax.random.normal(ks[2], (3, h)) * 0.1
+    x_seq = jax.random.normal(jax.random.key(key + 1), (b, t, i))
+    rows = jnp.arange(b, dtype=jnp.uint32) + 17
+    return x_seq, wx, wh, bias, rows
+
+
+class TestGruSeqKernel:
+    @pytest.mark.parametrize("t", [1, 8, 33])
+    @pytest.mark.parametrize("p", [0.0, 0.125, 0.5])
+    def test_matches_ref_and_step_kernel(self, t, p):
+        b, i, h = 8, 48, 32
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_gru.gate_keys(SEED, LAYER)
+        ys, hT = mcd_gru_seq.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys, p)
+        yr, hr = ref.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys, p)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(hr),
+                                   rtol=1e-5, atol=1e-5)
+        ys2, (h2,) = ops.fused_gru_layer(wx, wh, bias, x_seq, rows,
+                                         SEED, LAYER, p)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(ys2),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(h2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_mask_streams_bit_identical(self):
+        """x ≡ 1 + heavy dropout separates mask patterns: any bit flip vs
+        the reference 3-gate streams would swing a gate matmul input by
+        ±scale, far above fp tolerance."""
+        b, t, i, h = 8, 5, 64, 32
+        _, wx, wh, bias, rows = _layer(b, t, i, h)
+        x_seq = jnp.ones((b, t, i))
+        keys = mcd_gru.gate_keys(SEED, LAYER)
+        ys, _ = mcd_gru_seq.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys, 0.5)
+        yr, _ = ref.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys, 0.5)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_masks_tied_across_time(self):
+        """Constant input: step 2 = the step kernel applied to h1 — only
+        true when both steps drew the same (tied) masks."""
+        b, i, h = 4, 32, 32
+        _, wx, wh, bias, rows = _layer(b, 2, i, h)
+        x1 = jnp.ones((b, 1, i))
+        x2 = jnp.ones((b, 2, i))
+        keys = mcd_gru.gate_keys(SEED, LAYER)
+        ys1, h1 = mcd_gru_seq.mcd_gru_seq(x1, wx, wh, bias, rows, keys, 0.25)
+        ys2, _ = mcd_gru_seq.mcd_gru_seq(x2, wx, wh, bias, rows, keys, 0.25)
+        np.testing.assert_allclose(np.asarray(ys1[:, 0]),
+                                   np.asarray(ys2[:, 0]),
+                                   rtol=1e-6, atol=1e-6)
+        h2 = mcd_gru.mcd_gru_step(x2[:, 1], h1, wx, wh, bias, rows, keys,
+                                  0.25)
+        np.testing.assert_allclose(np.asarray(ys2[:, 1]), np.asarray(h2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_prime_batch_pads_instead_of_serializing(self):
+        """B prime must not degrade to bb=1: the batch pads up to the block
+        multiple and outputs slice back — same fallback as the LSTM kernels."""
+        b, t, i, h = 13, 3, 8, 8
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_gru.gate_keys(SEED, LAYER)
+        ys, hT = mcd_gru_seq.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys,
+                                         0.125, block_b=4)
+        yr, hr = ref.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys, 0.125)
+        assert ys.shape == (b, t, h) and hT.shape == (b, h)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(hr),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestGruCarriedState:
+    """The h0 streaming operand — the GRU's whole carry is h."""
+
+    @pytest.mark.parametrize("p", [0.0, 0.25])
+    def test_resume_matches_oracle(self, p):
+        b, t, i, h = 6, 7, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_gru.gate_keys(SEED, LAYER)
+        h0 = jax.random.normal(jax.random.key(5), (b, h)) * 0.5
+        ys, hT = mcd_gru_seq.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys, p,
+                                         h0=h0)
+        yr, hr = ref.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys, p, h0=h0)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(hr),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("splits", [[4, 5], [1] * 9, [2, 1, 6]])
+    def test_chunked_equals_unchunked_bit_identical(self, splits):
+        """Arbitrary chunk boundaries (incl. length 1) are invisible — the
+        lengths-pinned graph family makes the comparison bit-exact, and the
+        h carry round-trips losslessly in the activation dtype."""
+        b, t, i, h = 6, 9, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_gru.gate_keys(SEED, LAYER)
+        lens = lambda n: jnp.full((b,), n, jnp.int32)
+        full, hF = mcd_gru_seq.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys,
+                                           0.125, lengths=lens(t))
+        st, outs, pos = None, [], 0
+        for n in splits:
+            ys, hT = mcd_gru_seq.mcd_gru_seq(
+                x_seq[:, pos:pos + n], wx, wh, bias, rows, keys, 0.125,
+                h0=st, lengths=lens(n))
+            st, pos = hT, pos + n
+            outs.append(ys)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate(outs, 1)), np.asarray(full))
+        np.testing.assert_array_equal(np.asarray(st), np.asarray(hF))
+
+    def test_lengths_freeze_state_per_row(self):
+        """Ragged rows keep h at their own length; live prefixes are
+        bit-identical to the full-length varlen pass."""
+        b, t, i, h = 6, 8, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        keys = mcd_gru.gate_keys(SEED, LAYER)
+        lens = jnp.array([8, 1, 3, 5, 2, 7], jnp.int32)
+        ys, hT = mcd_gru_seq.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys,
+                                         0.125, lengths=lens)
+        full, _ = mcd_gru_seq.mcd_gru_seq(
+            x_seq, wx, wh, bias, rows, keys, 0.125,
+            lengths=jnp.full((b,), t, jnp.int32))
+        for r in range(b):
+            L = int(lens[r])
+            np.testing.assert_array_equal(np.asarray(ys[r, :L]),
+                                          np.asarray(full[r, :L]))
+            np.testing.assert_array_equal(np.asarray(hT[r]),
+                                          np.asarray(ys[r, L - 1]))
+        yr, hr = ref.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys, 0.125,
+                                 lengths=lens)
+        np.testing.assert_array_equal(np.asarray(hT), np.asarray(hr))
+
+
+class TestGruBf16:
+    """bf16 weights/activations; gate math accumulates in fp32."""
+
+    @pytest.mark.parametrize("p", [0.0, 0.125])
+    def test_bf16_matches_bf16_oracle(self, p):
+        b, t, i, h = 6, 6, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        to = lambda a: a.astype(jnp.bfloat16)
+        keys = mcd_gru.gate_keys(SEED, LAYER)
+        ys, hT = mcd_gru_seq.mcd_gru_seq(to(x_seq), to(wx), to(wh), to(bias),
+                                         rows, keys, p)
+        assert ys.dtype == jnp.bfloat16 and hT.dtype == jnp.bfloat16
+        yr, hr = ref.mcd_gru_seq(to(x_seq), to(wx), to(wh), to(bias),
+                                 rows, keys, p)
+        np.testing.assert_allclose(np.asarray(ys, jnp.float32),
+                                   np.asarray(yr, jnp.float32),
+                                   rtol=0.05, atol=0.05)
+        np.testing.assert_allclose(np.asarray(hT, jnp.float32),
+                                   np.asarray(hr, jnp.float32),
+                                   rtol=0.05, atol=0.05)
+
+    def test_bf16_carried_state_resume_bit_identical(self):
+        """Chunk boundaries stay invisible in bf16: h both carries in VMEM
+        scratch and round-trips across chunks in bf16, so the per-step
+        rounding is identical either way."""
+        b, t, i, h = 6, 8, 16, 16
+        x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
+        to = lambda a: a.astype(jnp.bfloat16)
+        xb, wxb, whb, bb_ = to(x_seq), to(wx), to(wh), to(bias)
+        keys = mcd_gru.gate_keys(SEED, LAYER)
+        lens = lambda n: jnp.full((b,), n, jnp.int32)
+        full, hF = mcd_gru_seq.mcd_gru_seq(xb, wxb, whb, bb_, rows, keys,
+                                           0.125, lengths=lens(t))
+        st, outs, pos = None, [], 0
+        for n in (3, 1, 4):
+            ys, hT = mcd_gru_seq.mcd_gru_seq(
+                xb[:, pos:pos + n], wxb, whb, bb_, rows, keys, 0.125,
+                h0=st, lengths=lens(n))
+            assert hT.dtype == jnp.bfloat16
+            st, pos = hT, pos + n
+            outs.append(ys)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate(outs, 1), jnp.float32),
+            np.asarray(full, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(st, jnp.float32),
+                                      np.asarray(hF, jnp.float32))
+
+
+class TestGruRunStackBackends:
+    """The cell="gru" dispatch — ISSUE 4 acceptance: reference vs
+    pallas_step vs pallas_seq, bit-identical."""
+
+    def _stack(self, hiddens=(16, 16, 16), placement="YNY"):
+        cfg = mcd.MCDConfig(p=0.125, placement=placement, seed=5)
+        params = rnn.init_stack(jax.random.key(0), 4, hiddens, cell="gru")
+        return cfg, params
+
+    @pytest.mark.parametrize("placement", ["YN", "NNN", "YYY"])
+    @pytest.mark.parametrize("backend", ["pallas_step", "pallas_seq"])
+    def test_stack_matches_reference(self, placement, backend):
+        cfg, params = self._stack(placement=placement)
+        hiddens = (16, 16, 16)
+        x = jax.random.normal(jax.random.key(1), (6, 9, 4))
+        rows = jnp.arange(6, dtype=jnp.uint32)
+        masks = rnn.sample_stack_masks(cfg, rows, 4, hiddens, cell="gru")
+        out0, (h0,) = rnn.run_stack(params, x, masks, cfg.p, cell="gru")
+        out1, (h1,) = rnn.run_stack(params, x, masks, cfg.p,
+                                    backend=backend, rows=rows,
+                                    seed=cfg.seed, cell="gru")
+        np.testing.assert_allclose(np.asarray(out0), np.asarray(out1),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h0), np.asarray(h1),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_ragged_states_bit_identical_across_backends(self):
+        """Acceptance bullet: same ragged batch (carried state + lengths)
+        through all three backends — per-row h carries bit-identical."""
+        cfg, params = self._stack(hiddens=(8, 8), placement="YN")
+        hiddens = (8, 8)
+        B, T = 4, 9
+        x = jax.random.normal(jax.random.key(2), (B, T, 4))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        lens = jnp.array([9, 1, 4, 6], jnp.int32)
+        h0 = [(jax.random.normal(jax.random.key(7 + i), (B, hid)) * 0.3,)
+              for i, hid in enumerate(hiddens)]
+        got = {}
+        for backend in BACKENDS:
+            masks = (rnn.sample_stack_masks(cfg, rows, 4, hiddens, cell="gru")
+                     if backend == "reference"
+                     else rnn.stack_mask_plan(cfg, len(hiddens)))
+            out, states = rnn.run_stack(params, x, masks, cfg.p,
+                                        backend=backend, rows=rows,
+                                        seed=cfg.seed, lengths=lens,
+                                        initial_state=h0,
+                                        return_all_states=True, cell="gru")
+            got[backend] = (out, states)
+        for backend in ("pallas_step", "pallas_seq"):
+            np.testing.assert_array_equal(np.asarray(got["reference"][0]),
+                                          np.asarray(got[backend][0]))
+            for (h1,), (h2,) in zip(got["reference"][1], got[backend][1]):
+                np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+    def test_return_all_states_is_h_only(self):
+        cfg, params = self._stack(hiddens=(16, 8), placement="YY")
+        x = jax.random.normal(jax.random.key(3), (3, 5, 4))
+        rows = jnp.arange(3, dtype=jnp.uint32)
+        _, st = rnn.run_stack(params, x, rnn.stack_mask_plan(cfg, 2), cfg.p,
+                              backend="pallas_seq", rows=rows, seed=cfg.seed,
+                              return_all_states=True, cell="gru")
+        assert [len(layer) for layer in st] == [1, 1]
+        for (h,), hid in zip(st, (16, 8)):
+            assert h.shape == (3, hid) and h.dtype == x.dtype
+
+    def test_bad_cell_rejected(self):
+        params = rnn.init_stack(jax.random.key(0), 4, (8,))
+        x = jnp.zeros((2, 3, 4))
+        with pytest.raises(ValueError, match="cell"):
+            rnn.run_stack(params, x, [(None, None)], 0.0, cell="elman")
+        with pytest.raises(ValueError, match="cell"):
+            rnn.init_stack(jax.random.key(0), 4, (8,), cell="elman")
+
+    def test_classifier_gru_end_to_end(self):
+        cfg = clf.ClassifierConfig(
+            hidden=16, num_layers=3, cell="gru",
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", seed=5))
+        params = clf.init(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (6, 12, 1))
+        rows = jnp.arange(6, dtype=jnp.uint32)
+        want = clf.apply(params, x, rows, cfg)
+        for be in ("pallas_step", "pallas_seq"):
+            got = clf.apply(params, x, rows, cfg, backend=be)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_autoencoder_gru_end_to_end(self):
+        cfg = ae.AutoencoderConfig(
+            hidden=16, num_layers=2, cell="gru",
+            mcd=mcd.MCDConfig(p=0.125, placement="YNYN", seed=7))
+        params = ae.init(jax.random.key(2), cfg)
+        x = jax.random.normal(jax.random.key(3), (5, 10, 1))
+        rows = jnp.arange(5, dtype=jnp.uint32)
+        m0, lv0 = ae.apply(params, x, rows, cfg)
+        for be in ("pallas_step", "pallas_seq"):
+            m, lv = ae.apply(params, x, rows, cfg, backend=be)
+            np.testing.assert_allclose(np.asarray(m), np.asarray(m0),
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(lv), np.asarray(lv0),
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_gru_gate_stacked_roundtrip():
+    params = cells.init_gru(jax.random.key(0), 5, 8)
+    wx3, wh3, b = cells.gate_stacked(params)
+    assert wx3.shape == (5, 3, 8) and wh3.shape == (8, 3, 8)
+    np.testing.assert_array_equal(np.asarray(jnp.moveaxis(wx3, 1, 0)),
+                                  np.asarray(params.wx))
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(params.b))

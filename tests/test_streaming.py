@@ -193,6 +193,92 @@ class TestRunStackStreaming:
         assert hT.shape == (3, 8) and cT.dtype == x.dtype
 
 
+class TestRunStackStreamingGru:
+    """GRU parity (ISSUE 4 acceptance): chunked == unchunked bit-identical
+    on all three backends, incl. carried h state and ragged lengths."""
+
+    def _stack(self, hiddens=(16, 16, 16), placement="YNY", seed=5):
+        cfg = mcd.MCDConfig(p=0.125, placement=placement, seed=seed)
+        params = rnn.init_stack(jax.random.key(0), 4, hiddens, cell="gru")
+        return cfg, params
+
+    def _masks(self, cfg, rows, hiddens, backend):
+        if backend == "reference":
+            return rnn.sample_stack_masks(cfg, rows, 4, hiddens, cell="gru")
+        return rnn.stack_mask_plan(cfg, len(hiddens))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("splits", [[5, 12], [1] * 17, [3, 1, 6, 7]])
+    def test_chunked_equals_unchunked_bit_identical(self, backend, splits):
+        hiddens = (16, 16, 16)
+        cfg, params = self._stack(hiddens)
+        B, T = 6, 17
+        x = jax.random.normal(jax.random.key(1), (B, T, 4))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        masks = self._masks(cfg, rows, hiddens, backend)
+        full, st_full = rnn.run_stack(params, x, masks, cfg.p,
+                                      backend=backend, rows=rows,
+                                      seed=cfg.seed, lengths=_full(T),
+                                      return_all_states=True, cell="gru")
+        state, outs, pos = None, [], 0
+        for n in splits:
+            out, state = rnn.run_stack(params, x[:, pos:pos + n], masks,
+                                       cfg.p, backend=backend, rows=rows,
+                                       seed=cfg.seed, initial_state=state,
+                                       lengths=_full(n),
+                                       return_all_states=True, cell="gru")
+            outs.append(out)
+            pos += n
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate(outs, 1)), np.asarray(full))
+        for (h1,), (h2,) in zip(state, st_full):
+            np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_ragged_lengths_freeze_per_row(self, backend):
+        """Ragged GRU batch: each row's h comes back frozen at its own
+        length, bit-identical to the full-length pass's live prefix."""
+        hiddens = (8, 8)
+        cfg, params = self._stack(hiddens, placement="YN")
+        B, T = 4, 9
+        x = jax.random.normal(jax.random.key(2), (B, T, 4))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        lens = jnp.array([9, 1, 4, 6], jnp.int32)
+        masks = self._masks(cfg, rows, hiddens, backend)
+        out, states = rnn.run_stack(params, x, masks, cfg.p, backend=backend,
+                                    rows=rows, seed=cfg.seed, lengths=lens,
+                                    return_all_states=True, cell="gru")
+        full, _ = rnn.run_stack(params, x, masks, cfg.p, backend=backend,
+                                rows=rows, seed=cfg.seed,
+                                lengths=_full(T, B),
+                                return_all_states=True, cell="gru")
+        for r in range(B):
+            L = int(lens[r])
+            np.testing.assert_array_equal(np.asarray(out[r, :L]),
+                                          np.asarray(full[r, :L]))
+            np.testing.assert_array_equal(np.asarray(states[-1][0][r]),
+                                          np.asarray(out[r, L - 1]))
+
+    def test_ragged_states_agree_across_backends(self):
+        hiddens = (8, 8)
+        cfg, params = self._stack(hiddens, placement="YN")
+        B, T = 4, 9
+        x = jax.random.normal(jax.random.key(2), (B, T, 4))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        lens = jnp.array([9, 1, 4, 6], jnp.int32)
+        got = {}
+        for backend in BACKENDS:
+            masks = self._masks(cfg, rows, hiddens, backend)
+            _, states = rnn.run_stack(params, x, masks, cfg.p,
+                                      backend=backend, rows=rows,
+                                      seed=cfg.seed, lengths=lens,
+                                      return_all_states=True, cell="gru")
+            got[backend] = states
+        for backend in ("pallas_step", "pallas_seq"):
+            for (h1,), (h2,) in zip(got["reference"], got[backend]):
+                np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
 class TestSessionStore:
     def test_admission_rows_unique_and_stable(self):
         store = SessionStore(n_samples=4, seed=7, max_sessions=3)
@@ -427,3 +513,88 @@ class TestStreamingEngine:
         with pytest.raises(ValueError, match="t>=1"):
             eng.step({"a": jnp.ones((0, 1))})
         assert eng.step({}) == {}
+
+
+class TestStreamingEngineGru:
+    """GRU sessions through the engine: h-only carry pytrees end to end."""
+
+    def _cfg_params(self, s=3, seed=3):
+        cfg = clf.ClassifierConfig(
+            hidden=8, num_layers=2, num_classes=4, cell="gru",
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s,
+                              seed=seed))
+        return cfg, clf.init(jax.random.key(0), cfg)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_ragged_cobatched_equals_solo_full(self, backend):
+        """Ragged co-batched chunked GRU serving == solo single-chunk
+        serving, bit-identical per session."""
+        cfg, params = self._cfg_params()
+        T = 11
+        sig_a = jax.random.normal(jax.random.key(1), (T, 1))
+        sig_b = jax.random.normal(jax.random.key(2), (T, 1))
+        eng = StreamingEngine(params, cfg, backend=backend, max_sessions=2)
+        eng.open_session("a")
+        eng.open_session("b")
+        eng.step({"a": sig_a[:4], "b": sig_b[:7]})     # ragged tick
+        eng.step({"a": sig_a[4:5], "b": sig_b[7:]})    # length-1 chunk for a
+        ra = eng.step({"a": sig_a[5:]})["a"]           # b sits this tick out
+        solo = StreamingEngine(params, cfg, backend=backend, max_sessions=1)
+        solo.open_session("a")
+        qa = solo.step({"a": sig_a})["a"]
+        np.testing.assert_array_equal(np.asarray(ra.summary.probs),
+                                      np.asarray(qa.summary.probs))
+        assert ra.steps_total == qa.steps_total == T
+
+    def test_session_state_is_h_only(self):
+        cfg, params = self._cfg_params(s=2)
+        eng = StreamingEngine(params, cfg, max_sessions=1)
+        eng.open_session("a")
+        eng.step({"a": jnp.ones((3, 1))})
+        sess = eng.store.get("a")
+        assert [len(layer) for layer in sess.state] == [1, 1]
+        for (h,) in sess.state:
+            assert h.shape == (2, cfg.hidden)
+
+    def test_fixed_capacity_matches_dynamic(self):
+        """Fixed-shape GRU ticks (idle slots padded, h-only zero states)
+        serve the same results as dynamic shapes."""
+        cfg, params = self._cfg_params()
+        T = 9
+        sig = jax.random.normal(jax.random.key(4), (T, 1))
+        fixed = StreamingEngine(params, cfg, max_sessions=3, chunk_capacity=5)
+        dyn = StreamingEngine(params, cfg, max_sessions=1)
+        for eng in (fixed, dyn):
+            eng.open_session("a")
+        want = got = None
+        for a, b in ((0, 4), (4, 6), (6, T)):
+            got = fixed.step({"a": sig[a:b]})["a"]
+            want = dyn.step({"a": sig[a:b]})["a"]
+        np.testing.assert_allclose(np.asarray(got.summary.probs),
+                                   np.asarray(want.summary.probs),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_autoencoder_gru_cobatched_equals_solo(self):
+        cfg = ae.AutoencoderConfig(
+            hidden=8, num_layers=1, cell="gru",
+            mcd=mcd.MCDConfig(p=0.125, placement="YNYN", n_samples=2,
+                              seed=1))
+        params = ae.init(jax.random.key(0), cfg)
+        T = 7
+        sig_a = jax.random.normal(jax.random.key(8), (T, 1))
+        sig_b = jax.random.normal(jax.random.key(9), (T, 1))
+        eng = StreamingEngine(params, cfg, backend="pallas_seq",
+                              max_sessions=2)
+        eng.open_session("a")
+        eng.open_session("b")
+        eng.step({"a": sig_a[:3], "b": sig_b[:5]})
+        ra = eng.step({"a": sig_a[3:], "b": sig_b[5:]})["a"]
+        solo = StreamingEngine(params, cfg, backend="pallas_seq",
+                               max_sessions=1)
+        solo.open_session("a")
+        solo.step({"a": sig_a[:3]})
+        qa = solo.step({"a": sig_a[3:]})["a"]
+        np.testing.assert_array_equal(np.asarray(ra.summary.mean),
+                                      np.asarray(qa.summary.mean))
+        np.testing.assert_array_equal(np.asarray(ra.summary.total),
+                                      np.asarray(qa.summary.total))
