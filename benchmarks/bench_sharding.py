@@ -1,0 +1,133 @@
+"""Device-count sweep: tokens/s of the sharded data plane vs devices.
+
+The ROADMAP's tokens/s trajectory finally gets a *scaling axis*: the same
+recurrent-stack launch (and the same streaming-engine tick) measured at
+1/2/4/… -way data sharding over `repro.launch.rnn_shardings`.  Two rows
+per device count:
+
+* ``stack.*`` — one ``run_stack(mesh=…)`` launch (batch = sessions × S MC
+  chains partitioned over the data axis; the Fan-et-al. replicate-the-MC-
+  chains trick at mesh scale),
+* ``stream.*`` — a full ``StreamingEngine.step`` tick on a mesh-placed
+  engine (slot padding to whole sessions per shard included, i.e. what a
+  serving host actually dispatches).
+
+Off-TPU the devices are forced host-CPU cores, so absolute tokens/s is an
+interpret-mode proxy and *speedups can be < 1* (every "device" shares the
+same silicon and the kernel interpreter is python-slow); what transfers to
+TPU is that the work per device shrinks as 1/N while the results stay
+bit-identical (asserted here on every rung).  Run with
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.run   # or python benchmarks/bench_sharding.py
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import classifier as clf, mcd, rnn
+from repro.launch.mesh import make_data_mesh
+from repro.serve import StreamingEngine
+
+
+def device_counts():
+    n = len(jax.devices())
+    return [c for c in (1, 2, 4, 8) if c <= n]
+
+
+def sweep_stack(cell: str = "lstm"):
+    """One sharded run_stack launch per device count; bit-identity checked."""
+    B, T, H, NL, S = 16, 32, 8, 3, 2
+    cfg = mcd.MCDConfig(p=0.125, placement="YNY", n_samples=S, seed=0)
+    params = rnn.init_stack(jax.random.key(0), 1, (H,) * NL, cell=cell)
+    rows = jnp.arange(B, dtype=jnp.uint32)
+    x = jax.random.normal(jax.random.key(1), (B, T, 1), jnp.float32)
+    lengths = jnp.full((B,), T, jnp.int32)
+    masks = rnn.stack_mask_plan(cfg, NL)
+
+    ref, _ = rnn.run_stack(params, x, masks, cfg.p, backend="pallas_seq",
+                           rows=rows, seed=cfg.seed, lengths=lengths,
+                           return_all_states=True, cell=cell)
+    base_us = None
+    for nd in device_counts():
+        mesh = make_data_mesh(nd)
+
+        def call():
+            out, states = rnn.run_stack(params, x, masks, cfg.p,
+                                        backend="pallas_seq", rows=rows,
+                                        seed=cfg.seed, lengths=lengths,
+                                        return_all_states=True, cell=cell,
+                                        mesh=mesh)
+            return out
+
+        out = call()
+        assert bool(jnp.all(out == ref)), f"sharded != unsharded at {nd} dev"
+        us = common.time_call(call, warmup=1, iters=3)
+        base_us = base_us or us
+        tokens = B * T            # chain-timesteps per launch
+        common.emit(
+            f"shard.stack.{cell}.D{nd}.B{B}.T{T}", us,
+            f"tokens_per_s={tokens / (us * 1e-6):.0f};"
+            f"speedup_vs_1dev={base_us / us:.2f}x;bit_identical=1")
+
+
+def sweep_stream():
+    """Full engine ticks on a mesh-placed engine per device count."""
+    n_sessions, chunk_len, s = 8, 20, 2
+    cfg = clf.ClassifierConfig(
+        hidden=8, num_layers=2,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s, seed=0))
+    params = clf.init(jax.random.key(0), cfg)
+    sigs = {f"s{k}": jax.random.normal(jax.random.key(k), (chunk_len, 1))
+            for k in range(n_sessions)}
+    # Unsharded first-tick results: the bit-identity oracle for every rung.
+    oracle = StreamingEngine(params, cfg, backend="pallas_seq",
+                             max_sessions=n_sessions)
+    for k in range(n_sessions):
+        oracle.open_session(f"s{k}")
+    want = {sid: jnp.asarray(r.summary.probs)
+            for sid, r in oracle.step(sigs).items()}
+    base_us = None
+    for nd in device_counts():
+        mesh = make_data_mesh(nd) if nd > 1 else None
+        eng = StreamingEngine(params, cfg, backend="pallas_seq",
+                              max_sessions=n_sessions, mesh=mesh)
+        for k in range(n_sessions):
+            eng.open_session(f"s{k}")
+
+        def tick():
+            res = eng.step(sigs)
+            jax.block_until_ready([r.summary.probs for r in res.values()])
+            return res
+
+        first = tick()          # tick 0 on fresh carries == the oracle's
+        for sid, probs in want.items():
+            assert bool(jnp.all(jnp.asarray(first[sid].summary.probs)
+                                == probs)), \
+                f"engine tick sharded != unsharded at {nd} devices ({sid})"
+        us = common.time_call(tick, warmup=1, iters=3)
+        base_us = base_us or us
+        samples = n_sessions * chunk_len
+        common.emit(
+            f"shard.stream.D{nd}.N{n_sessions}.L{chunk_len}.S{s}", us,
+            f"samples_per_s={samples / (us * 1e-6):.0f};"
+            f"chain_steps_per_s={samples * s / (us * 1e-6):.0f};"
+            f"speedup_vs_1dev={base_us / us:.2f}x;bit_identical=1")
+
+
+def run():
+    if len(jax.devices()) == 1:
+        common.emit("shard.note", 0.0,
+                    "note=single-device host, only the D1 rungs below ran; "
+                    "set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                    "for the multi-device rungs")
+    for cell in rnn.CELLS:
+        sweep_stack(cell)
+    sweep_stream()
+
+
+if __name__ == "__main__":
+    run()

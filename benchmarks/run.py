@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV per benchmark line.
   kernels      bench_kernels         (fused vs unfused)
   streaming    bench_streaming       (stateful session serving sweep)
   controlplane bench_controlplane    (admission, snapshot/restore, pad waste)
+  sharding     bench_sharding        (tokens/s vs device count, data plane)
   roofline     roofline              (dry-run derived terms, all 40 cells)
 """
 
@@ -22,7 +23,8 @@ def main() -> None:
     from benchmarks import (bench_controlplane, bench_dse_sweep,
                             bench_kernels, bench_latency, bench_opt_modes,
                             bench_quantization, bench_resource_model,
-                            bench_sampling, bench_streaming, roofline)
+                            bench_sampling, bench_sharding, bench_streaming,
+                            roofline)
     benches = [
         ("dse_sweep", bench_dse_sweep),
         ("sampling", bench_sampling),
@@ -33,6 +35,7 @@ def main() -> None:
         ("kernels", bench_kernels),
         ("streaming", bench_streaming),
         ("controlplane", bench_controlplane),
+        ("sharding", bench_sharding),
         ("roofline", roofline),
     ]
     failed = 0

@@ -21,11 +21,15 @@ table = [
                      metrics={"accuracy": 0.92, "ap": 0.69, "entropy": 0.30}),
     search.Candidate(arch=fm.RNNArch(8, 3, "YNN"),
                      metrics={"accuracy": 0.89, "ap": 0.59, "entropy": 0.60}),
+    # §III-A cell axis: the 3-gate GRU datapath at 3/4 the DSP cost —
+    # the co-design loop may trade it against the accuracy it gives up.
+    search.Candidate(arch=fm.RNNArch(8, 3, "YNY"), cell="gru",
+                     metrics={"accuracy": 0.91, "ap": 0.66, "entropy": 0.28}),
 ]
 for mode in ("Opt-Latency", "Opt-Accuracy", "Opt-Entropy"):
     got = search.optimize(table, mode, batch=50)
     print(f"{mode:14s} → H={got.arch.hidden} NL={got.arch.num_layers} "
-          f"B={got.arch.placement} S={got.n_samples} "
+          f"B={got.arch.placement} S={got.n_samples} cell={got.cell} "
           f"R=({got.hw.r_x},{got.hw.r_h},{got.hw.r_d}) "
           f"lat={got.latency_s*1e3:.2f} ms "
           f"DSPs={fm.dsp_usage(got.arch, got.hw):.0f}/900")

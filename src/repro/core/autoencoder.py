@@ -57,7 +57,7 @@ def init(key: jax.Array, cfg: AutoencoderConfig, dtype=jnp.float32) -> dict[str,
 def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
           cfg: AutoencoderConfig, *, backend: str = "reference",
           initial_state=None, lengths: jax.Array | None = None,
-          return_state: bool = False):
+          return_state: bool = False, mesh=None, policy=None):
     """Forward pass for one set of MCD masks.
 
     Args:
@@ -69,6 +69,9 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
         (streaming resumption — the running bottleneck keeps integrating).
       lengths: per-row valid lengths when ragged chunks pad to a common T.
       return_state: also return the per-layer encoder states to carry.
+      mesh, policy: shard both stacks over devices (batch rows over the
+        mesh's data axes — ``repro.launch.rnn_shardings``); bit-identical
+        to the unsharded lengths-enabled pass.
     Returns:
       (mean [B, T, I], log_var [B, T, I] or None)[, encoder states].
       When streaming, each chunk is reconstructed from the *running*
@@ -97,7 +100,7 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
                                   seed=cfg.mcd.seed,
                                   initial_state=initial_state,
                                   lengths=lengths, return_all_states=True,
-                                  cell=cfg.cell)
+                                  cell=cfg.cell, mesh=mesh, policy=policy)
     h_T = enc_states[-1][0]
     # Repeat the encoding T times (cached-replay in hardware).  The decoder
     # is replayed fresh per chunk — only encoder state streams forward — but
@@ -107,7 +110,7 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
     dec_out, _ = rnn.run_stack(params["decoder"], dec_in, dec_masks, cfg.mcd.p,
                                backend=backend, rows=rows, seed=cfg.mcd.seed,
                                layer_offset=cfg.num_layers, lengths=lengths,
-                               cell=cfg.cell)
+                               cell=cfg.cell, mesh=mesh, policy=policy)
     y = linear.dense(params["head"], dec_out)
     if cfg.heteroscedastic:
         mean, log_var = jnp.split(y, 2, axis=-1)

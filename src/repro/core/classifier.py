@@ -35,11 +35,15 @@ def init(key: jax.Array, cfg: ClassifierConfig, dtype=jnp.float32) -> dict[str, 
 def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
           cfg: ClassifierConfig, *, backend: str = "reference",
           initial_state=None, lengths: jax.Array | None = None,
-          return_state: bool = False):
+          return_state: bool = False, mesh=None, policy=None):
     """Logits [B, num_classes] for one set of MCD masks.
 
     ``backend`` selects the encoder execution path (see
     :func:`repro.core.rnn.run_stack`); all backends draw the same masks.
+    ``mesh``/``policy`` shard the encoder over devices (batch rows over the
+    data axes; see ``repro.launch.rnn_shardings``) — sharded logits are
+    bit-identical to the unsharded lengths-enabled pass, so the flag is
+    purely a throughput knob.
 
     Streaming resumption: ``initial_state`` (per-layer ``(h, c)`` list from a
     previous chunk), ``lengths`` (per-row valid chunk lengths when ragged
@@ -58,6 +62,7 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
                               return_sequence=False, backend=backend,
                               rows=rows, seed=cfg.mcd.seed,
                               initial_state=initial_state, lengths=lengths,
-                              return_all_states=True, cell=cfg.cell)
+                              return_all_states=True, cell=cfg.cell,
+                              mesh=mesh, policy=policy)
     logits = linear.dense(params["head"], states[-1][0])
     return (logits, states) if return_state else logits

@@ -91,7 +91,8 @@ def run_stack(params: Sequence, x_seq: jax.Array,
               backend: str = "reference", rows: jax.Array | None = None,
               seed=0, layer_offset: int = 0, interpret: bool | None = None,
               initial_state=None, lengths: jax.Array | None = None,
-              return_all_states: bool = False, cell: str = "lstm"):
+              return_all_states: bool = False, cell: str = "lstm",
+              mesh=None, policy=None):
     """Run a cascaded recurrent stack over a [B, T, I] sequence.
 
     ``cell`` selects the recurrent unit (:data:`CELLS`): ``"lstm"`` (the
@@ -124,11 +125,34 @@ def run_stack(params: Sequence, x_seq: jax.Array,
         per-layer ``[(h_T, c_T), ...]`` (LSTM) / ``[(h_T,), ...]`` (GRU)
         list (what a session must store).
 
+    Multi-device execution (``repro.launch.rnn_shardings``):
+      * ``mesh``: a jax Mesh — batch rows (sessions × MC chains) partition
+        over its data axes via ``shard_map`` around the Pallas kernels;
+        wide-H stacks (and the reference backend) run GSPMD-partitioned
+        instead.  Sharded output is **bit-identical** to the unsharded
+        lengths-enabled run at any device count: masks key off global
+        ``(seed, rows)`` coordinates, and the sharded path always runs the
+        lengths-pinned graph family (full-T lengths are synthesized when
+        ``lengths`` is None — pass ``lengths`` explicitly to compare
+        against an unsharded run bit-for-bit).
+      * ``policy``: a ``StackShardingPolicy`` (axis names, data/gspmd
+        strategy, the wide-H threshold); None = the default policy.
+
     Returns (outputs [B, T, H_last] if return_sequence else None,
              the last layer's state — ``(h_T, c_T)`` / ``(h_T,)`` — or the
              per-layer list).
     """
     _check_cell(cell)
+    if mesh is not None:
+        # deferred: core must import without the launch layer (and jax
+        # device state must stay untouched until a mesh actually exists)
+        from repro.launch import rnn_shardings
+        return rnn_shardings.run_stack_sharded(
+            params, x_seq, masks, p, mesh=mesh, policy=policy,
+            backend=backend, return_sequence=return_sequence, rows=rows,
+            seed=seed, layer_offset=layer_offset, interpret=interpret,
+            initial_state=initial_state, lengths=lengths,
+            return_all_states=return_all_states, cell=cell)
     if backend != "reference":
         return _run_stack_pallas(params, x_seq, masks, p, backend=backend,
                                  return_sequence=return_sequence, rows=rows,

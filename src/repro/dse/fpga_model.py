@@ -38,16 +38,38 @@ II_TAIL_CLF = 0
 PIPELINE_FILL = 34
 
 
+#: Gate count per recurrent cell — the §III-A algorithmic knob: a GRU layer
+#: instantiates 3 gate MVMs where the LSTM needs 4, scaling every DSP /
+#: flop / weight-byte term by 3/4 at the same (H, NL).
+CELL_GATES = {"lstm": 4, "gru": 3}
+
+
 @dataclasses.dataclass(frozen=True)
 class RNNArch:
-    """Paper's algorithmic parameters A = {H, NL, B} (+ task shape)."""
+    """Paper's algorithmic parameters A = {H, NL, B} (+ task shape).
+
+    ``cell`` joins the algorithmic DSE space (paper §III-A: the per-gate
+    MCD design drops into the GRU unchanged): the 3-gate cell cuts the
+    datapath's multiplier count by a quarter, which the hardware stage
+    converts into smaller feasible reuse factors — i.e. lower II — under
+    the same DSP budget.  The co-design loop can therefore trade the
+    cheaper cell against whatever accuracy it costs on the task.
+    """
     hidden: int
     num_layers: int                 # NL (encoder; AE has 2·NL total)
     placement: str                  # B-string
     kind: str = "classifier"        # classifier | autoencoder
+    cell: str = "lstm"              # recurrent unit (CELL_GATES)
     input_dim: int = 1
     output_dim: int = 4             # classes, or input_dim for AE
     timesteps: int = 140            # T (ECG5000)
+
+    @property
+    def gates(self) -> int:
+        if self.cell not in CELL_GATES:
+            raise ValueError(f"cell must be one of {sorted(CELL_GATES)}, "
+                             f"got {self.cell!r}")
+        return CELL_GATES[self.cell]
 
     def layer_dims(self):
         """[(I_i, H_i)] for every LSTM layer in hardware order."""
@@ -78,12 +100,19 @@ class HwConfig:
 
 
 def dsp_usage(arch: RNNArch, hw: HwConfig) -> float:
-    """DSP_design per §IV-B (paper reports ≥98% accuracy of this model)."""
+    """DSP_design per §IV-B (paper reports ≥98% accuracy of this model).
+
+    The published formula is the LSTM instance (G = 4); the gate count
+    generalizes it — every term is per-gate hardware (an input-side MVM, a
+    recurrent MVM, and the elementwise tail), so a GRU layer costs 3/4 of
+    the LSTM layer at the same (I, H).
+    """
+    g = float(arch.gates)
     total = 0.0
     for (i_dim, h_dim) in arch.layer_dims():
-        total += (4.0 * i_dim * h_dim / hw.r_x
-                  + 4.0 * h_dim * h_dim / hw.r_h
-                  + 4.0 * h_dim)
+        total += (g * i_dim * h_dim / hw.r_x
+                  + g * h_dim * h_dim / hw.r_h
+                  + g * h_dim)
     h_last = arch.layer_dims()[-1][1]
     if arch.kind == "autoencoder":
         total += h_last * arch.output_dim * arch.timesteps / hw.r_d

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.dse.fpga_model import RNNArch
 from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS, active_params
 from repro.models.config import ArchConfig, ShapeCell
 
@@ -36,6 +37,63 @@ class TpuHwConfig:
     @property
     def dp(self) -> int:
         return self.data * self.pod
+
+
+def rnn_step_model(arch: RNNArch, *, batch: int = 1, n_samples: int = 1,
+                   data: int = 1, dtype_bytes: int = 2) -> dict:
+    """Roofline terms for the paper's recurrent stack itself (both cells).
+
+    The TPU analogue of §IV-B/§IV-C for the Bayesian RNN workload: per-gate
+    flop and byte counts (``arch.gates`` — 4 for LSTM, 3 for GRU, so the
+    GRU row prices at 3/4 of the LSTM datapath exactly as in
+    ``fpga_model.dsp_usage``), with ``batch × n_samples`` MC-chain rows
+    sharded ``data``-ways (`repro.launch.rnn_shardings`' data strategy —
+    the mesh split is the reuse-factor analogue here).
+
+    Weight bytes are charged **once per launch**, not per timestep — the
+    sequence-fused kernel's VMEM residency (docs/kernels.md) is precisely
+    this term's reduction; activations stream per step.
+    """
+    g = float(arch.gates)
+    rows = max(batch * n_samples / max(data, 1), 1.0)
+    flops_step = 0.0          # per row per timestep
+    weight_bytes = 0.0        # resident per launch, per device
+    act_bytes_step = 0.0      # streamed per row per timestep
+    for (i_dim, h_dim) in arch.layer_dims():
+        flops_step += 2.0 * g * (i_dim * h_dim + h_dim * h_dim)
+        flops_step += 12.0 * h_dim                     # elementwise tail
+        weight_bytes += g * (i_dim + h_dim + 1) * h_dim * dtype_bytes
+        act_bytes_step += (i_dim + h_dim) * dtype_bytes
+    h_last = arch.layer_dims()[-1][1]
+    head_mult = arch.timesteps if arch.kind == "autoencoder" else 1
+    flops_head = 2.0 * h_last * arch.output_dim * head_mult
+    # NOTE: layer_dims() already spans encoder *and* decoder for the AE, so
+    # T is not doubled here — the paper's ×2 is a latency-serialization
+    # fact (decoder waits for the encoder), not extra work, and a roofline
+    # prices work.  (Doubling it penalized AE candidates ~2× in the DSE.)
+    t_steps = arch.timesteps
+    flops = rows * (t_steps * flops_step + flops_head)
+    bytes_hbm = weight_bytes + rows * t_steps * act_bytes_step
+    return {"flops": flops, "bytes": bytes_hbm, "coll": 0.0,
+            "t_compute": flops / PEAK_FLOPS, "t_memory": bytes_hbm / HBM_BW,
+            "t_collective": 0.0,
+            "t_step": max(flops / PEAK_FLOPS, bytes_hbm / HBM_BW)}
+
+
+def rnn_latency_s(arch: RNNArch, hw=None, batch: int = 1,
+                  n_samples: int = 1, *, data: int = 1) -> float:
+    """TPU latency estimate with the FPGA model's call signature.
+
+    Drop-in ``latency_model=`` for :func:`repro.dse.search.optimize` —
+    pass ``hw_model=None`` alongside it, or TPU-sized archs (H far past
+    the ZC706's 900 DSPs) are silently rejected by the default FPGA
+    reuse-factor gate before this model ever prices them.  ``hw`` (the
+    FPGA reuse factors, or None when the gate is off) is irrelevant on
+    TPU and ignored; GRU rows price at their 3-gate cost.
+    """
+    del hw
+    return rnn_step_model(arch, batch=batch, n_samples=n_samples,
+                          data=data)["t_step"]
 
 
 def step_model(cfg: ArchConfig, cell: ShapeCell, hw: TpuHwConfig) -> dict:

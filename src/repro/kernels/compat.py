@@ -27,6 +27,15 @@ def set_mesh(mesh):
     return mesh
 
 
+def shard_map(*args, **kw):
+    """``jax.shard_map`` where it exists; the pre-graduation experimental
+    location otherwise (removed in newer releases — probe, don't pin)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(*args, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(*args, **kw)
+
+
 def make_mesh(shape, axes):
     """``jax.make_mesh`` with Auto axis types where the release supports them."""
     axis_type = getattr(jax.sharding, "AxisType", None)

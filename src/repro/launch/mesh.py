@@ -22,6 +22,27 @@ def make_host_mesh():
     return compat.make_mesh((1, 1), ("data", "model"))
 
 
+def make_data_mesh(n_data: int, *, model: int = 1):
+    """A ``(data, model)`` mesh over the first ``n_data × model`` devices.
+
+    The device-count-sweep entry point (``bench_sharding``, the multi-device
+    tests): on a host forced to N CPU devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``) this builds
+    submeshes of any size that fits, so one process can sweep 1/2/4/8-way
+    sharding without restarting.
+    """
+    import jax
+    import numpy as np
+
+    need = n_data * model
+    devs = jax.devices()
+    if need > len(devs):
+        raise ValueError(f"mesh ({n_data}, {model}) needs {need} devices, "
+                         f"host has {len(devs)}")
+    grid = np.asarray(devs[:need]).reshape(n_data, model)
+    return jax.sharding.Mesh(grid, ("data", "model"))
+
+
 def axis_sizes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

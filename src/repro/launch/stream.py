@@ -12,6 +12,12 @@ pick the launch shape per tick, and ``--snapshot-dir``/``--resume`` make
 the whole thing crash-safe — kill the process at any tick and relaunch
 with ``--resume`` to continue every stream bit-identically.
 
+The PR 5 multi-device data plane rides the same loop: ``--shards N``
+partitions every launch's batch rows (sessions × MC chains) over the first
+N devices (``repro.launch.rnn_shardings``) with bit-identical results,
+``--prewarm`` compiles every capacity rung before the first tick, and
+``--metrics-out`` streams per-tick ``TickMetrics`` to a JSONL file.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.stream --sessions 4 --chunk-len 20 \
       --samples 8 --beats 2 --backend pallas_seq
@@ -20,11 +26,15 @@ Usage:
       --capacity auto --snapshot-dir /tmp/snap --snapshot-every 3
   PYTHONPATH=src python -m repro.launch.stream --sessions 2 --overload 6 \
       --capacity auto --snapshot-dir /tmp/snap --resume
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.stream --sessions 8 --shards 8 \
+      --capacity auto --prewarm --metrics-out /tmp/ticks.jsonl
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +43,8 @@ import numpy as np
 from repro.ckpt import checkpoint
 from repro.core import classifier as clf, mcd
 from repro.data import ecg
-from repro.serve import StreamingEngine, summarize
+from repro.serve import (JsonlSink, StreamingEngine, pow2_ladder, prewarm,
+                         summarize)
 
 
 def build_streams(n_sessions: int, beats: int, seed: int):
@@ -76,6 +87,18 @@ def main():
                     "auto=adaptive ladder, dynamic=per-tick max")
     ap.add_argument("--max-pending", type=int, default=256,
                     help="admission-queue backpressure bound")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard every launch over the first N devices "
+                    "(batch/data parallel; 0 = no mesh.  Off-TPU, force "
+                    "devices with XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="compile every capacity rung at boot "
+                    "(scheduler.prewarm) so no tick pays a first-use "
+                    "compile; needs --capacity fixed or auto")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append per-tick TickMetrics as JSON lines to "
+                    "this file (JsonlSink; default: in-memory ring only)")
     ap.add_argument("--snapshot-dir", default=None,
                     help="durable session snapshots (crash-safe resume)")
     ap.add_argument("--snapshot-every", type=int, default=5,
@@ -100,10 +123,26 @@ def main():
     params = clf.init(jax.random.key(args.seed), cfg)
     capacity = {"fixed": args.chunk_len, "auto": "auto",
                 "dynamic": None}[args.capacity]
+    mesh = None
+    if args.shards:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(args.shards)
+        print(f"sharding launches over {args.shards} devices (data axis)")
+    sink = JsonlSink(args.metrics_out) if args.metrics_out else None
+    # The ladder is the operator's launch-shape budget: this launcher never
+    # submits chunks longer than --chunk-len, so cap the rungs there (the
+    # engine default tops at 512 — pointless compiles for this workload).
+    ladder = pow2_ladder(args.chunk_len) if capacity == "auto" else None
     eng = StreamingEngine(params, cfg, backend=args.backend,
                           max_sessions=args.sessions,
-                          chunk_capacity=capacity,
-                          max_pending=args.max_pending)
+                          chunk_capacity=capacity, ladder=ladder,
+                          max_pending=args.max_pending,
+                          mesh=mesh, metrics_sink=sink)
+    if args.prewarm:
+        t0 = time.perf_counter()
+        caps = prewarm(eng)
+        print(f"prewarmed capacities {caps} in "
+              f"{time.perf_counter() - t0:.2f}s")
 
     # Streams are regenerated deterministically from their generation
     # params; the per-stream cursor lives *in* the session (steps served
@@ -188,6 +227,9 @@ def main():
               f"steps over {agg['ticks']} ticks | "
               f"capacities used {agg['capacities_used']} | "
               f"pad waste {agg['pad_waste']:4.2f}")
+    if args.metrics_out:
+        eng.metrics_sink.close()
+        print(f"tick metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

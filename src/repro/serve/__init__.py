@@ -11,12 +11,14 @@ from repro.serve.admission import (AdmissionQueue, DrainRejected, QueueFull,
 from repro.serve.persistence import (load_snapshot_meta, restore_store,
                                      snapshot_store)
 from repro.serve.scheduler import (AdaptiveTickScheduler, TickMetrics,
-                                   pow2_ladder, summarize)
+                                   pow2_ladder, prewarm, summarize)
 from repro.serve.sessions import CapacityError, Session, SessionStore
-from repro.serve.stream import ChunkResult, StreamingEngine
+from repro.serve.stream import (ChunkResult, JsonlSink, MetricsSink,
+                                RingBufferSink, StreamingEngine)
 
 __all__ = ["AdmissionQueue", "AdaptiveTickScheduler", "CapacityError",
-           "ChunkResult", "DrainRejected", "QueueFull", "Session",
-           "SessionStore", "StreamingEngine", "Ticket", "TickMetrics",
-           "load_snapshot_meta", "pow2_ladder", "restore_store",
+           "ChunkResult", "DrainRejected", "JsonlSink", "MetricsSink",
+           "QueueFull", "RingBufferSink", "Session", "SessionStore",
+           "StreamingEngine", "Ticket", "TickMetrics",
+           "load_snapshot_meta", "pow2_ladder", "prewarm", "restore_store",
            "snapshot_store", "summarize"]

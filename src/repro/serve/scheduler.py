@@ -62,6 +62,7 @@ class TickMetrics:
     pad_waste: float       # 1 - live_chain_steps/padded_steps
     duration_s: float      # wall-clock of the engine tick (dispatch incl.)
     tokens_per_sec: float  # live chain-timesteps / duration (proxy off-TPU)
+    shards: int = 1        # data-parallel width the tick launched across
 
 
 class AdaptiveTickScheduler:
@@ -132,6 +133,55 @@ class AdaptiveTickScheduler:
 
     def load_state(self, state: dict) -> None:
         self._window.extend(int(n) for n in state.get("window", ()))
+
+
+def prewarm(engine, *, dtype=None) -> list[int]:
+    """Compile every capacity rung at boot instead of on first use.
+
+    PR 3's adaptive ladder bounds total recompiles by the ladder length,
+    but each rung still compiled lazily on the first tick that needed it —
+    a latency spike landing on whichever patient stream happened to trigger
+    the climb.  This walks the engine's ladder (or its single fixed
+    capacity) and drives the *exact* serving graph for each rung — same
+    batch layout (``max_sessions`` slots padded to the shard multiple, S
+    chains each), same dtypes, same materialized state pytree — so the
+    first real tick of any shape hits a warm jit cache.  Dynamic-shape
+    engines (``chunk_capacity=None``) have no finite shape family to warm
+    and are rejected.
+
+    Args:
+      engine: a ``StreamingEngine`` with ``chunk_capacity`` an int or
+        ``"auto"``.
+      dtype: chunk dtype traffic will arrive in (default float32 — what
+        the launchers feed; a mismatched dtype would compile a second
+        graph family on the first real tick).
+
+    Returns the list of capacities compiled, ascending.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    if engine._scheduler is not None:
+        caps = list(engine._scheduler.ladder)
+    elif isinstance(engine.chunk_capacity, int):
+        caps = [engine.chunk_capacity]
+    else:
+        raise ValueError(
+            "prewarm needs a bounded shape family: chunk_capacity must be "
+            "an int or 'auto' (dynamic mode compiles per observed shape)")
+    dtype = np.dtype(np.float32 if dtype is None else dtype)
+    s = engine.n_samples
+    nb = engine._slot_count(0) * s      # the fixed-mode tick batch layout
+    in_dim = engine.cfg.input_dim
+    for cap in caps:
+        x = jnp.zeros((nb, cap, in_dim), dtype)
+        rows = jnp.zeros((nb,), jnp.uint32)
+        lengths = jnp.ones((nb,), jnp.int32)
+        state = engine._gather_states([], dtype, n_pad=nb)
+        outs, states = engine._apply(x, rows, lengths, state)
+        jax.block_until_ready((outs, states))
+    return caps
 
 
 def summarize(metrics: Sequence[TickMetrics]) -> dict:

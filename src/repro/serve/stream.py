@@ -28,14 +28,21 @@ with priorities and bounded backpressure (``admit``/``repro.serve.
 admission``), crash-safe durability (``snapshot``/``restore`` over
 ``repro.serve.persistence``), and an adaptive launch-shape scheduler with
 per-tick metrics (``chunk_capacity="auto"``, ``repro.serve.scheduler``).
+
+The multi-device data plane (PR 5) slots underneath: ``mesh=`` shards
+every tick's batch rows over the mesh's data axes with bit-identical
+results (``repro.launch.rnn_shardings``), session slots pad to whole
+sessions per shard, and per-tick metrics flow through a pluggable
+:class:`MetricsSink` (ring buffer by default, JSONL for a durable trail).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from collections import deque
-from typing import Any, Mapping
+from typing import Any, Mapping, Protocol, Sequence, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +67,70 @@ class ChunkResult:
     steps_total: int           # timesteps consumed by the session so far
     summary: Any               # ClassificationSummary | RegressionSummary
                                # (leading batch axis squeezed away)
+
+
+# ---------------------------------------------------------------------------
+# Metrics sinks — where per-tick observables go
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class MetricsSink(Protocol):
+    """Where the engine's per-tick :class:`TickMetrics` go.
+
+    The engine serves *unbounded* streams, so the sink contract is
+    explicitly bounded: ``emit`` consumes one record, ``window`` returns
+    the recent records the sink still holds (for ``engine.metrics`` /
+    ``summarize``) — how many is the sink's policy, not the engine's.
+    """
+
+    def emit(self, m: TickMetrics) -> None: ...
+
+    def window(self) -> Sequence[TickMetrics]: ...
+
+    def last(self) -> TickMetrics | None: ...
+
+    def close(self) -> None: ...
+
+
+class RingBufferSink:
+    """Default sink: a bounded in-memory ring (the last ``window`` ticks)."""
+
+    def __init__(self, window: int = 4096):
+        self._ring: deque[TickMetrics] = deque(maxlen=int(window))
+
+    def emit(self, m: TickMetrics) -> None:
+        self._ring.append(m)
+
+    def window(self) -> list[TickMetrics]:
+        return list(self._ring)
+
+    def last(self) -> TickMetrics | None:
+        """Newest record, O(1) — serve loops poll this every tick."""
+        return self._ring[-1] if self._ring else None
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink(RingBufferSink):
+    """Append every tick as one JSON line; keeps the ring for ``window()``.
+
+    Lines are flushed per tick so an operator can ``tail -f`` the file (and
+    a crash loses at most the in-flight line).  Used by
+    ``repro.launch.stream --metrics-out``.
+    """
+
+    def __init__(self, path, *, window: int = 4096):
+        super().__init__(window)
+        self.path = path
+        self._fh = open(path, "a", buffering=1)
+
+    def emit(self, m: TickMetrics) -> None:
+        super().emit(m)
+        self._fh.write(json.dumps(dataclasses.asdict(m)) + "\n")
+
+    def close(self) -> None:
+        self._fh.close()
 
 
 class StreamingEngine:
@@ -88,8 +159,22 @@ class StreamingEngine:
       max_pending: admission-queue bound (``admit`` backpressure).
       ladder: capacity candidates for ``chunk_capacity="auto"`` (default:
         powers of two up to 512, see ``scheduler.pow2_ladder``).
-      metrics_window: how many recent :class:`TickMetrics` ``metrics``
-        retains (bounded — the engine targets unbounded streams).
+      metrics_window: ring size of the default metrics sink (and the
+        ``dropped_admissions`` bound) — bounded, the engine targets
+        unbounded streams.
+      metrics_sink: where per-tick :class:`TickMetrics` go (a
+        :class:`MetricsSink`; default: ``RingBufferSink(metrics_window)``).
+        ``engine.metrics`` reads the sink's window, so ``JsonlSink`` keeps
+        the in-process observables *and* a durable JSONL trail.
+      mesh, policy: shard every launch over the mesh's data axes
+        (``repro.launch.rnn_shardings``).  The engine becomes placement-
+        aware: session slots pad to a whole number per shard so each
+        device serves complete sessions (all S chains of a session land
+        on one shard), while mask rows stay *global* coordinates — which
+        is exactly why snapshots remain host-portable: a snapshot taken
+        on an 8-device mesh restores bit-identically onto 1 device (or
+        any other mesh shape), because nothing device-shaped is ever part
+        of the Bayesian draw or the carry.
       interpret: forwarded to the Pallas backends (default: auto off-TPU).
     """
 
@@ -99,6 +184,8 @@ class StreamingEngine:
                  max_pending: int = 256, ladder=None,
                  scheduler: AdaptiveTickScheduler | None = None,
                  metrics_window: int = 4096,
+                 metrics_sink: MetricsSink | None = None,
+                 mesh=None, policy=None,
                  interpret: bool | None = None):
         if isinstance(cfg, _clf.ClassifierConfig):
             self.kind = "classifier"
@@ -112,6 +199,14 @@ class StreamingEngine:
         self.interpret = interpret
         self.chunk_capacity = chunk_capacity
         self.max_sessions = max_sessions
+        self.mesh = mesh
+        self.policy = policy
+        if mesh is not None:
+            # deferred: serve must import without the launch layer
+            from repro.launch import rnn_shardings as _rs
+            self._shards = _rs.data_size(mesh, policy or _rs.DEFAULT_POLICY)
+        else:
+            self._shards = 1
         self._scheduler = None
         if chunk_capacity == "auto":
             # A caller-tuned scheduler (percentile, window) wins over the
@@ -132,10 +227,11 @@ class StreamingEngine:
                                   max_sessions=max_sessions)
         self.queue = AdmissionQueue(max_pending)
         self.tick = 0
-        # Bounded: the engine is built for unbounded streams — an
-        # ever-growing per-tick list would leak on exactly that workload.
-        # summarize() rolls up whatever the window holds.
-        self.metrics: deque[TickMetrics] = deque(maxlen=metrics_window)
+        # Pluggable, bounded: the engine is built for unbounded streams —
+        # an ever-growing per-tick list would leak on exactly that
+        # workload.  summarize() rolls up whatever the sink's window holds.
+        self.metrics_sink: MetricsSink = (metrics_sink
+                                          or RingBufferSink(metrics_window))
         # Tickets the store refused mid-drain ((Ticket, error) pairs, newest
         # last).  A drain rejection concerns the ticket's *owner*, not
         # whichever caller happened to trigger the drain — see _drain.
@@ -231,8 +327,13 @@ class StreamingEngine:
         return [t.sid for t in self.queue.waiting()]
 
     @property
+    def metrics(self) -> Sequence[TickMetrics]:
+        """The metrics sink's retained window (recent ticks, oldest first)."""
+        return self.metrics_sink.window()
+
+    @property
     def last_metrics(self) -> TickMetrics | None:
-        return self.metrics[-1] if self.metrics else None
+        return self.metrics_sink.last()
 
     # -- durability ----------------------------------------------------------
     def snapshot(self, directory: str, *, step: int | None = None,
@@ -249,6 +350,11 @@ class StreamingEngine:
         """
         engine_meta = {"tick": self.tick, "kind": self.kind,
                        "backend": self.backend, "cell": self.cell,
+                       # Observability only — deliberately NOT validated on
+                       # restore: a snapshot is host-portable and restores
+                       # onto any mesh shape (mask rows are global, carries
+                       # are device-free host arrays).
+                       "data_shards": self._shards,
                        "mcd": {"p": float(self.cfg.mcd.p),
                                "placement":
                                    _mcd.placement_str(self.cfg.mcd.placement)}}
@@ -355,14 +461,13 @@ class StreamingEngine:
         else:
             t_max = max(lens)
         dtype = xs[0].dtype
-        # Fixed-shape modes pad idle session slots so one compiled graph per
-        # shape serves every tick (dummy rows freeze after step 0, dropped).
-        n_pad = (self.max_sessions - len(sessions)) * s if self._fixed else 0
+        slots = self._slot_count(len(sessions))
+        n_pad = (slots - len(sessions)) * s
         # Batch assembly stages in host numpy — one device transfer per
         # operand per tick, not O(sessions) tiny dispatches.  Session-major,
         # chain-minor: row k*S+j is chain j of session k, matching the
         # concatenated per-session mask rows.
-        nb = len(sessions) * s + n_pad
+        nb = slots * s
         x_host = np.zeros((nb, t_max, xs[0].shape[1]), dtype)
         rows_host = np.zeros((nb,), np.uint32)
         lens_host = np.ones((nb,), np.int32)
@@ -376,16 +481,11 @@ class StreamingEngine:
         lengths = jnp.asarray(lens_host)
         initial_state = self._gather_states(sessions, dtype, n_pad)
 
+        outs, states = self._apply(x_batch, rows, lengths, initial_state)
         if self.kind == "classifier":
-            logits, states = _clf.apply(
-                self.params, x_batch, rows, self.cfg, backend=self.backend,
-                initial_state=initial_state, lengths=lengths,
-                return_state=True)
+            (logits,) = outs
         else:
-            mean, log_var, states = _ae.apply(
-                self.params, x_batch, rows, self.cfg, backend=self.backend,
-                initial_state=initial_state, lengths=lengths,
-                return_state=True)
+            mean, log_var = outs
 
         # One batched summary over [S, n_sessions, ...] — per-session results
         # are indexed out, not recomputed per session.
@@ -430,10 +530,47 @@ class StreamingEngine:
             padded_steps=nb * int(t_max),
             pad_waste=1.0 - (live_steps * s) / (nb * int(t_max)),
             duration_s=dur,
-            tokens_per_sec=live_steps * s / dur if dur > 0 else 0.0)
-        self.metrics.append(m)
+            tokens_per_sec=live_steps * s / dur if dur > 0 else 0.0,
+            shards=self._shards)
+        self.metrics_sink.emit(m)
         self.tick += 1
         return results
+
+    def _slot_count(self, n_sessions: int) -> int:
+        """Session slots a tick launches with — the batch-layout contract.
+
+        Fixed-shape modes pad idle slots to ``max_sessions`` so one
+        compiled graph per shape serves every tick (dummy rows freeze
+        after step 0, dropped); shard-aware placement then rounds up to a
+        whole number of sessions per shard, so a session's S chains never
+        straddle a device boundary and every shard launches the same
+        shape.  Mask rows stay global — placement is a batch-layout
+        concern only.  Single source for both :meth:`step` and
+        :func:`repro.serve.scheduler.prewarm`: the prewarm guarantee is
+        exactly "compiles the graph this formula will launch".
+        """
+        slots = self.max_sessions if self._fixed else n_sessions
+        return -(-slots // self._shards) * self._shards
+
+    def _apply(self, x_batch, rows, lengths, initial_state):
+        """One batched model launch — the tick hot path.
+
+        Factored out of :meth:`step` so :func:`repro.serve.scheduler.prewarm`
+        can drive the *exact* serving graph (same shapes, dtypes and state
+        pytree) at boot, compiling every ladder rung before traffic arrives.
+        Returns ``(model outputs tuple, per-layer states)``.
+        """
+        if self.kind == "classifier":
+            logits, states = _clf.apply(
+                self.params, x_batch, rows, self.cfg, backend=self.backend,
+                initial_state=initial_state, lengths=lengths,
+                return_state=True, mesh=self.mesh, policy=self.policy)
+            return (logits,), states
+        mean, log_var, states = _ae.apply(
+            self.params, x_batch, rows, self.cfg, backend=self.backend,
+            initial_state=initial_state, lengths=lengths,
+            return_state=True, mesh=self.mesh, policy=self.policy)
+        return (mean, log_var), states
 
     def _gather_states(self, sessions, dtype, n_pad: int = 0):
         """Concatenate per-session carries into batch-aligned layer states.

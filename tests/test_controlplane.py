@@ -697,3 +697,92 @@ class TestAdmissionUnderChurn:
         assert served == {sid: T for sid in sigs}
         assert len(eng.queued_sessions) == 0 and len(eng.active_sessions) == 0
         assert results_count * chunk >= total * T   # every chunk answered
+
+class TestPrewarm:
+    """ISSUE 5 satellite: boot-time compilation of the capacity ladder —
+    post-warm ticks must trigger **zero** new stack-graph compiles."""
+
+    @staticmethod
+    def _stack_cache_sizes():
+        from repro.kernels import ops
+        return (ops.lstm_stack_layer._cache_size(),
+                ops.fused_lstm_seq._cache_size(),
+                ops.fused_lstm_layer._cache_size(),
+                ops.gru_stack_layer._cache_size(),
+                ops.fused_gru_seq._cache_size())
+
+    def test_prewarm_then_zero_new_compiles(self):
+        from repro.serve import prewarm
+        cfg, params = _cfg_params(s=2)
+        eng = StreamingEngine(params, cfg, max_sessions=2,
+                              chunk_capacity="auto", ladder=(4, 8))
+        assert prewarm(eng) == [4, 8]
+        warm = self._stack_cache_sizes()
+        eng.open_session("a")
+        eng.open_session("b")
+        sig = jax.random.normal(jax.random.key(4), (8, 1))
+        for a, b in ((3, 2), (8, 4), (1, 1), (5, 8)):   # both rungs, ragged
+            eng.step({"a": sig[:a], "b": sig[:b]})
+        assert self._stack_cache_sizes() == warm, \
+            "a post-warm tick compiled a new stack graph"
+        assert {m.capacity for m in eng.metrics} == {4, 8}
+
+    def test_prewarm_fixed_capacity_single_rung(self):
+        from repro.serve import prewarm
+        cfg, params = _cfg_params(s=2)
+        eng = StreamingEngine(params, cfg, max_sessions=2, chunk_capacity=6)
+        assert prewarm(eng) == [6]
+        warm = self._stack_cache_sizes()
+        eng.open_session("a")
+        for n in (2, 6, 1):
+            eng.step({"a": jnp.ones((n, 1), jnp.float32)})
+        assert self._stack_cache_sizes() == warm
+
+    def test_prewarm_rejects_dynamic_shapes(self):
+        from repro.serve import prewarm
+        cfg, params = _cfg_params(s=2)
+        eng = StreamingEngine(params, cfg, max_sessions=2)  # dynamic mode
+        with pytest.raises(ValueError, match="bounded"):
+            prewarm(eng)
+
+
+class TestMetricsSinks:
+    """ISSUE 5 satellite: the per-tick metrics stream is a pluggable sink
+    (bounded ring by default, JSONL file for a durable trail)."""
+
+    def test_default_ring_sink_backs_metrics_property(self):
+        from repro.serve import RingBufferSink
+        cfg, params = _cfg_params(s=2)
+        eng = StreamingEngine(params, cfg, max_sessions=1, metrics_window=2)
+        assert isinstance(eng.metrics_sink, RingBufferSink)
+        eng.open_session("a")
+        for _ in range(4):
+            eng.step({"a": jnp.ones((2, 1))})
+        assert len(eng.metrics) == 2 and eng.last_metrics.tick == 3
+
+    def test_jsonl_sink_writes_parseable_trail(self, tmp_path):
+        import json
+
+        from repro.serve import JsonlSink
+        cfg, params = _cfg_params(s=2)
+        path = tmp_path / "ticks.jsonl"
+        eng = StreamingEngine(params, cfg, max_sessions=1,
+                              metrics_sink=JsonlSink(str(path)))
+        eng.open_session("a")
+        for n in (3, 1, 2):
+            eng.step({"a": jnp.ones((n, 1))})
+        eng.metrics_sink.close()
+        lines = [json.loads(l) for l in path.read_text().splitlines()]
+        assert [m["tick"] for m in lines] == [0, 1, 2]
+        assert [m["live_steps"] for m in lines] == [3, 1, 2]
+        assert all(m["shards"] == 1 for m in lines)
+        # the ring window still serves the in-process observables
+        assert len(eng.metrics) == 3
+        assert summarize(eng.metrics)["ticks"] == 3
+        # appending across engine restarts keeps the trail monotone
+        eng2 = StreamingEngine(params, cfg, max_sessions=1,
+                               metrics_sink=JsonlSink(str(path)))
+        eng2.open_session("a")
+        eng2.step({"a": jnp.ones((1, 1))})
+        eng2.metrics_sink.close()
+        assert len(path.read_text().splitlines()) == 4

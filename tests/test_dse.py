@@ -1,5 +1,7 @@
 """Co-design framework: resource/latency models + optimization modes."""
 
+import dataclasses
+
 import pytest
 from hypothesis import given, settings, strategies as st
 
@@ -80,6 +82,113 @@ class TestSearch:
     def test_pareto_front_nonempty(self):
         front = search.pareto_front(self._table(), "entropy", "accuracy")
         assert front
+
+
+class TestGruRow:
+    """§III-A in the DSE: the 3-gate cell as a co-design knob (PR 4's
+    open item — the models price GRU at 3/4 of the LSTM datapath)."""
+
+    def test_dsp_recurrent_terms_scale_three_quarters(self):
+        gru = dataclasses.replace(CLF, cell="gru")
+        hw = fm.HwConfig(1, 1, 1)
+        head = CLF.layer_dims()[-1][1] * CLF.output_dim / hw.r_d
+        lstm_rec = fm.dsp_usage(CLF, hw) - head
+        gru_rec = fm.dsp_usage(gru, hw) - head
+        assert gru_rec == pytest.approx(lstm_rec * 3.0 / 4.0)
+
+    def test_lstm_formula_unchanged(self):
+        """The published instance (G=4) must still match the paper pin."""
+        assert CLF.cell == "lstm" and CLF.gates == 4
+        assert fm.dsp_usage(CLF, fm.HwConfig(12, 1, 1)) == pytest.approx(
+            941.3, abs=0.5)
+
+    def test_gru_fits_lower_reuse_hence_latency_no_worse(self):
+        """Fewer DSPs → smaller feasible reuse factors → lower (or equal)
+        II — exactly the trade the cheaper cell buys."""
+        gru = dataclasses.replace(CLF, cell="gru")
+        hw_l = fm.best_reuse_factors(CLF)
+        hw_g = fm.best_reuse_factors(gru)
+        assert fm.latency_s(gru, hw_g, batch=50, n_samples=30) <= \
+            fm.latency_s(CLF, hw_l, batch=50, n_samples=30)
+
+    def test_bad_cell_rejected(self):
+        with pytest.raises(ValueError, match="cell"):
+            _ = dataclasses.replace(CLF, cell="rnn").gates
+
+    def test_candidate_cell_field_rewrites_arch(self):
+        cand = search.Candidate(arch=CLF, metrics={}, cell="gru")
+        assert cand.arch.cell == "gru" and cand.cell == "gru"
+        # default: inherit the arch's cell
+        assert search.Candidate(arch=CLF, metrics={}).cell == "lstm"
+
+    def test_optimize_trades_cell_against_accuracy(self):
+        # H=16: big enough that the DSP budget binds, so the 3-gate cell
+        # buys strictly smaller reuse factors (at H=8 both cells already
+        # reach II=2 and the trade is moot).
+        table = [
+            search.Candidate(arch=fm.RNNArch(16, 3, "YNY"),
+                             metrics={"accuracy": 0.92}),
+            search.Candidate(arch=fm.RNNArch(16, 3, "YNY"), cell="gru",
+                             metrics={"accuracy": 0.90}),
+        ]
+        fast = search.optimize(table, "Opt-Latency")
+        assert fast.cell == "gru"            # cheaper datapath wins latency
+        acc = search.optimize(table, "Opt-Latency",
+                              requirements={"accuracy": 0.91})
+        assert acc.cell == "lstm"            # until accuracy floors bind
+
+    def test_tpu_rnn_roofline_counts_gates(self):
+        gru = dataclasses.replace(CLF, cell="gru")
+        r_l = tpu_model.rnn_step_model(CLF, batch=50, n_samples=30)
+        r_g = tpu_model.rnn_step_model(gru, batch=50, n_samples=30)
+        assert 0 < r_g["flops"] < r_l["flops"]
+        assert 0 < r_g["bytes"] < r_l["bytes"]
+        assert r_g["t_step"] <= r_l["t_step"]
+
+    def test_tpu_rnn_model_ae_flops_not_double_counted(self):
+        """Regression: AE layer_dims() already spans encoder + decoder;
+        multiplying T by 2 on top priced AE work ~2× (the paper's ×2 is
+        latency serialization, not extra flops)."""
+        r = tpu_model.rnn_step_model(AE)
+        g = AE.gates
+        per_step = sum(2.0 * g * (i * h + h * h) + 12.0 * h
+                       for i, h in AE.layer_dims())
+        head = 2.0 * AE.layer_dims()[-1][1] * AE.output_dim * AE.timesteps
+        assert r["flops"] == pytest.approx(AE.timesteps * per_step + head)
+
+    def test_tpu_rnn_model_data_sharding_scales_rows(self):
+        r1 = tpu_model.rnn_step_model(CLF, batch=64, n_samples=8, data=1)
+        r8 = tpu_model.rnn_step_model(CLF, batch=64, n_samples=8, data=8)
+        assert r8["flops"] == pytest.approx(r1["flops"] / 8, rel=0.05)
+
+    def test_tpu_latency_model_pluggable_into_optimize(self):
+        table = [
+            search.Candidate(arch=fm.RNNArch(8, 3, "YNY"),
+                             metrics={"accuracy": 0.92}),
+            search.Candidate(arch=fm.RNNArch(8, 3, "YNY"), cell="gru",
+                             metrics={"accuracy": 0.90}),
+        ]
+        got = search.optimize(table, "Opt-Latency",
+                              latency_model=tpu_model.rnn_latency_s,
+                              hw_model=None)
+        assert got is not None and got.latency_s > 0
+        assert got.cell == "gru" and got.hw is None
+
+    def test_tpu_flow_prices_archs_the_fpga_gate_rejects(self):
+        """An H=256 stack fits no ZC706 reuse config (the default gate
+        returns None and optimize drops it) but is a perfectly good TPU
+        candidate — hw_model=None is the documented TPU flow."""
+        big = [search.Candidate(arch=fm.RNNArch(256, 3, "YNY"),
+                                metrics={"accuracy": 0.95})]
+        assert search.optimize(big, "Opt-Latency") is None   # FPGA gate
+        got = search.optimize(big, "Opt-Latency",
+                              latency_model=tpu_model.rnn_latency_s,
+                              hw_model=None)
+        assert got is not None and 0 < got.latency_s < 1.0
+        # no-gate without a latency model is a config error, not a deep
+        # AttributeError inside the FPGA formula
+        with pytest.raises(ValueError, match="latency_model"):
+            search.optimize(big, "Opt-Latency", hw_model=None)
 
 
 class TestTpuModel:
