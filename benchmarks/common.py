@@ -96,12 +96,13 @@ def train_autoencoder(placement: str, hidden: int = 16, num_layers: int = 1,
 
 
 def eval_classifier(cfg, params, n_samples: int | None = None,
-                    n_test: int = 1024):
+                    n_test: int = 1024, precision: str | None = None):
     _, _, ex, ey = data()
     x, y = jnp.asarray(ex[:n_test]), jnp.asarray(ey[:n_test])
     mcfg = cfg.mcd if n_samples is None else cfg.mcd.replace(n_samples=n_samples)
-    logits = bayesian.predict(lambda p, x_, r: clf.apply(p, x_, r, cfg),
-                              params, x, mcfg)
+    logits = bayesian.predict(
+        lambda p, x_, r: clf.apply(p, x_, r, cfg, precision=precision),
+        params, x, mcfg)
     s = unc.classification_summary(logits)
     probs = np.asarray(s.probs)
     yn = np.asarray(y)
@@ -117,20 +118,24 @@ def eval_classifier(cfg, params, n_samples: int | None = None,
         ar.append(tp / (tp + fn) if tp + fn else 0.0)
     noise = jax.random.normal(jax.random.key(5), x.shape)
     s_noise = unc.classification_summary(
-        bayesian.predict(lambda p, x_, r: clf.apply(p, x_, r, cfg),
-                         params, noise, mcfg))
+        bayesian.predict(
+            lambda p, x_, r: clf.apply(p, x_, r, cfg, precision=precision),
+            params, noise, mcfg))
     return {"accuracy": acc, "ap": float(np.mean(ap)), "ar": float(np.mean(ar)),
             "entropy": float(np.asarray(s_noise.predictive_entropy).mean())}
 
 
 def eval_autoencoder(cfg, params, n_samples: int | None = None,
-                     n_test: int = 768):
+                     n_test: int = 768, precision: str | None = None):
     _, _, ex, ey = data()
     x = jnp.asarray(ex[:n_test])
     yn = np.asarray(ey[:n_test]) != 0          # anomaly = positive
     mcfg = cfg.mcd if n_samples is None else cfg.mcd.replace(n_samples=n_samples)
     means, log_vars = bayesian.predict(
-        lambda p, x_, r: ae.apply(p, x_, r, cfg), params, x, mcfg)
+        lambda p, x_, r: ae.apply(p, x_, r, cfg, precision=precision),
+        params, x, mcfg)
+    means = means.astype(jnp.float32)
+    log_vars = None if log_vars is None else log_vars.astype(jnp.float32)
     s = unc.regression_summary(means, log_vars)
     score = np.asarray(unc.rmse(s, x))         # higher = more anomalous
     auc = _auc(yn, score)

@@ -26,6 +26,7 @@ nothing stochastic lives outside the snapshot (masks recompute from
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke   # CI: tiny + fast
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke --kill-resume
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke --cell gru
+    PYTHONPATH=src python examples/ecg_monitoring.py --smoke --precision int8
 """
 
 import argparse
@@ -69,6 +70,11 @@ def main():
     ap.add_argument("--sessions", type=int, default=3)
     ap.add_argument("--chunk-len", type=int, default=28)
     ap.add_argument("--backend", default="pallas_seq")
+    ap.add_argument("--precision", default=None,
+                    choices=("fp32", "bf16", "int8", "int4"),
+                    help="serving precision: quantize weights per-channel "
+                    "(int8/int4 packed, dequantized in-register) and run "
+                    "bf16 activations; default: native dtypes")
     ap.add_argument("--cell", default="lstm", choices=("lstm", "gru"),
                     help="recurrent unit (§III-A: GRU drops into the same "
                     "per-gate MCD design; streamed with h-only carries)")
@@ -101,11 +107,13 @@ def main():
     total_t = 3 * args.chunk_len if args.smoke else ecg.T_STEPS
 
     eng = StreamingEngine(params, cfg, backend=args.backend,
+                          precision=args.precision,
                           max_sessions=args.sessions)
     for k in range(args.sessions):
         eng.open_session(f"patient-{k}")
     print(f"monitoring {args.sessions} sessions, chunk={args.chunk_len}, "
           f"S={args.samples}, cell={args.cell}, backend={args.backend}, "
+          f"precision={args.precision or 'native'}, "
           f"model trained {args.steps} steps")
 
     pos = 0
@@ -133,11 +141,13 @@ def main():
               f"(masks tied across all of them)")
 
     # The invariant that makes this safe to deploy: chunking is invisible.
-    eng2 = StreamingEngine(params, cfg, backend=args.backend, max_sessions=1)
+    eng2 = StreamingEngine(params, cfg, backend=args.backend,
+                           precision=args.precision, max_sessions=1)
     eng2.open_session("whole")
     whole = eng2.step({"whole": jnp.asarray(ex[picks[0]][:total_t],
                                             jnp.float32)})["whole"]
-    eng3 = StreamingEngine(params, cfg, backend=args.backend, max_sessions=1)
+    eng3 = StreamingEngine(params, cfg, backend=args.backend,
+                           precision=args.precision, max_sessions=1)
     eng3.open_session("split")
     split = None
     for a in range(0, total_t, 7):
@@ -174,12 +184,14 @@ def kill_and_resume(params, cfg, ex, picks, args, total_t):
         return out
 
     gold = StreamingEngine(params, cfg, backend=args.backend,
+                           precision=args.precision,
                            max_sessions=args.sessions)
     for k in range(args.sessions):
         gold.open_session(f"patient-{k}")
     final_gold = serve(gold, 0, total_t)
 
     victim = StreamingEngine(params, cfg, backend=args.backend,
+                             precision=args.precision,
                              max_sessions=args.sessions)
     for k in range(args.sessions):
         victim.open_session(f"patient-{k}")
@@ -190,6 +202,7 @@ def kill_and_resume(params, cfg, ex, picks, args, total_t):
         print(f"\nkill-and-resume: snapshot at t={half} -> {path}")
         del victim                                  # the crash
         revived = StreamingEngine(params, cfg, backend=args.backend,
+                                  precision=args.precision,
                                   max_sessions=args.sessions)
         revived.restore(snap_dir)
         final_res = serve(revived, half, total_t)

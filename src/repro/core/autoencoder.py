@@ -57,7 +57,8 @@ def init(key: jax.Array, cfg: AutoencoderConfig, dtype=jnp.float32) -> dict[str,
 def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
           cfg: AutoencoderConfig, *, backend: str = "reference",
           initial_state=None, lengths: jax.Array | None = None,
-          return_state: bool = False, mesh=None, policy=None):
+          return_state: bool = False, mesh=None, policy=None,
+          precision: str | None = None):
     """Forward pass for one set of MCD masks.
 
     Args:
@@ -72,6 +73,10 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
       mesh, policy: shard both stacks over devices (batch rows over the
         mesh's data axes — ``repro.launch.rnn_shardings``); bit-identical
         to the unsharded lengths-enabled pass.
+      precision: serving precision of both stacks (``quantize.PRECISIONS``;
+        None = native dtypes) — input cast to the activation dtype up front
+        (reference masks then sample in it), fp32 master weights
+        quantized/cast in-graph; the dense head stays fp32.
     Returns:
       (mean [B, T, I], log_var [B, T, I] or None)[, encoder states].
       When streaming, each chunk is reconstructed from the *running*
@@ -80,6 +85,10 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
       reconstruction of an unbounded signal).
     """
     T = x_seq.shape[1]
+    if precision is not None:
+        from repro.kernels import quantize
+        x_seq = x_seq.astype(quantize.activation_dtype(precision,
+                                                       x_seq.dtype))
     if backend == "reference":
         enc_masks = rnn.sample_stack_masks(cfg.mcd, rows, cfg.input_dim,
                                            cfg.encoder_hiddens, layer_offset=0,
@@ -100,7 +109,8 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
                                   seed=cfg.mcd.seed,
                                   initial_state=initial_state,
                                   lengths=lengths, return_all_states=True,
-                                  cell=cfg.cell, mesh=mesh, policy=policy)
+                                  cell=cfg.cell, mesh=mesh, policy=policy,
+                                  precision=precision)
     h_T = enc_states[-1][0]
     # Repeat the encoding T times (cached-replay in hardware).  The decoder
     # is replayed fresh per chunk — only encoder state streams forward — but
@@ -110,7 +120,8 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
     dec_out, _ = rnn.run_stack(params["decoder"], dec_in, dec_masks, cfg.mcd.p,
                                backend=backend, rows=rows, seed=cfg.mcd.seed,
                                layer_offset=cfg.num_layers, lengths=lengths,
-                               cell=cfg.cell, mesh=mesh, policy=policy)
+                               cell=cfg.cell, mesh=mesh, policy=policy,
+                               precision=precision)
     y = linear.dense(params["head"], dec_out)
     if cfg.heteroscedastic:
         mean, log_var = jnp.split(y, 2, axis=-1)

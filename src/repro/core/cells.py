@@ -74,6 +74,23 @@ def gate_stacked(params):
             params.b)
 
 
+def _pin_operands(*ops):
+    """Materialize sub-fp32 matmul operands at their stated dtype.
+
+    Inside jit, XLA fuses elementwise producers (mask·1/(1-p) scaling, fp32→
+    bf16 weight/input casts) into the dot and evaluates the chain at the
+    dot's higher internal precision — silently skipping the bf16 rounding
+    the Pallas kernels apply when they materialize the same intermediates in
+    registers.  An optimization barrier pins each operand to its rounded
+    value, keeping the reference backend bit-identical to the kernels for
+    bf16 activations (the int8/int4/bf16 serving precisions).  fp32 operands
+    pass through untouched — rounding is unaffected, so no barrier tax.
+    """
+    if any(o.dtype != jnp.float32 for o in ops):
+        return jax.lax.optimization_barrier(ops)
+    return ops
+
+
 def lstm_step(params: LSTMParams, h: jax.Array, c: jax.Array, x: jax.Array,
               zx: jax.Array | None, zh: jax.Array | None, p: float,
               compute_dtype=None):
@@ -94,9 +111,10 @@ def lstm_step(params: LSTMParams, h: jax.Array, c: jax.Array, x: jax.Array,
     hg = jnp.broadcast_to(h[:, None, :], (h.shape[0], 4, h.shape[1])).astype(cd)
     xg = mcd.apply_mask(xg, zx, p)
     hg = mcd.apply_mask(hg, zh, p)
-    gates = (jnp.einsum("bgi,gih->bgh", xg, wx.astype(cd),
+    xg, hg, wxc, whc = _pin_operands(xg, hg, wx.astype(cd), wh.astype(cd))
+    gates = (jnp.einsum("bgi,gih->bgh", xg, wxc,
                         preferred_element_type=jnp.float32)
-             + jnp.einsum("bgh,ghk->bgk", hg, wh.astype(cd),
+             + jnp.einsum("bgh,ghk->bgk", hg, whc,
                           preferred_element_type=jnp.float32)
              + b.astype(jnp.float32))
     i = jax.nn.sigmoid(gates[:, 0])
@@ -148,9 +166,10 @@ def gru_step(params: GRUParams, h: jax.Array, x: jax.Array,
     hg = jnp.broadcast_to(h[:, None, :], (h.shape[0], 3, h.shape[1])).astype(cd)
     xg = mcd.apply_mask(xg, zx, p)
     hg = mcd.apply_mask(hg, zh, p)
-    gx = jnp.einsum("bgi,gih->bgh", xg, wx.astype(cd),
+    xg, hg, wxc, whc = _pin_operands(xg, hg, wx.astype(cd), wh.astype(cd))
+    gx = jnp.einsum("bgi,gih->bgh", xg, wxc,
                     preferred_element_type=jnp.float32)
-    gh = jnp.einsum("bgh,ghk->bgk", hg, wh.astype(cd),
+    gh = jnp.einsum("bgh,ghk->bgk", hg, whc,
                     preferred_element_type=jnp.float32)
     bf = b.astype(jnp.float32)
     r = jax.nn.sigmoid(gx[:, 0] + gh[:, 0] + bf[0])

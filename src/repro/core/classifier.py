@@ -35,7 +35,8 @@ def init(key: jax.Array, cfg: ClassifierConfig, dtype=jnp.float32) -> dict[str, 
 def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
           cfg: ClassifierConfig, *, backend: str = "reference",
           initial_state=None, lengths: jax.Array | None = None,
-          return_state: bool = False, mesh=None, policy=None):
+          return_state: bool = False, mesh=None, policy=None,
+          precision: str | None = None):
     """Logits [B, num_classes] for one set of MCD masks.
 
     ``backend`` selects the encoder execution path (see
@@ -45,6 +46,13 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
     bit-identical to the unsharded lengths-enabled pass, so the flag is
     purely a throughput knob.
 
+    ``precision`` (``repro.kernels.quantize.PRECISIONS``; None = native
+    dtypes) selects the serving precision of the encoder: the input is cast
+    to the activation dtype up front — so the reference masks sample in the
+    same dtype the kernels materialize the 1/(1-p) scale in — and the fp32
+    master weights are quantized/cast in-graph per ``run_stack``.  The dense
+    head always runs its fp32 weights (logits stay fp32).
+
     Streaming resumption: ``initial_state`` (per-layer ``(h, c)`` list from a
     previous chunk), ``lengths`` (per-row valid chunk lengths when ragged
     chunks are padded to a common T) and ``return_state=True`` (also return
@@ -52,6 +60,10 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
     classify an unbounded signal chunk-by-chunk; the logits then summarize
     the signal *up to each row's last real sample*.
     """
+    if precision is not None:
+        from repro.kernels import quantize
+        x_seq = x_seq.astype(quantize.activation_dtype(precision,
+                                                       x_seq.dtype))
     hiddens = (cfg.hidden,) * cfg.num_layers
     # Pallas backends regenerate masks in-kernel — don't materialize them.
     masks = (rnn.sample_stack_masks(cfg.mcd, rows, cfg.input_dim, hiddens,
@@ -63,6 +75,6 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
                               rows=rows, seed=cfg.mcd.seed,
                               initial_state=initial_state, lengths=lengths,
                               return_all_states=True, cell=cfg.cell,
-                              mesh=mesh, policy=policy)
+                              mesh=mesh, policy=policy, precision=precision)
     logits = linear.dense(params["head"], states[-1][0])
     return (logits, states) if return_state else logits

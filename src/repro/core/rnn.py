@@ -92,7 +92,7 @@ def run_stack(params: Sequence, x_seq: jax.Array,
               seed=0, layer_offset: int = 0, interpret: bool | None = None,
               initial_state=None, lengths: jax.Array | None = None,
               return_all_states: bool = False, cell: str = "lstm",
-              mesh=None, policy=None):
+              mesh=None, policy=None, precision: str | None = None):
     """Run a cascaded recurrent stack over a [B, T, I] sequence.
 
     ``cell`` selects the recurrent unit (:data:`CELLS`): ``"lstm"`` (the
@@ -138,11 +138,31 @@ def run_stack(params: Sequence, x_seq: jax.Array,
       * ``policy``: a ``StackShardingPolicy`` (axis names, data/gspmd
         strategy, the wide-H threshold); None = the default policy.
 
+    Serving precision (``repro.kernels.quantize.PRECISIONS``):
+      * ``precision``: None (native dtypes — the default), ``"fp32"``,
+        ``"bf16"`` (cast), ``"int8"`` / ``"int4"`` (per-output-channel
+        quantized weights over bf16 activations, fp32 accumulate).  ``x_seq``
+        is cast to the precision's activation dtype up front; the fp32
+        master ``params`` are quantized/cast in-graph, never mutated.  The
+        sequence kernels keep the int codes VMEM-resident and dequantize
+        in-register; the step and reference backends apply the identical
+        canonical dequant outside, so all three backends stay bit-identical
+        at every precision.  The reference backend needs ``masks`` sampled
+        in the activation dtype (``sample_stack_masks(..., dtype=act)``) —
+        mask values carry the 1/(1-p) scale, which the kernels materialize
+        in the activation dtype.
+
     Returns (outputs [B, T, H_last] if return_sequence else None,
              the last layer's state — ``(h_T, c_T)`` / ``(h_T,)`` — or the
              per-layer list).
     """
     _check_cell(cell)
+    if precision is not None:
+        # deferred: core must import without the kernels package eagerly
+        from repro.kernels import quantize
+        quantize.check_precision(precision)
+        x_seq = x_seq.astype(quantize.activation_dtype(precision,
+                                                       x_seq.dtype))
     if mesh is not None:
         # deferred: core must import without the launch layer (and jax
         # device state must stay untouched until a mesh actually exists)
@@ -152,7 +172,8 @@ def run_stack(params: Sequence, x_seq: jax.Array,
             backend=backend, return_sequence=return_sequence, rows=rows,
             seed=seed, layer_offset=layer_offset, interpret=interpret,
             initial_state=initial_state, lengths=lengths,
-            return_all_states=return_all_states, cell=cell)
+            return_all_states=return_all_states, cell=cell,
+            precision=precision)
     if backend != "reference":
         return _run_stack_pallas(params, x_seq, masks, p, backend=backend,
                                  return_sequence=return_sequence, rows=rows,
@@ -160,13 +181,28 @@ def run_stack(params: Sequence, x_seq: jax.Array,
                                  interpret=interpret,
                                  initial_state=initial_state, lengths=lengths,
                                  return_all_states=return_all_states,
-                                 cell=cell)
+                                 cell=cell, precision=precision)
     if any(zx is IN_KERNEL_MASKS for zx, _ in masks):
         raise ValueError("stack_mask_plan() entries carry no mask values; "
                          "the reference backend needs sample_stack_masks()")
+    if precision is not None:
+        # Fake-quantize in core [G, I/H, H] layout (contraction axis 1) —
+        # bit-identical (q, scale) to the kernels' [I/H, G, H] axis-0
+        # quantization: the reductions cover the same element sets and every
+        # other op is elementwise.
+        params = [lp._replace(
+            wx=quantize.fake_quant(lp.wx, precision, axis=1,
+                                   act_dtype=x_seq.dtype),
+            wh=quantize.fake_quant(lp.wh, precision, axis=1,
+                                   act_dtype=x_seq.dtype))
+            for lp in params]
     batch = x_seq.shape[0]
     dtype = x_seq.dtype
-    carries = _seed_carries(params, initial_state, batch, dtype, cell)
+    # Under a serving precision the reference matches the kernels' 32-bit
+    # cell-state policy: c seeds/carries/returns fp32 even for bf16 h.
+    c_dtype = jnp.float32 if precision is not None else dtype
+    carries = _seed_carries(params, initial_state, batch, dtype, cell,
+                            c_dtype=c_dtype)
     xs = jnp.swapaxes(x_seq, 0, 1)  # [T, B, I] time-major for scan
     varlen = lengths is not None
     lens = lengths.astype(jnp.int32) if varlen else None
@@ -201,26 +237,29 @@ def run_stack(params: Sequence, x_seq: jax.Array,
     return out, (final_carry if return_all_states else final_carry[-1])
 
 
-def _seed_carries(params, initial_state, batch, dtype, cell="lstm"):
+def _seed_carries(params, initial_state, batch, dtype, cell="lstm",
+                  c_dtype=None):
     """Per-layer state carries: zeros, or the resumed session state as-is.
 
     Cell-aware pytrees: LSTM layers carry ``(h, c)``, GRU layers ``(h,)``.
+    ``c_dtype`` (default: ``dtype``) seeds the LSTM cell state — fp32 under
+    a serving precision, matching the kernels' 32-bit cell-state policy.
     """
     parts = 1 if cell == "gru" else 2
+    dtypes = (dtype, c_dtype or dtype)[:parts]
     carries = []
     for i, layer_params in enumerate(params):
         hidden = layer_params.wh.shape[-1]
         state = initial_state[i] if initial_state is not None else None
         if state is None:
-            state = tuple(jnp.zeros((batch, hidden), dtype)
-                          for _ in range(parts))
+            state = tuple(jnp.zeros((batch, hidden), dt) for dt in dtypes)
         carries.append(tuple(state))
     return carries
 
 
 def _run_stack_pallas(params, x_seq, masks, p, *, backend, return_sequence,
                       rows, seed, layer_offset, interpret, initial_state,
-                      lengths, return_all_states, cell):
+                      lengths, return_all_states, cell, precision=None):
     """Kernel-backed stack: layers run whole-sequence, one after another.
 
     The wavefront trick above exists to fuse the scan body across layers; the
@@ -246,7 +285,7 @@ def _run_stack_pallas(params, x_seq, masks, p, *, backend, return_sequence,
         inp, carry = stack_layer(*layer_params, inp, rows, seed,
                                  layer_offset + i, p_eff, seq=seq,
                                  initial_state=state0,
-                                 lengths=lengths,
+                                 lengths=lengths, precision=precision,
                                  interpret=interpret)
         states.append(carry)
     out = inp if return_sequence else None
@@ -258,6 +297,7 @@ def _run_stack_pallas(params, x_seq, masks, p, *, backend, return_sequence,
     if gru:
         return out, states[-1]                  # (h_T,) — no dtype to match
     # Match the reference carry contract: c in the input dtype (the kernels
-    # hand back their fp32 accumulator).
+    # hand back their fp32 accumulator).  Under a serving precision the
+    # reference itself carries c in fp32, so no cast.
     hT, cT = states[-1]
-    return out, (hT, cT.astype(x_seq.dtype))
+    return out, (hT, cT if precision is not None else cT.astype(x_seq.dtype))

@@ -43,6 +43,14 @@ PIPELINE_FILL = 34
 #: flop / weight-byte term by 3/4 at the same (H, NL).
 CELL_GATES = {"lstm": 4, "gru": 3}
 
+#: DSPs per MAC at each weight width.  The paper's published formula is the
+#: 16-bit fixed-point instance (one DSP48 per multiply — multiplier 1, which
+#: keeps the §V-C calibration intact at the default).  32-bit multipliers
+#: compose 4 DSP48s; 8-bit packs two MACs per DSP (the stock INT8 DSP-packing
+#: trick), 4-bit packs four.  Serving-side these widths are the
+#: ``repro.kernels.quantize`` precisions: 16 ↔ bf16, 8 ↔ int8, 4 ↔ int4.
+DSP_PER_MAC = {32: 4.0, 16: 1.0, 8: 0.5, 4: 0.25}
+
 
 @dataclasses.dataclass(frozen=True)
 class RNNArch:
@@ -60,6 +68,7 @@ class RNNArch:
     placement: str                  # B-string
     kind: str = "classifier"        # classifier | autoencoder
     cell: str = "lstm"              # recurrent unit (CELL_GATES)
+    weight_bits: int = 16           # recurrent-MVM operand width (DSP_PER_MAC)
     input_dim: int = 1
     output_dim: int = 4             # classes, or input_dim for AE
     timesteps: int = 140            # T (ECG5000)
@@ -70,6 +79,14 @@ class RNNArch:
             raise ValueError(f"cell must be one of {sorted(CELL_GATES)}, "
                              f"got {self.cell!r}")
         return CELL_GATES[self.cell]
+
+    @property
+    def dsp_per_mac(self) -> float:
+        if self.weight_bits not in DSP_PER_MAC:
+            raise ValueError(
+                f"weight_bits must be one of {sorted(DSP_PER_MAC)}, "
+                f"got {self.weight_bits!r}")
+        return DSP_PER_MAC[self.weight_bits]
 
     def layer_dims(self):
         """[(I_i, H_i)] for every LSTM layer in hardware order."""
@@ -105,13 +122,18 @@ def dsp_usage(arch: RNNArch, hw: HwConfig) -> float:
     The published formula is the LSTM instance (G = 4); the gate count
     generalizes it — every term is per-gate hardware (an input-side MVM, a
     recurrent MVM, and the elementwise tail), so a GRU layer costs 3/4 of
-    the LSTM layer at the same (I, H).
+    the LSTM layer at the same (I, H).  ``arch.weight_bits`` scales only
+    the two MVM terms (DSP_PER_MAC: the weight operand width sets how many
+    MACs pack into a DSP); the elementwise tail and the dense head keep the
+    baseline width — exactly the serving path's contract, where only the
+    recurrent ``wx``/``wh`` quantize and the head stays fp32.
     """
     g = float(arch.gates)
+    mac = arch.dsp_per_mac
     total = 0.0
     for (i_dim, h_dim) in arch.layer_dims():
-        total += (g * i_dim * h_dim / hw.r_x
-                  + g * h_dim * h_dim / hw.r_h
+        total += (mac * g * i_dim * h_dim / hw.r_x
+                  + mac * g * h_dim * h_dim / hw.r_h
                   + g * h_dim)
     h_last = arch.layer_dims()[-1][1]
     if arch.kind == "autoencoder":

@@ -53,16 +53,28 @@ def rnn_step_model(arch: RNNArch, *, batch: int = 1, n_samples: int = 1,
     Weight bytes are charged **once per launch**, not per timestep — the
     sequence-fused kernel's VMEM residency (docs/kernels.md) is precisely
     this term's reduction; activations stream per step.
+
+    ``arch.weight_bits`` prices the quantized serving path: ``wx``/``wh``
+    store at ``weight_bits/8`` bytes per element plus the fp32 per-channel
+    scale rows (2 × G × H × 4, charged only below 16 bits — bf16 carries no
+    scales), while the bias and activations stay at ``dtype_bytes``.  At
+    the default 16 bits this reduces exactly to the pre-quantization
+    formula, so calibrated DSE baselines are unchanged.
     """
     g = float(arch.gates)
     rows = max(batch * n_samples / max(data, 1), 1.0)
+    _ = arch.dsp_per_mac                  # validates weight_bits
+    w_byte = arch.weight_bits / 8.0
     flops_step = 0.0          # per row per timestep
     weight_bytes = 0.0        # resident per launch, per device
     act_bytes_step = 0.0      # streamed per row per timestep
     for (i_dim, h_dim) in arch.layer_dims():
         flops_step += 2.0 * g * (i_dim * h_dim + h_dim * h_dim)
         flops_step += 12.0 * h_dim                     # elementwise tail
-        weight_bytes += g * (i_dim + h_dim + 1) * h_dim * dtype_bytes
+        weight_bytes += g * (i_dim + h_dim) * h_dim * w_byte
+        weight_bytes += g * h_dim * dtype_bytes        # bias row
+        if arch.weight_bits < 16:
+            weight_bytes += 2 * g * h_dim * 4          # fp32 scales (wx, wh)
         act_bytes_step += (i_dim + h_dim) * dtype_bytes
     h_last = arch.layer_dims()[-1][1]
     head_mult = arch.timesteps if arch.kind == "autoencoder" else 1

@@ -11,6 +11,9 @@ the jit'd wrappers; ref.py the pure-jnp oracles the tests assert against
                   across all T timesteps (the paper's Fig. 5 wave pipelining)
   decode_attn     flash-decode attention over the KV cache (serving hot path)
   ssd_chunk       fused Mamba2/SSD chunk scan (VMEM-resident chunk state)
+  quantize        per-channel int8/int4 weight quantization for the serving
+                  path — packed codes + scales dequantized in-register by
+                  the sequence kernels (the ``precision`` knob)
 
 compat.py shims Pallas/sharding API names across jax releases; ops.py exposes
 the ``LSTM_BACKENDS`` dispatch consumed by ``repro.core.rnn.run_stack``.

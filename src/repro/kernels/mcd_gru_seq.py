@@ -37,13 +37,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import compat
+from repro.kernels import compat, quantize
 from repro.kernels.mcd_gru import _gru_update
 
 
-def _kernel(rows_ref, keys_ref, lens_ref, x_ref, h0_ref, wx_ref, wh_ref,
-            b_ref, ys_ref, ht_ref, h_scr, *,
-            p_drop: float, in_dim: int, hidden: int, varlen: bool):
+def _kernel(*refs, p_drop: float, in_dim: int, hidden: int, varlen: bool,
+            weight_bits: int | None):
+    # Quantized runs insert two [3, H] fp32 scale operands after the weights;
+    # everything else (ref order, outputs, scratch) is unchanged.
+    if weight_bits is None:
+        (rows_ref, keys_ref, lens_ref, x_ref, h0_ref, wx_ref, wh_ref,
+         b_ref, ys_ref, ht_ref, h_scr) = refs
+    else:
+        (rows_ref, keys_ref, lens_ref, x_ref, h0_ref, wx_ref, wh_ref,
+         sx_ref, sh_ref, b_ref, ys_ref, ht_ref, h_scr) = refs
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -55,9 +62,19 @@ def _kernel(rows_ref, keys_ref, lens_ref, x_ref, h0_ref, wx_ref, wh_ref,
     rows = rows_ref[...][:, 0]
     x = x_ref[:, 0, :]              # [bb, I] — this step's input slice
     h = h_scr[...]                  # [bb, H] — carried entirely in VMEM
+    if weight_bits is None:
+        wxv, whv = wx_ref[...], wh_ref[...]
+    else:
+        # In-register dequant of the int-resident weights: the canonical
+        # q·scale expression (repro.kernels.quantize), cast to the activation
+        # dtype — exactly the values fake_quant hands the other backends.
+        wxv = quantize.kernel_weight(wx_ref[...], sx_ref[...], weight_bits,
+                                     hidden=hidden, act_dtype=x.dtype)
+        whv = quantize.kernel_weight(wh_ref[...], sh_ref[...], weight_bits,
+                                     hidden=hidden, act_dtype=x.dtype)
     # Gate body shared with the step kernel; the keys are t-independent so
     # recomputing the masks here every step *is* tying them across time.
-    h_new = _gru_update(x, h, h, rows, keys_ref, wx_ref, wh_ref, b_ref,
+    h_new = _gru_update(x, h, h, rows, keys_ref, wxv, whv, b_ref,
                         p_drop=p_drop, in_dim=in_dim,
                         hidden=hidden).astype(h_scr.dtype)
     if varlen:
@@ -70,11 +87,15 @@ def _kernel(rows_ref, keys_ref, lens_ref, x_ref, h0_ref, wx_ref, wh_ref,
     ht_ref[...] = h_new.astype(ht_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("p_drop", "block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("p_drop", "block_b", "interpret",
+                                             "weight_bits"))
 def mcd_gru_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
                 rows: jax.Array, keys: jax.Array, p_drop: float, *,
                 h0: jax.Array | None = None,
                 lengths: jax.Array | None = None,
+                weight_bits: int | None = None,
+                wx_scale: jax.Array | None = None,
+                wh_scale: jax.Array | None = None,
                 block_b: int = 128, interpret: bool = True):
     """Sequence-fused Bayesian GRU layer, optionally resuming carried state.
 
@@ -85,12 +106,19 @@ def mcd_gru_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
     sequence); it round-trips in the activation dtype, the GRU's only carry.
     lengths [B] (int) freezes a row's state at its own chunk length so ragged
     chunks can pad to a common T in one launch.
+    weight_bits 8/4 switches to quantized weights: ``wx``/``wh`` carry int8
+    codes (int4: nibble-packed uint8, last axis ``ceil(H/2)``) and
+    ``wx_scale``/``wh_scale`` the [3, H] fp32 per-output-channel scales; the
+    kernel dequantizes in-register, so the VMEM-resident weight bytes drop
+    ~2×/4× vs bf16 while the gate math stays fp32-accumulated.
     Returns (ys [B, T, H], h_T [B, H]); with ``lengths``, h_T is each row's
     state at ``t = lengths[row]`` and ``ys[:, t >= lengths[row]]`` repeats
     the frozen h.
     """
     B, T, I = x_seq.shape
     H = wh.shape[0]
+    if weight_bits is not None and (wx_scale is None or wh_scale is None):
+        raise ValueError("weight_bits set but wx_scale/wh_scale missing")
     bb = min(block_b, B)
     varlen = lengths is not None
     h0 = jnp.zeros((B, H), x_seq.dtype) if h0 is None else h0.astype(x_seq.dtype)
@@ -104,9 +132,19 @@ def mcd_gru_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
     Bp = B + pad
     lens2 = lens.reshape(Bp, 1)
     grid = (Bp // bb, T)
+    Wl = wx.shape[-1]    # H, or ceil(H/2) when int4 nibble-packed
+    w_specs = [
+        pl.BlockSpec((I, 3, Wl), lambda i, t: (0, 0, 0)),      # wx — resident
+        pl.BlockSpec((H, 3, Wl), lambda i, t: (0, 0, 0)),      # wh — resident
+    ]
+    w_ops = (wx, wh)
+    if weight_bits is not None:
+        w_specs += [pl.BlockSpec((3, H), lambda i, t: (0, 0)),  # wx scales
+                    pl.BlockSpec((3, H), lambda i, t: (0, 0))]  # wh scales
+        w_ops += (wx_scale, wh_scale)
     ys, hT = pl.pallas_call(
         functools.partial(_kernel, p_drop=p_drop, in_dim=I, hidden=H,
-                          varlen=varlen),
+                          varlen=varlen, weight_bits=weight_bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, 1), lambda i, t: (i, 0)),        # rows
@@ -114,8 +152,7 @@ def mcd_gru_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
             pl.BlockSpec((bb, 1), lambda i, t: (i, 0)),        # lengths
             pl.BlockSpec((bb, 1, I), lambda i, t: (i, t, 0)),  # x_t slice
             pl.BlockSpec((bb, H), lambda i, t: (i, 0)),        # h0
-            pl.BlockSpec((I, 3, H), lambda i, t: (0, 0, 0)),   # wx — resident
-            pl.BlockSpec((H, 3, H), lambda i, t: (0, 0, 0)),   # wh — resident
+            *w_specs,
             pl.BlockSpec((3, H), lambda i, t: (0, 0)),         # bias
         ],
         out_specs=[
@@ -131,7 +168,7 @@ def mcd_gru_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
         ],
         compiler_params=compat.compiler_params("parallel", "arbitrary"),
         interpret=interpret,
-    )(rows2, keys, lens2, x_seq, h0, wx, wh, b)
+    )(rows2, keys, lens2, x_seq, h0, *w_ops, b)
     if pad:
         ys, hT = ys[:B], hT[:B]
     return ys, hT

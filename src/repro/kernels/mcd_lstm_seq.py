@@ -49,14 +49,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import compat
+from repro.kernels import compat, quantize
 from repro.kernels.mcd_lstm import _gate_mask
 
 
-def _kernel(rows_ref, keys_ref, lens_ref, x_ref, h0_ref, c0_ref,
-            wx_ref, wh_ref, b_ref,
-            ys_ref, ht_ref, ct_ref, h_scr, c_scr, *,
-            p_drop: float, in_dim: int, hidden: int, varlen: bool):
+def _kernel(*refs,
+            p_drop: float, in_dim: int, hidden: int, varlen: bool,
+            weight_bits: int | None):
+    # Quantized runs insert two [4, H] fp32 scale operands after the weights;
+    # everything else (ref order, outputs, scratch) is unchanged.
+    if weight_bits is None:
+        (rows_ref, keys_ref, lens_ref, x_ref, h0_ref, c0_ref,
+         wx_ref, wh_ref, b_ref,
+         ys_ref, ht_ref, ct_ref, h_scr, c_scr) = refs
+    else:
+        (rows_ref, keys_ref, lens_ref, x_ref, h0_ref, c0_ref,
+         wx_ref, wh_ref, sx_ref, sh_ref, b_ref,
+         ys_ref, ht_ref, ct_ref, h_scr, c_scr) = refs
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -69,6 +78,16 @@ def _kernel(rows_ref, keys_ref, lens_ref, x_ref, h0_ref, c0_ref,
     rows = rows_ref[...][:, 0]
     x = x_ref[:, 0, :]              # [bb, I] — this step's input slice
     h = h_scr[...]                  # [bb, H] — carried entirely in VMEM
+    if weight_bits is None:
+        wxv, whv = wx_ref[...], wh_ref[...]
+    else:
+        # In-register dequant of the int-resident weights: the canonical
+        # q·scale expression (repro.kernels.quantize), cast to the activation
+        # dtype — exactly the values fake_quant hands the other backends.
+        wxv = quantize.kernel_weight(wx_ref[...], sx_ref[...], weight_bits,
+                                     hidden=hidden, act_dtype=x.dtype)
+        whv = quantize.kernel_weight(wh_ref[...], sh_ref[...], weight_bits,
+                                     hidden=hidden, act_dtype=x.dtype)
     gates = []
     scale = jnp.asarray(1.0 / (1.0 - p_drop), x.dtype) if p_drop > 0 else None
     for g in range(4):
@@ -82,8 +101,8 @@ def _kernel(rows_ref, keys_ref, lens_ref, x_ref, h0_ref, c0_ref,
             mh = _gate_mask(kh, rows, 0, h.shape, hidden, p_drop)
             xg = jnp.where(mx, x * scale, jnp.zeros_like(x))
             hg = jnp.where(mh, h * scale, jnp.zeros_like(h))
-        acc = jnp.dot(xg, wx_ref[:, g, :], preferred_element_type=jnp.float32)
-        acc += jnp.dot(hg, wh_ref[:, g, :], preferred_element_type=jnp.float32)
+        acc = jnp.dot(xg, wxv[:, g, :], preferred_element_type=jnp.float32)
+        acc += jnp.dot(hg, whv[:, g, :], preferred_element_type=jnp.float32)
         gates.append(acc + b_ref[g, :].astype(jnp.float32))
     i = jax.nn.sigmoid(gates[0])
     f = jax.nn.sigmoid(gates[1])
@@ -104,11 +123,15 @@ def _kernel(rows_ref, keys_ref, lens_ref, x_ref, h0_ref, c0_ref,
     ct_ref[...] = c_new.astype(ct_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("p_drop", "block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("p_drop", "block_b", "interpret",
+                                             "weight_bits"))
 def mcd_lstm_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
                  rows: jax.Array, keys: jax.Array, p_drop: float, *,
                  h0: jax.Array | None = None, c0: jax.Array | None = None,
                  lengths: jax.Array | None = None,
+                 weight_bits: int | None = None,
+                 wx_scale: jax.Array | None = None,
+                 wh_scale: jax.Array | None = None,
                  block_b: int = 128, interpret: bool = True):
     """Sequence-fused Bayesian LSTM layer, optionally resuming carried state.
 
@@ -119,12 +142,19 @@ def mcd_lstm_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
     fresh sequence); c0 is accumulated in fp32 regardless of input dtype.
     lengths [B] (int) freezes a row's state at its own chunk length so ragged
     chunks can pad to a common T in one launch.
+    weight_bits 8/4 switches to quantized weights: ``wx``/``wh`` carry int8
+    codes (int4: nibble-packed uint8, last axis ``ceil(H/2)``) and
+    ``wx_scale``/``wh_scale`` the [4, H] fp32 per-output-channel scales; the
+    kernel dequantizes in-register, so the VMEM-resident weight bytes drop
+    ~2×/4× vs bf16 while the gate math stays fp32-accumulated.
     Returns (ys [B, T, H], h_T [B, H], c_T [B, H] fp32); with ``lengths``,
     (h_T, c_T) is each row's state at ``t = lengths[row]`` and
     ``ys[:, t >= lengths[row]]`` repeats the frozen h.
     """
     B, T, I = x_seq.shape
     H = wh.shape[0]
+    if weight_bits is not None and (wx_scale is None or wh_scale is None):
+        raise ValueError("weight_bits set but wx_scale/wh_scale missing")
     bb = min(block_b, B)
     varlen = lengths is not None
     h0 = jnp.zeros((B, H), x_seq.dtype) if h0 is None else h0.astype(x_seq.dtype)
@@ -140,9 +170,19 @@ def mcd_lstm_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
     Bp = B + pad
     lens2 = lens.reshape(Bp, 1)
     grid = (Bp // bb, T)
+    Wl = wx.shape[-1]    # H, or ceil(H/2) when int4 nibble-packed
+    w_specs = [
+        pl.BlockSpec((I, 4, Wl), lambda i, t: (0, 0, 0)),      # wx — resident
+        pl.BlockSpec((H, 4, Wl), lambda i, t: (0, 0, 0)),      # wh — resident
+    ]
+    w_ops = (wx, wh)
+    if weight_bits is not None:
+        w_specs += [pl.BlockSpec((4, H), lambda i, t: (0, 0)),  # wx scales
+                    pl.BlockSpec((4, H), lambda i, t: (0, 0))]  # wh scales
+        w_ops += (wx_scale, wh_scale)
     ys, hT, cT = pl.pallas_call(
         functools.partial(_kernel, p_drop=p_drop, in_dim=I, hidden=H,
-                          varlen=varlen),
+                          varlen=varlen, weight_bits=weight_bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, 1), lambda i, t: (i, 0)),        # rows
@@ -151,8 +191,7 @@ def mcd_lstm_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
             pl.BlockSpec((bb, 1, I), lambda i, t: (i, t, 0)),  # x_t slice
             pl.BlockSpec((bb, H), lambda i, t: (i, 0)),        # h0
             pl.BlockSpec((bb, H), lambda i, t: (i, 0)),        # c0 (fp32)
-            pl.BlockSpec((I, 4, H), lambda i, t: (0, 0, 0)),   # wx — resident
-            pl.BlockSpec((H, 4, H), lambda i, t: (0, 0, 0)),   # wh — resident
+            *w_specs,
             pl.BlockSpec((4, H), lambda i, t: (0, 0)),         # bias
         ],
         out_specs=[
@@ -171,7 +210,7 @@ def mcd_lstm_seq(x_seq: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array,
         ],
         compiler_params=compat.compiler_params("parallel", "arbitrary"),
         interpret=interpret,
-    )(rows2, keys, lens2, x_seq, h0, c0, wx, wh, b)
+    )(rows2, keys, lens2, x_seq, h0, c0, *w_ops, b)
     if pad:
         ys, hT, cT = ys[:B], hT[:B], cT[:B]
     return ys, hT, cT

@@ -34,6 +34,21 @@ def mcd_matmul(x, w, rows, key, p_drop: float):
     return jnp.dot(xm, w, preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def dequant_weights(wx, wh, b, precision, *, act_dtype):
+    """Oracle for the kernels' quantized-weight path (gate-stacked layout).
+
+    Fake-quantizes ``wx [I, G, H]`` / ``wh [H, G, H]`` along the contraction
+    axis with the canonical per-output-channel scheme — exactly the values
+    ``mcd_lstm_seq``/``mcd_gru_seq`` dequantize in-register from their
+    VMEM-resident int codes.  The bias is never quantized (it enters the
+    gate sums in fp32 on every path).
+    """
+    from repro.kernels import quantize
+    return (quantize.fake_quant(wx, precision, axis=0, act_dtype=act_dtype),
+            quantize.fake_quant(wh, precision, axis=0, act_dtype=act_dtype),
+            b)
+
+
 def decode_attention(q, k_cache, v_cache, pos):
     """q: [B, H, hd]; caches: [B, S, KV, hd]; softmax over positions ≤ pos."""
     B, H, hd = q.shape

@@ -204,7 +204,7 @@ def run_stack_sharded(params, x_seq, masks, p, *, mesh,
                       rows=None, seed=0, layer_offset: int = 0,
                       interpret: bool | None = None, initial_state=None,
                       lengths=None, return_all_states: bool = False,
-                      cell: str = "lstm"):
+                      cell: str = "lstm", precision: str | None = None):
     """Run the stack sharded over ``mesh`` — same contract as ``run_stack``.
 
     Callers use ``rnn.run_stack(..., mesh=..., policy=...)``; this is the
@@ -212,13 +212,22 @@ def run_stack_sharded(params, x_seq, masks, p, *, mesh,
     family (synthesizing full-T lengths when the caller passes none), so
     its output is bit-identical to the unsharded lengths-enabled run at
     any device count — including 1, which makes ``mesh=`` safe to leave on
-    everywhere.
+    everywhere.  ``precision`` follows ``run_stack``'s serving-precision
+    contract: the input is cast to the activation dtype *before* staging,
+    so the gspmd strategy's in-graph mask draws sample in the same dtype
+    the kernels materialize the 1/(1-p) scale in, and sharded stays
+    bit-identical to unsharded per precision.
     """
     policy = policy or DEFAULT_POLICY
     if rows is None:
         raise ValueError("mesh= needs the mask-stream `rows` (the global "
                          "coordinates are what keep sharded masks "
                          "deterministic per logical row)")
+    if precision is not None:
+        from repro.kernels import quantize
+        quantize.check_precision(precision)
+        x_seq = x_seq.astype(quantize.activation_dtype(precision,
+                                                       x_seq.dtype))
     hiddens = [lp.wh.shape[-1] for lp in params]
     strategy = resolve_strategy(mesh, policy, backend, hiddens)
     if lengths is None:
@@ -228,7 +237,8 @@ def run_stack_sharded(params, x_seq, masks, p, *, mesh,
     kw = dict(p=p, return_sequence=return_sequence, rows=rows, seed=seed,
               layer_offset=layer_offset, interpret=interpret,
               initial_state=initial_state, lengths=lengths,
-              return_all_states=return_all_states, cell=cell)
+              return_all_states=return_all_states, cell=cell,
+              precision=precision)
     if strategy == "gspmd":
         return _run_gspmd(params, x_seq, masks, mesh=mesh, policy=policy,
                           **kw)
@@ -314,13 +324,16 @@ def _unpad(out, states, B, pad):
             [tuple(part[:B] for part in layer) for layer in states])
 
 
-def _finalize(out, states, x_dtype, *, backend, cell, return_all_states):
+def _finalize(out, states, x_dtype, *, backend, cell, return_all_states,
+              precision=None):
     """Match run_stack's non-all-states return contract after an
     always-all-states inner run."""
     if return_all_states:
         return out, states
     last = states[-1]
-    if cell == "gru" or backend == "reference":
+    if cell == "gru" or backend == "reference" or precision is not None:
+        # Under a serving precision every backend keeps c fp32 (run_stack's
+        # 32-bit cell-state policy) — no cast to the activation dtype.
         return out, last
     h_t, c_t = last
     return out, (h_t, c_t.astype(x_dtype))
@@ -328,7 +341,8 @@ def _finalize(out, states, x_dtype, *, backend, cell, return_all_states):
 
 @functools.lru_cache(maxsize=512)
 def _data_sharded_fn(mesh, dp, backend, cell, p, layer_offset, interpret,
-                     return_sequence, plan, presence, has_state, n_layers):
+                     return_sequence, plan, presence, has_state, n_layers,
+                     precision=None):
     """Build (once per static signature) the jitted shard_map callable.
 
     The cache is what makes the sharded path servable: a fresh closure per
@@ -343,7 +357,7 @@ def _data_sharded_fn(mesh, dp, backend, cell, p, layer_offset, interpret,
             return_sequence=return_sequence, backend=backend, rows=rows_,
             seed=seed_, layer_offset=layer_offset, interpret=interpret,
             initial_state=state_, lengths=lens_, return_all_states=True,
-            cell=cell)
+            cell=cell, precision=precision)
         return out, states
 
     po = StackShardingPolicy(data=dp or ())
@@ -362,7 +376,8 @@ def _data_sharded_fn(mesh, dp, backend, cell, p, layer_offset, interpret,
 
 def _run_data_sharded(params, x_seq, masks, *, mesh, policy, backend, p,
                       return_sequence, rows, seed, layer_offset, interpret,
-                      initial_state, lengths, return_all_states, cell):
+                      initial_state, lengths, return_all_states, cell,
+                      precision=None):
     """Batch rows over the data axes via shard_map; weights replicated.
 
     Every device runs the unmodified Pallas (or reference) stack on its
@@ -377,17 +392,18 @@ def _run_data_sharded(params, x_seq, masks, *, mesh, policy, backend, p,
 
     fn = _data_sharded_fn(mesh, dp, backend, cell, float(p),
                           int(layer_offset), interpret, bool(return_sequence),
-                          plan, presence, state_p is not None, len(params))
+                          plan, presence, state_p is not None, len(params),
+                          precision)
     out, states = fn(params, x_p, tuple(mask_p), rows_p,
                      jnp.asarray(seed, jnp.uint32), lens_p, state_p)
     out, states = _unpad(out, states, B, pad)
     return _finalize(out, states, x_seq.dtype, backend=backend, cell=cell,
-                     return_all_states=return_all_states)
+                     return_all_states=return_all_states, precision=precision)
 
 
 @functools.lru_cache(maxsize=512)
 def _gspmd_fn(mesh, policy, cell, p, layer_offset, return_sequence, plan,
-              presence, has_state, in_dims, hiddens):
+              presence, has_state, in_dims, hiddens, precision=None):
     """Build (once per static signature) the GSPMD-jitted reference scan.
 
     Same caching rationale as :func:`_data_sharded_fn`; param specs come
@@ -421,7 +437,8 @@ def _gspmd_fn(mesh, policy, cell, p, layer_offset, return_sequence, plan,
                              return_sequence=return_sequence,
                              backend="reference", rows=rows_,
                              initial_state=state_, lengths=lens_,
-                             return_all_states=True, cell=cell)
+                             return_all_states=True, cell=cell,
+                             precision=precision)
 
     to_ns = lambda tree: jax.tree.map(ns, tree,
                                       is_leaf=lambda s: isinstance(s, P))
@@ -434,7 +451,7 @@ def _gspmd_fn(mesh, policy, cell, p, layer_offset, return_sequence, plan,
 
 def _run_gspmd(params, x_seq, masks, *, mesh, policy, p, return_sequence,
                rows, seed, layer_offset, interpret, initial_state, lengths,
-               return_all_states, cell):
+               return_all_states, cell, precision=None):
     """Wide-H strategy: reference scan under GSPMD, H over ``model``.
 
     Weights shard on their H *output* dim only (never a contraction dim —
@@ -455,9 +472,9 @@ def _run_gspmd(params, x_seq, masks, *, mesh, policy, p, return_sequence,
                    bool(return_sequence), plan, presence,
                    state_p is not None,
                    tuple(lp.wx.shape[1] for lp in params),
-                   tuple(lp.wh.shape[-1] for lp in params))
+                   tuple(lp.wh.shape[-1] for lp in params), precision)
     out, states = jf(params, x_p, mask_p, rows_p,
                      jnp.asarray(seed, jnp.uint32), lens_p, state_p)
     out, states = _unpad(out, states, B, pad)
     return _finalize(out, states, x_seq.dtype, backend="reference", cell=cell,
-                     return_all_states=return_all_states)
+                     return_all_states=return_all_states, precision=precision)

@@ -72,6 +72,11 @@ def main():
     ap.add_argument("--samples", type=int, default=8, help="S MC chains")
     ap.add_argument("--backend", default="pallas_seq",
                     choices=("reference", "pallas_step", "pallas_seq"))
+    ap.add_argument("--precision", default=None,
+                    choices=("fp32", "bf16", "int8", "int4"),
+                    help="serving precision: per-channel weight "
+                    "quantization + bf16 activations (default: native "
+                    "dtypes).  Snapshots record it; --resume must match.")
     ap.add_argument("--cell", default="lstm", choices=("lstm", "gru"),
                     help="recurrent unit (paper §III-A: GRU drops into the "
                     "same per-gate MCD design; h-only carried state)")
@@ -134,6 +139,7 @@ def main():
     # engine default tops at 512 — pointless compiles for this workload).
     ladder = pow2_ladder(args.chunk_len) if capacity == "auto" else None
     eng = StreamingEngine(params, cfg, backend=args.backend,
+                          precision=args.precision,
                           max_sessions=args.sessions,
                           chunk_capacity=capacity, ladder=ladder,
                           max_pending=args.max_pending,
@@ -179,6 +185,7 @@ def main():
           f"chains/session p={cfg.mcd.p} "
           f"B={mcd.placement_str(cfg.mcd.placement)} "
           f"cell={args.cell} backend={args.backend} "
+          f"precision={args.precision or 'native'} "
           f"capacity={args.capacity}")
 
     rng = np.random.default_rng(args.seed + 1)

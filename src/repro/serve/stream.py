@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import autoencoder as _ae, classifier as _clf, mcd as _mcd
+from repro.kernels import quantize as _quant
 from repro.core.uncertainty import (ClassificationSummary, RegressionSummary,
                                     classification_summary,
                                     regression_summary)
@@ -175,6 +176,13 @@ class StreamingEngine:
         on an 8-device mesh restores bit-identically onto 1 device (or
         any other mesh shape), because nothing device-shaped is ever part
         of the Bayesian draw or the carry.
+      precision: serving precision (``repro.kernels.quantize.PRECISIONS``;
+        None = native dtypes).  Quantized/cast in-graph from the fp32
+        master params every launch — ``params`` and training checkpoints
+        are untouched.  The carry dtypes follow the precision (h in the
+        activation dtype, LSTM c in fp32), so snapshots record it and
+        :meth:`restore` refuses a mismatch — resuming bf16 carries into
+        an fp32 engine would silently change the stream's numerics.
       interpret: forwarded to the Pallas backends (default: auto off-TPU).
     """
 
@@ -185,7 +193,7 @@ class StreamingEngine:
                  scheduler: AdaptiveTickScheduler | None = None,
                  metrics_window: int = 4096,
                  metrics_sink: MetricsSink | None = None,
-                 mesh=None, policy=None,
+                 mesh=None, policy=None, precision: str | None = None,
                  interpret: bool | None = None):
         if isinstance(cfg, _clf.ClassifierConfig):
             self.kind = "classifier"
@@ -196,6 +204,9 @@ class StreamingEngine:
         self.params = params
         self.cfg = cfg
         self.backend = backend
+        if precision is not None:
+            _quant.check_precision(precision)
+        self.precision = precision
         self.interpret = interpret
         self.chunk_capacity = chunk_capacity
         self.max_sessions = max_sessions
@@ -350,6 +361,11 @@ class StreamingEngine:
         """
         engine_meta = {"tick": self.tick, "kind": self.kind,
                        "backend": self.backend, "cell": self.cell,
+                       # Validated on restore: the carry dtypes (h in the
+                       # activation dtype, LSTM c fp32) follow the serving
+                       # precision, so the stream is only resumable under
+                       # the precision that produced it.
+                       "precision": self.precision,
                        # Observability only — deliberately NOT validated on
                        # restore: a snapshot is host-portable and restores
                        # onto any mesh shape (mask rows are global, carries
@@ -408,6 +424,18 @@ class StreamingEngine:
             raise ValueError(f"snapshot streamed through a {snap_cell} "
                              f"stack, engine runs {self.cell} — the carries "
                              "are not interchangeable")
+        # The carry dtypes follow the serving precision (h in the
+        # activation dtype, LSTM c fp32) — resuming across a precision
+        # change would mix dtypes mid-stream and silently change the
+        # numerics.  Pre-quantization snapshots carry no key: they were
+        # written by native-dtype engines, so they restore only into one
+        # (precision=None), which is exactly what get() defaults to.
+        snap_prec = engine_meta.get("precision")
+        if snap_prec != self.precision:
+            raise ValueError(
+                f"snapshot streamed at precision {snap_prec!r}, engine "
+                f"serves {self.precision!r} — the carries are not "
+                "interchangeable")
         # p/placement change the mask *values* even under the same (seed,
         # rows) — resuming across them would silently alter the draw.
         snap_mcd = engine_meta.get("mcd")
@@ -564,12 +592,14 @@ class StreamingEngine:
             logits, states = _clf.apply(
                 self.params, x_batch, rows, self.cfg, backend=self.backend,
                 initial_state=initial_state, lengths=lengths,
-                return_state=True, mesh=self.mesh, policy=self.policy)
+                return_state=True, mesh=self.mesh, policy=self.policy,
+                precision=self.precision)
             return (logits,), states
         mean, log_var, states = _ae.apply(
             self.params, x_batch, rows, self.cfg, backend=self.backend,
             initial_state=initial_state, lengths=lengths,
-            return_state=True, mesh=self.mesh, policy=self.policy)
+            return_state=True, mesh=self.mesh, policy=self.policy,
+            precision=self.precision)
         return (mean, log_var), states
 
     def _gather_states(self, sessions, dtype, n_pad: int = 0):
@@ -588,7 +618,15 @@ class StreamingEngine:
         """
         if all(sess.fresh for sess in sessions) and not self._fixed:
             return None
-        c_dtype = dtype if self.backend == "reference" else jnp.float32
+        if self.precision is not None:
+            # Serving precision fixes the carry dtypes on every backend:
+            # h in the activation dtype, LSTM c in fp32 (run_stack's 32-bit
+            # cell-state policy).  prewarm passes the host chunk dtype, so
+            # the mapping lives here, not in step().
+            dtype = _quant.activation_dtype(self.precision, dtype)
+            c_dtype = jnp.float32
+        else:
+            c_dtype = dtype if self.backend == "reference" else jnp.float32
         part_dtypes = (dtype,) if self.cell == "gru" else (dtype, c_dtype)
         hiddens = (self._encoder_hiddens())
         layers = []

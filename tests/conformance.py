@@ -1,0 +1,128 @@
+"""Cross-backend conformance harness (ISSUE 6 satellite).
+
+One place for the repo's strongest invariant: for the same ``(seed, rows)``
+mask coordinates the three stack backends — ``reference`` (jnp scan),
+``pallas_step`` (per-step kernel scan) and ``pallas_seq`` (sequence-fused
+kernel) — produce **bit-identical** outputs and carries, at every serving
+precision (``repro.kernels.quantize.PRECISIONS``), for ragged lengths and
+across arbitrary chunk boundaries with carried state.
+
+Two ground rules the helpers bake in (violating either breaks bit-identity
+for reasons that look like kernel bugs but aren't):
+
+* **Always pass explicit lengths.**  Bit-identity holds within the
+  lengths-pinned graph family: the per-row freeze-select pins XLA's fusion
+  choices.  Without lengths even the fp32 backends drift ~1e-7 apart.
+  ``run_all_backends`` fills in full-T lengths when the caller has none.
+* **Reference masks sample in the activation dtype.**  The kernels
+  materialize the ``1/(1-p)`` scale in the activation dtype; reference
+  masks sampled in fp32 would round differently under bf16 activations.
+
+The helpers are deliberately backend-shaped, not model-shaped: kernel-level
+tests (``test_mcd_lstm_seq`` / ``test_mcd_gru_seq``) reuse ``chunked_run``
+with their own step closures, stack-level tests use ``run_all_backends``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mcd, rnn
+from repro.kernels import quantize
+
+BACKENDS = ("reference", "pallas_step", "pallas_seq")
+#: None = native dtypes (the pre-quantization contract) + every knob value.
+PRECISIONS = (None,) + quantize.PRECISIONS
+
+
+def make_stack(cell: str = "lstm", hiddens=(16, 16), in_dim: int = 4,
+               placement: str = "YN", p: float = 0.125, seed: int = 5,
+               key: int = 0):
+    """A small MCD stack: (cfg, params) — the conformance workload."""
+    cfg = mcd.MCDConfig(p=p, placement=placement, seed=seed)
+    params = rnn.init_stack(jax.random.key(key), in_dim, hiddens, cell=cell)
+    return cfg, params
+
+
+def stack_masks(cfg, rows, in_dim, hiddens, backend, *, cell="lstm",
+                precision=None):
+    """Backend-appropriate masks, sampled in the activation dtype."""
+    if backend != "reference":
+        return rnn.stack_mask_plan(cfg, len(hiddens))
+    dt = quantize.activation_dtype(precision, jnp.float32)
+    return rnn.sample_stack_masks(cfg, rows, in_dim, hiddens, dtype=dt,
+                                  cell=cell)
+
+
+def run_all_backends(params, x, cfg, hiddens, *, cell="lstm", precision=None,
+                     lengths=None, initial_state=None):
+    """Run the same lengths-pinned pass on all three backends.
+
+    Returns ``{backend: (out, per-layer states)}``.  ``lengths`` defaults
+    to full-T — the pin is mandatory, not optional (module docstring).
+    """
+    B, T, in_dim = x.shape
+    rows = jnp.arange(B, dtype=jnp.uint32)
+    if lengths is None:
+        lengths = jnp.full((B,), T, jnp.int32)
+    results = {}
+    for backend in BACKENDS:
+        masks = stack_masks(cfg, rows, in_dim, hiddens, backend, cell=cell,
+                            precision=precision)
+        results[backend] = rnn.run_stack(
+            params, x, masks, cfg.p, backend=backend, rows=rows,
+            seed=cfg.seed, lengths=lengths, initial_state=initial_state,
+            return_all_states=True, cell=cell, precision=precision)
+    return results
+
+
+def assert_backends_identical(results, context: str = ""):
+    """Every Pallas backend == reference, bit for bit, outputs and carries."""
+    ref_out, ref_states = results["reference"]
+    for backend in BACKENDS[1:]:
+        out, states = results[backend]
+        np.testing.assert_array_equal(
+            np.asarray(ref_out, np.float32), np.asarray(out, np.float32),
+            err_msg=f"{context} outputs: reference vs {backend}")
+        assert len(ref_states) == len(states)
+        for li, (ref_layer, layer) in enumerate(zip(ref_states, states)):
+            assert len(ref_layer) == len(layer)
+            for pi, (a, b) in enumerate(zip(ref_layer, layer)):
+                assert a.dtype == b.dtype, (
+                    f"{context} layer {li} part {pi}: carry dtype "
+                    f"{a.dtype} (reference) vs {b.dtype} ({backend})")
+                np.testing.assert_array_equal(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    err_msg=f"{context} layer {li} part {pi}: "
+                            f"reference vs {backend}")
+
+
+def chunked_run(step_fn, x, splits, *, state=None):
+    """Feed ``x`` through ``step_fn`` chunk by chunk along time.
+
+    ``step_fn(x_chunk, carried_state) -> (out_chunk, new_state)`` — the
+    caller closes over whatever backend/kernel/engine it is testing and
+    supplies per-chunk lengths inside the closure.  Returns the
+    concatenated outputs and the final carried state; asserting those
+    against one full-length pass is the chunk-invariance check every
+    streaming test in the repo shares.
+    """
+    assert sum(splits) == x.shape[1], "splits must tile the sequence"
+    outs, pos = [], 0
+    for n in splits:
+        out, state = step_fn(x[:, pos:pos + n], state)
+        outs.append(out)
+        pos += n
+    return jnp.concatenate(outs, axis=1), state
+
+
+def assert_states_equal(a, b, context: str = ""):
+    """Per-layer carried states match bit for bit (any pytree arity)."""
+    assert len(a) == len(b)
+    for li, (la, lb) in enumerate(zip(a, b)):
+        for pi, (pa, pb) in enumerate(zip(la, lb)):
+            np.testing.assert_array_equal(
+                np.asarray(pa, np.float32), np.asarray(pb, np.float32),
+                err_msg=f"{context} layer {li} part {pi}")

@@ -6,6 +6,11 @@ lists}`).  Real hypothesis is declared in pyproject.toml and used when
 installed; in hermetic containers without it we register a deterministic
 stand-in that draws `max_examples` pseudo-random examples per test, so the
 property tests still execute instead of failing at collection.
+
+It also bounds in-process XLA compile state (see `_release_jax_executables`):
+without the per-module cache clear, the CPU backend segfaults inside
+`backend_compile` once a single pytest process has accumulated a few hundred
+compiled executables.
 """
 
 from __future__ import annotations
@@ -13,6 +18,26 @@ from __future__ import annotations
 import random
 import sys
 import types
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_jax_executables():
+    """Drop jit/pjit executable caches after each test module.
+
+    A full-suite run compiles >400 distinct programs in one process; on the
+    CPU backend this reliably segfaults deep in XLA's `backend_compile` once
+    enough LLVM-JIT'd executables are live (deterministic at the same test
+    across runs, while the same test passes in isolation).  Releasing the
+    cached executables at module boundaries keeps the live-executable count
+    bounded.  Within a module caches are untouched, so the bit-identity
+    tests that rely on hitting the same compiled graph are unaffected.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
 
 
 def _install_hypothesis_stub() -> None:

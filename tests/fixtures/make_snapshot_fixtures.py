@@ -1,0 +1,74 @@
+"""Regenerate the golden snapshot fixtures (committed, format-compat pins).
+
+Each fixture is a session snapshot written in a *historical* meta layout,
+built directly against ``repro.ckpt.checkpoint.save`` — deliberately NOT
+through ``persistence.snapshot_store``, which always writes the current
+layout.  ``tests/test_snapshot_compat.py`` pins that today's ``restore``
+still loads them:
+
+* ``pr3_lstm/`` — the durable-control-plane layout: session metas carry no
+  ``parts`` key (every carry was an LSTM ``(h, c)`` 2-tuple) and the engine
+  ``extra`` predates ``cell``/``precision``/``data_shards``/``mcd``.
+* ``pr4_gru/`` — the variable-arity layout: ``parts`` records the carry
+  tuple length (1 for GRU), ``extra`` has ``cell`` but still no
+  ``precision``.
+
+Arrays are seeded, so re-running reproduces the same bytes:
+
+    PYTHONPATH=src python tests/fixtures/make_snapshot_fixtures.py
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+#: Model geometry the fixtures were streamed under — test engines must match.
+HIDDEN, NUM_LAYERS, N_SAMPLES, SEED = 8, 2, 2, 3
+
+
+def _carry(rng, parts):
+    return [[rng.standard_normal((N_SAMPLES, HIDDEN)).astype(np.float32)
+             for _ in range(parts)]
+            for _ in range(NUM_LAYERS)]
+
+
+def _write(name, *, parts, extra, include_parts_key):
+    rng = np.random.default_rng(1234)
+    root = os.path.join(HERE, "snapshots", name)
+    if os.path.exists(root):
+        shutil.rmtree(root)
+    tree, sessions = {}, {}
+    for sid in ("ward_1", "ward_2"):
+        tree[sid] = {"rows": np.arange(N_SAMPLES, dtype=np.uint32)
+                     + (0 if sid == "ward_1" else N_SAMPLES),
+                     "state": _carry(rng, parts)}
+        smeta = {"steps": 7, "chunks": 2, "layers": NUM_LAYERS, "key": sid}
+        if include_parts_key:
+            smeta["parts"] = parts
+        sessions[sid] = smeta
+    meta = {"format": 1, "n_samples": N_SAMPLES, "seed": SEED,
+            "max_sessions": 4, "next_row": 2 * N_SAMPLES,
+            "sessions": sessions, "queue": [], "extra": extra}
+    ckpt.save(root, 0, tree, meta=meta)
+    return root
+
+
+def main():
+    _write("pr3_lstm", parts=2, include_parts_key=False,
+           extra={"tick": 2, "kind": "classifier", "backend": "pallas_seq"})
+    _write("pr4_gru", parts=1, include_parts_key=True,
+           extra={"tick": 2, "kind": "classifier", "backend": "pallas_seq",
+                  "cell": "gru",
+                  "mcd": {"p": 0.125, "placement": "YN"}})
+    print("fixtures written under", os.path.join(HERE, "snapshots"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Cross-backend × precision conformance suite (ISSUE 6 acceptance).
+
+The parametrized fixture the tentpole is pinned by: reference == pallas_step
+== pallas_seq **bit-identically** over (cell × precision × lengths ×
+carried-state).  Quantized serving is only trustworthy because the jnp
+fake-quant oracle and the in-kernel dequant provably agree — these tests are
+that proof, re-run on every change.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import conformance
+from repro.core import rnn
+from repro.kernels import quantize
+
+B, T, IN_DIM = 6, 11, 5
+HIDDENS = (16, 16)
+
+
+def _x(key=1):
+    return jax.random.normal(jax.random.key(key), (B, T, IN_DIM),
+                             jnp.float32)
+
+
+@pytest.mark.parametrize("cell", ("lstm", "gru"))
+@pytest.mark.parametrize("precision", conformance.PRECISIONS)
+class TestCrossBackend:
+    """One class = one (cell, precision) cell of the conformance matrix."""
+
+    def test_full_length(self, cell, precision):
+        cfg, params = conformance.make_stack(cell, HIDDENS, IN_DIM,
+                                             placement="YY")
+        results = conformance.run_all_backends(params, _x(), cfg, HIDDENS,
+                                               cell=cell, precision=precision)
+        conformance.assert_backends_identical(
+            results, f"{cell}/{precision}/full")
+
+    def test_ragged_lengths(self, cell, precision):
+        cfg, params = conformance.make_stack(cell, HIDDENS, IN_DIM,
+                                             placement="YY")
+        lens = jnp.array([11, 3, 7, 11, 1, 5], jnp.int32)
+        results = conformance.run_all_backends(params, _x(), cfg, HIDDENS,
+                                               cell=cell, precision=precision,
+                                               lengths=lens)
+        conformance.assert_backends_identical(
+            results, f"{cell}/{precision}/ragged")
+
+    def test_carried_state(self, cell, precision):
+        """A reference warmup chunk's carry resumes identically everywhere —
+        the snapshot/restore shape of the invariant (a carry produced by one
+        backend must be consumable by any other)."""
+        cfg, params = conformance.make_stack(cell, HIDDENS, IN_DIM,
+                                             placement="YY")
+        x = _x()
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        warm_masks = conformance.stack_masks(cfg, rows, IN_DIM, HIDDENS,
+                                             "reference", cell=cell,
+                                             precision=precision)
+        _, carry = rnn.run_stack(params, x[:, :4], warm_masks, cfg.p,
+                                 rows=rows, seed=cfg.seed,
+                                 lengths=jnp.full((B,), 4, jnp.int32),
+                                 return_all_states=True, cell=cell,
+                                 precision=precision)
+        results = conformance.run_all_backends(params, x[:, 4:], cfg,
+                                               HIDDENS, cell=cell,
+                                               precision=precision,
+                                               initial_state=carry)
+        conformance.assert_backends_identical(
+            results, f"{cell}/{precision}/carried")
+
+    def test_chunked_equals_unchunked(self, cell, precision):
+        """pallas_seq chunk boundaries are invisible at every precision."""
+        cfg, params = conformance.make_stack(cell, HIDDENS, IN_DIM,
+                                             placement="YY")
+        x = _x()
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        plan = rnn.stack_mask_plan(cfg, len(HIDDENS))
+
+        def step(x_chunk, state):
+            return rnn.run_stack(
+                params, x_chunk, plan, cfg.p, backend="pallas_seq",
+                rows=rows, seed=cfg.seed, initial_state=state,
+                lengths=jnp.full((B,), x_chunk.shape[1], jnp.int32),
+                return_all_states=True, cell=cell, precision=precision)
+
+        full, st_full = step(x, None)
+        outs, st = conformance.chunked_run(step, x, [4, 1, 6])
+        np.testing.assert_array_equal(np.asarray(outs, np.float32),
+                                      np.asarray(full, np.float32))
+        conformance.assert_states_equal(st, st_full,
+                                        f"{cell}/{precision}/chunked")
+
+
+class TestPrecisionContracts:
+    """Dtype / validation behavior of the precision knob itself."""
+
+    def test_carry_dtypes(self):
+        cfg, params = conformance.make_stack("lstm", HIDDENS, IN_DIM)
+        for precision, h_dtype in (("bf16", jnp.bfloat16),
+                                   ("int8", jnp.bfloat16),
+                                   ("fp32", jnp.float32)):
+            results = conformance.run_all_backends(
+                params, _x(), cfg, HIDDENS, precision=precision)
+            for backend, (out, states) in results.items():
+                assert out.dtype == h_dtype, (backend, precision)
+                for h, c in states:
+                    assert h.dtype == h_dtype, (backend, precision)
+                    # 32-bit cell-state policy holds on *every* backend
+                    assert c.dtype == jnp.float32, (backend, precision)
+
+    def test_unknown_precision_rejected(self):
+        cfg, params = conformance.make_stack("lstm", HIDDENS, IN_DIM)
+        x = _x()
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        masks = rnn.sample_stack_masks(cfg, rows, IN_DIM, HIDDENS)
+        with pytest.raises(ValueError, match="precision"):
+            rnn.run_stack(params, x, masks, cfg.p, precision="int2")
+
+    def test_quantized_weights_actually_quantize(self):
+        """int4 must change the numbers (a no-op fake-quant would pass every
+        equality test above) while staying within the per-channel bound."""
+        cfg, params = conformance.make_stack("lstm", HIDDENS, IN_DIM)
+        x = _x()
+        r_fp, _ = conformance.run_all_backends(
+            params, x, cfg, HIDDENS, precision="fp32")["reference"]
+        r_i4, _ = conformance.run_all_backends(
+            params, x, cfg, HIDDENS, precision="int4")["reference"]
+        assert not np.array_equal(np.asarray(r_fp, np.float32),
+                                  np.asarray(r_i4, np.float32))
+        # and the weights the oracle would serve match quantize.fake_quant
+        lp = params[0]
+        fq = quantize.fake_quant(lp.wx, "int4", axis=1,
+                                 act_dtype=jnp.float32)
+        q, s = quantize.quantize(lp.wx, 4, axis=1)
+        np.testing.assert_array_equal(
+            np.asarray(fq), np.asarray(quantize.dequantize(q, s, axis=1)))

@@ -191,6 +191,56 @@ class TestGruRow:
             search.optimize(big, "Opt-Latency", hw_model=None)
 
 
+class TestWeightBits:
+    """The quantized serving path's bit-width in the resource models."""
+
+    def test_default_16_bit_keeps_calibration(self):
+        """weight_bits=16 is the paper's fixed-point width: DSP_PER_MAC is
+        1.0 there, so the §V-C-calibrated numbers are unchanged."""
+        assert CLF.weight_bits == 16
+        assert dataclasses.replace(CLF, weight_bits=16).dsp_per_mac == 1.0
+        assert fm.dsp_usage(CLF, fm.HwConfig(12, 1, 1)) == pytest.approx(
+            fm.dsp_usage(dataclasses.replace(CLF, weight_bits=16),
+                         fm.HwConfig(12, 1, 1)))
+
+    def test_dsp_monotone_in_bits(self):
+        hw = fm.HwConfig(4, 4, 4)
+        costs = [fm.dsp_usage(dataclasses.replace(CLF, weight_bits=b), hw)
+                 for b in (32, 16, 8, 4)]
+        assert costs == sorted(costs, reverse=True)
+
+    def test_unknown_width_rejected(self):
+        with pytest.raises(ValueError, match="weight_bits"):
+            _ = dataclasses.replace(CLF, weight_bits=12).dsp_per_mac
+
+    def test_narrow_macs_scale_the_feasible_hidden_width(self):
+        """The co-design payoff: H=48 at 16-bit overflows the ZC706 DSP
+        budget at every reuse factor; int8/int4 MACs fit it — narrower
+        MACs buy resident width, the same lever quantize.py pulls in
+        VMEM.  (The head term never scales — serving keeps the fp32 head
+        — so width eventually saturates regardless of bits: H=64 is out
+        at every precision.)"""
+        wide = fm.RNNArch(hidden=48, num_layers=3, placement="YNY",
+                          kind="classifier")
+        assert fm.best_reuse_factors(wide) is None
+        for bits in (8, 4):
+            hw = fm.best_reuse_factors(
+                dataclasses.replace(wide, weight_bits=bits))
+            assert hw is not None and fm.fits(
+                dataclasses.replace(wide, weight_bits=bits), hw)
+        assert fm.best_reuse_factors(fm.RNNArch(
+            hidden=64, num_layers=3, placement="YNY", kind="classifier",
+            weight_bits=4)) is None
+
+    def test_roofline_bytes_shrink_with_bits(self):
+        full = tpu_model.rnn_step_model(CLF)["bytes"]
+        w8 = tpu_model.rnn_step_model(
+            dataclasses.replace(CLF, weight_bits=8))["bytes"]
+        w4 = tpu_model.rnn_step_model(
+            dataclasses.replace(CLF, weight_bits=4))["bytes"]
+        assert full > w8 > w4
+
+
 class TestTpuModel:
     def test_memory_decreases_with_chips(self):
         cfg = get_config("llama3-8b")

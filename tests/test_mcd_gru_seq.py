@@ -15,6 +15,8 @@ import pytest
 from repro.core import autoencoder as ae, cells, classifier as clf, mcd, rnn
 from repro.kernels import mcd_gru, mcd_gru_seq, ops, ref
 
+import conformance
+
 SEED, LAYER = 11, 2
 BACKENDS = ("reference", "pallas_step", "pallas_seq")
 
@@ -122,18 +124,16 @@ class TestGruCarriedState:
         x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
         keys = mcd_gru.gate_keys(SEED, LAYER)
         lens = lambda n: jnp.full((b,), n, jnp.int32)
-        full, hF = mcd_gru_seq.mcd_gru_seq(x_seq, wx, wh, bias, rows, keys,
-                                           0.125, lengths=lens(t))
-        st, outs, pos = None, [], 0
-        for n in splits:
-            ys, hT = mcd_gru_seq.mcd_gru_seq(
-                x_seq[:, pos:pos + n], wx, wh, bias, rows, keys, 0.125,
-                h0=st, lengths=lens(n))
-            st, pos = hT, pos + n
-            outs.append(ys)
-        np.testing.assert_array_equal(
-            np.asarray(jnp.concatenate(outs, 1)), np.asarray(full))
-        np.testing.assert_array_equal(np.asarray(st), np.asarray(hF))
+
+        def step(xc, h0):
+            return mcd_gru_seq.mcd_gru_seq(
+                xc, wx, wh, bias, rows, keys, 0.125, h0=h0,
+                lengths=lens(xc.shape[1]))
+
+        full, hF = step(x_seq, None)
+        outs, hT = conformance.chunked_run(step, x_seq, splits)
+        np.testing.assert_array_equal(np.asarray(outs), np.asarray(full))
+        np.testing.assert_array_equal(np.asarray(hT), np.asarray(hF))
 
     def test_lengths_freeze_state_per_row(self):
         """Ragged rows keep h at their own length; live prefixes are
@@ -191,18 +191,18 @@ class TestGruBf16:
         lens = lambda n: jnp.full((b,), n, jnp.int32)
         full, hF = mcd_gru_seq.mcd_gru_seq(xb, wxb, whb, bb_, rows, keys,
                                            0.125, lengths=lens(t))
-        st, outs, pos = None, [], 0
-        for n in (3, 1, 4):
+
+        def step(xc, h0):
             ys, hT = mcd_gru_seq.mcd_gru_seq(
-                xb[:, pos:pos + n], wxb, whb, bb_, rows, keys, 0.125,
-                h0=st, lengths=lens(n))
+                xc, wxb, whb, bb_, rows, keys, 0.125, h0=h0,
+                lengths=lens(xc.shape[1]))
             assert hT.dtype == jnp.bfloat16
-            st, pos = hT, pos + n
-            outs.append(ys)
-        np.testing.assert_array_equal(
-            np.asarray(jnp.concatenate(outs, 1), jnp.float32),
-            np.asarray(full, jnp.float32))
-        np.testing.assert_array_equal(np.asarray(st, jnp.float32),
+            return ys, hT
+
+        outs, hT = conformance.chunked_run(step, xb, [3, 1, 4])
+        np.testing.assert_array_equal(np.asarray(outs, jnp.float32),
+                                      np.asarray(full, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(hT, jnp.float32),
                                       np.asarray(hF, jnp.float32))
 
 

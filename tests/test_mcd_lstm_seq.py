@@ -13,6 +13,8 @@ import pytest
 from repro.core import autoencoder as ae, cells, classifier as clf, mcd, rnn
 from repro.kernels import mcd_lstm, mcd_lstm_seq, ops, ref
 
+import conformance
+
 SEED, LAYER = 11, 2
 
 
@@ -137,19 +139,19 @@ class TestCarriedState:
         x_seq, wx, wh, bias, rows = _layer(b, t, i, h)
         keys = mcd_lstm.gate_keys(SEED, LAYER)
         lens = lambda n: jnp.full((b,), n, jnp.int32)
-        full, hF, cF = mcd_lstm_seq.mcd_lstm_seq(x_seq, wx, wh, bias, rows,
-                                                 keys, 0.125, lengths=lens(t))
-        st, outs, pos = (None, None), [], 0
-        for n in splits:
+
+        def step(xc, st):
+            h0, c0 = st if st is not None else (None, None)
             ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(
-                x_seq[:, pos:pos + n], wx, wh, bias, rows, keys, 0.125,
-                h0=st[0], c0=st[1], lengths=lens(n))
-            st, pos = (hT, cT), pos + n
-            outs.append(ys)
-        np.testing.assert_array_equal(
-            np.asarray(jnp.concatenate(outs, 1)), np.asarray(full))
-        np.testing.assert_array_equal(np.asarray(st[0]), np.asarray(hF))
-        np.testing.assert_array_equal(np.asarray(st[1]), np.asarray(cF))
+                xc, wx, wh, bias, rows, keys, 0.125, h0=h0, c0=c0,
+                lengths=lens(xc.shape[1]))
+            return ys, (hT, cT)
+
+        full, (hF, cF) = step(x_seq, None)
+        outs, (hT, cT) = conformance.chunked_run(step, x_seq, splits)
+        np.testing.assert_array_equal(np.asarray(outs), np.asarray(full))
+        np.testing.assert_array_equal(np.asarray(hT), np.asarray(hF))
+        np.testing.assert_array_equal(np.asarray(cT), np.asarray(cF))
 
     def test_lengths_freeze_state_per_row(self):
         """Ragged rows keep the state at their own length; live prefixes are
@@ -206,18 +208,19 @@ class TestBf16:
         lens = lambda n: jnp.full((b,), n, jnp.int32)
         full, hF, cF = mcd_lstm_seq.mcd_lstm_seq(xb, wxb, whb, bb_, rows,
                                                  keys, 0.125, lengths=lens(t))
-        st, outs, pos = (None, None), [], 0
-        for n in (3, 1, 4):
+
+        def step(xc, st):
+            h0, c0 = st if st is not None else (None, None)
             ys, hT, cT = mcd_lstm_seq.mcd_lstm_seq(
-                xb[:, pos:pos + n], wxb, whb, bb_, rows, keys, 0.125,
-                h0=st[0], c0=st[1], lengths=lens(n))
+                xc, wxb, whb, bb_, rows, keys, 0.125, h0=h0, c0=c0,
+                lengths=lens(xc.shape[1]))
             assert cT.dtype == jnp.float32
-            st, pos = (hT, cT), pos + n
-            outs.append(ys)
-        np.testing.assert_array_equal(
-            np.asarray(jnp.concatenate(outs, 1), jnp.float32),
-            np.asarray(full, jnp.float32))
-        np.testing.assert_array_equal(np.asarray(st[1]), np.asarray(cF))
+            return ys, (hT, cT)
+
+        outs, (hT, cT) = conformance.chunked_run(step, xb, [3, 1, 4])
+        np.testing.assert_array_equal(np.asarray(outs, jnp.float32),
+                                      np.asarray(full, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(cT), np.asarray(cF))
 
 
 class TestRunStackBackends:

@@ -1,0 +1,110 @@
+"""Snapshot format compatibility: committed golden fixtures must restore.
+
+The fixtures under ``tests/fixtures/snapshots/`` were written in historical
+meta layouts (see ``tests/fixtures/make_snapshot_fixtures.py``): the
+durable-control-plane layout (2-part LSTM carries, no ``parts`` key, no
+``cell``/``precision`` in the engine extra) and the variable-arity layout
+(``parts`` present, ``cell`` present, still no ``precision``).  These tests
+pin that today's ``restore`` path keeps loading both — i.e. that format
+evolution stays additive — and that the ``precision`` meta added by the
+quantized serving path refuses mismatched restores with a typed error.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import classifier as clf, mcd
+from repro.serve import StreamingEngine
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures", "snapshots")
+# Geometry the fixtures were streamed under (make_snapshot_fixtures.py).
+HIDDEN, NUM_LAYERS, N_SAMPLES, SEED = 8, 2, 2, 3
+
+
+def _engine(cell="lstm", precision=None):
+    cfg = clf.ClassifierConfig(
+        hidden=HIDDEN, num_layers=NUM_LAYERS, cell=cell,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=N_SAMPLES,
+                          seed=SEED))
+    params = clf.init(jax.random.key(0), cfg)
+    return StreamingEngine(params, cfg, backend="pallas_seq")
+
+
+class TestGoldenFixtures:
+    def test_pr3_two_part_layout_restores(self):
+        """Session metas without a ``parts`` key default to 2-part (h, c)
+        LSTM carries; an extra without ``cell``/``precision`` restores into
+        an LSTM native-precision engine."""
+        eng = _engine("lstm")
+        eng.restore(os.path.join(FIXTURES, "pr3_lstm"))
+        assert sorted(eng.active_sessions) == ["ward_1", "ward_2"]
+        assert eng.tick == 2
+        sess = eng.store.get("ward_1")
+        assert sess.steps == 7 and sess.chunks == 2
+        assert [len(layer) for layer in sess.state] == [2, 2]
+        for h, c in sess.state:
+            assert h.shape == c.shape == (N_SAMPLES, HIDDEN)
+        # rows are the Bayesian coordinates — they must round-trip exactly
+        np.testing.assert_array_equal(np.asarray(sess.rows), [0, 1])
+        np.testing.assert_array_equal(
+            np.asarray(eng.store.get("ward_2").rows), [2, 3])
+        # and the restored store must actually serve
+        out = eng.step({"ward_1": jnp.ones((3, 1))})
+        assert out["ward_1"].steps_total == 10
+
+    def test_pr4_variable_arity_layout_restores(self):
+        """``parts: 1`` GRU carries restore into a GRU engine and serve."""
+        eng = _engine("gru")
+        eng.restore(os.path.join(FIXTURES, "pr4_gru"))
+        sess = eng.store.get("ward_2")
+        assert [len(layer) for layer in sess.state] == [1, 1]
+        out = eng.step({"ward_2": jnp.ones((2, 1))})
+        assert out["ward_2"].steps_total == 9
+
+    def test_pr3_fixture_refused_by_wrong_cell(self):
+        with pytest.raises(ValueError, match="lstm"):
+            _engine("gru").restore(os.path.join(FIXTURES, "pr3_lstm"))
+
+    def test_old_snapshot_refused_by_quantized_engine(self):
+        """Pre-quantization snapshots carry no ``precision`` key: they were
+        written by native-dtype engines, so only a ``precision=None`` engine
+        may resume them — a quantized engine would change the carry dtypes
+        mid-stream."""
+        cfg = clf.ClassifierConfig(
+            hidden=HIDDEN, num_layers=NUM_LAYERS,
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=N_SAMPLES,
+                              seed=SEED))
+        params = clf.init(jax.random.key(0), cfg)
+        eng = StreamingEngine(params, cfg, backend="pallas_seq",
+                              precision="int8")
+        with pytest.raises(ValueError, match="precision"):
+            eng.restore(os.path.join(FIXTURES, "pr3_lstm"))
+
+
+class TestPrecisionMismatch:
+    def test_restore_refuses_precision_change(self, tmp_path):
+        cfg = clf.ClassifierConfig(
+            hidden=HIDDEN, num_layers=NUM_LAYERS,
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=N_SAMPLES,
+                              seed=SEED))
+        params = clf.init(jax.random.key(0), cfg)
+        writer = StreamingEngine(params, cfg, backend="pallas_seq",
+                                 precision="int8")
+        writer.open_session("a")
+        writer.step({"a": jnp.ones((4, 1))})
+        writer.snapshot(str(tmp_path))
+        for wrong in (None, "bf16", "int4"):
+            reader = StreamingEngine(params, cfg, backend="pallas_seq",
+                                     precision=wrong)
+            with pytest.raises(ValueError, match="precision"):
+                reader.restore(str(tmp_path))
+        # the matching precision resumes fine
+        ok = StreamingEngine(params, cfg, backend="pallas_seq",
+                             precision="int8")
+        ok.restore(str(tmp_path))
+        assert ok.active_sessions == ["a"]

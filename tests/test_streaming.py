@@ -18,6 +18,8 @@ from repro.core import autoencoder as ae, classifier as clf, mcd, rnn
 from repro.core.uncertainty import classification_summary
 from repro.serve import (CapacityError, SessionStore, StreamingEngine)
 
+import conformance
+
 BACKENDS = ("reference", "pallas_step", "pallas_seq")
 
 
@@ -52,20 +54,17 @@ class TestRunStackStreaming:
                                       backend=backend, rows=rows,
                                       seed=cfg.seed, lengths=_full(T),
                                       return_all_states=True)
-        state, outs, pos = None, [], 0
-        for n in splits:
-            out, state = rnn.run_stack(params, x[:, pos:pos + n], masks,
-                                       cfg.p, backend=backend, rows=rows,
-                                       seed=cfg.seed, initial_state=state,
-                                       lengths=_full(n),
-                                       return_all_states=True)
-            outs.append(out)
-            pos += n
-        np.testing.assert_array_equal(
-            np.asarray(jnp.concatenate(outs, 1)), np.asarray(full))
-        for (h1, c1), (h2, c2) in zip(state, st_full):
-            np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
-            np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+        def step(xc, state):
+            return rnn.run_stack(params, xc, masks, cfg.p, backend=backend,
+                                 rows=rows, seed=cfg.seed,
+                                 initial_state=state,
+                                 lengths=_full(xc.shape[1]),
+                                 return_all_states=True)
+
+        outs, state = conformance.chunked_run(step, x, splits)
+        np.testing.assert_array_equal(np.asarray(outs), np.asarray(full))
+        conformance.assert_states_equal(state, st_full, f"{backend} {splits}")
 
     def test_pallas_seq_chunked_equals_reference_full(self):
         """The acceptance bullet: chunked pallas_seq streaming == a single
@@ -79,19 +78,18 @@ class TestRunStackStreaming:
             params, x, rnn.sample_stack_masks(cfg, rows, 4, hiddens), cfg.p,
             lengths=_full(T))
         plan = rnn.stack_mask_plan(cfg, 3)
+
+        def step(xc, state):
+            return rnn.run_stack(params, xc, plan, cfg.p,
+                                 backend="pallas_seq", rows=rows,
+                                 seed=cfg.seed, initial_state=state,
+                                 lengths=_full(xc.shape[1]),
+                                 return_all_states=True)
+
         for splits in ([5, 12], [1] * 17, [3, 1, 6, 7]):
-            state, outs, pos = None, [], 0
-            for n in splits:
-                out, state = rnn.run_stack(params, x[:, pos:pos + n], plan,
-                                           cfg.p, backend="pallas_seq",
-                                           rows=rows, seed=cfg.seed,
-                                           initial_state=state,
-                                           lengths=_full(n),
-                                           return_all_states=True)
-                outs.append(out)
-                pos += n
-            np.testing.assert_array_equal(
-                np.asarray(jnp.concatenate(outs, 1)), np.asarray(full_ref))
+            outs, _ = conformance.chunked_run(step, x, splits)
+            np.testing.assert_array_equal(np.asarray(outs),
+                                          np.asarray(full_ref))
 
     @pytest.mark.parametrize("backend", BACKENDS)
     def test_ragged_lengths_freeze_per_row(self, backend):
@@ -220,19 +218,17 @@ class TestRunStackStreamingGru:
                                       backend=backend, rows=rows,
                                       seed=cfg.seed, lengths=_full(T),
                                       return_all_states=True, cell="gru")
-        state, outs, pos = None, [], 0
-        for n in splits:
-            out, state = rnn.run_stack(params, x[:, pos:pos + n], masks,
-                                       cfg.p, backend=backend, rows=rows,
-                                       seed=cfg.seed, initial_state=state,
-                                       lengths=_full(n),
-                                       return_all_states=True, cell="gru")
-            outs.append(out)
-            pos += n
-        np.testing.assert_array_equal(
-            np.asarray(jnp.concatenate(outs, 1)), np.asarray(full))
-        for (h1,), (h2,) in zip(state, st_full):
-            np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+        def step(xc, state):
+            return rnn.run_stack(params, xc, masks, cfg.p, backend=backend,
+                                 rows=rows, seed=cfg.seed,
+                                 initial_state=state,
+                                 lengths=_full(xc.shape[1]),
+                                 return_all_states=True, cell="gru")
+
+        outs, state = conformance.chunked_run(step, x, splits)
+        np.testing.assert_array_equal(np.asarray(outs), np.asarray(full))
+        conformance.assert_states_equal(state, st_full, f"gru {backend}")
 
     @pytest.mark.parametrize("backend", BACKENDS)
     def test_ragged_lengths_freeze_per_row(self, backend):
