@@ -1,0 +1,121 @@
+"""Co-design controller costs: decision overhead, SLO recovery, throughput.
+
+Three numbers the online DSE→serving loop has to earn:
+
+* **decision overhead** — host µs of one ``plan()`` evaluation (summarize
+  window + calibrate roofline + candidate search).  It runs at tick
+  boundaries on the serving host, so it must be negligible next to a tick;
+* **SLO recovery** — ticks from the onset of a deterministic ×4 load burst
+  (``SimulatedLoadSink``) until p95 tick latency is back under the SLO,
+  controller ON vs OFF.  OFF is the operator's status quo: the breach
+  simply persists;
+* **steady throughput** — post-recovery tokens/s p50 at the downshifted
+  config vs the breached config, i.e. what the latency win costs in
+  delivered chain-timesteps.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.dse.fpga_model import RNNArch
+from repro.serve import (CoDesignController, ServingConfig, SimulatedLoadSink,
+                         SLOPolicy, StreamingEngine, TickMetrics)
+from repro.serve.scheduler import percentile
+
+SLO = SLOPolicy(p95_tick_s=3e-3)
+BURST_TICK, N_TICKS, CHUNK = 8, 28, 8
+
+
+def _tick(i, dur, *, s=8, cap=64, slots=4):
+    rows = slots * s
+    live = slots * cap * s
+    return TickMetrics(tick=i, capacity=cap, n_chunks=slots,
+                       live_rows=slots * s, batch_rows=rows, queue_depth=0,
+                       live_steps=slots * cap, live_chain_steps=live,
+                       padded_steps=rows * cap, pad_waste=0.0,
+                       duration_s=dur, tokens_per_sec=live / dur)
+
+
+def bench_decision_overhead():
+    arch = RNNArch(hidden=8, num_layers=2, placement="YN", weight_bits=32,
+                   timesteps=64)
+    ctrl = CoDesignController(
+        None, SLO, config=ServingConfig(n_samples=8, chunk_capacity=64),
+        arch=arch, slots=4, window=16, min_ticks=4)
+    win = [_tick(i, 10e-3) for i in range(16)]       # breached: full search
+    ts = []
+    for _ in range(20):
+        t0 = time.perf_counter()
+        rec = ctrl.plan(win)
+        ts.append(time.perf_counter() - t0)
+    assert rec is not None and rec.applied
+    us = sorted(ts)[len(ts) // 2] * 1e6
+    common.emit("controller.plan.breach", us,
+                f"candidates={len(rec.candidates)}")
+
+
+def _serve(with_controller: bool):
+    """One burst scenario; returns (sink, controller|None)."""
+    from repro.core import classifier as clf, mcd
+    cfg = clf.ClassifierConfig(
+        hidden=8, num_layers=2, num_classes=4,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=4, seed=0))
+    params = clf.init(jax.random.key(0), cfg)
+    sink = SimulatedLoadSink(per_chain_step_s=1e-5, overhead_s=2e-4,
+                             load=lambda t: 4.0 if t >= BURST_TICK else 1.0)
+    eng = StreamingEngine(params, cfg, max_sessions=2,
+                          chunk_capacity="auto", ladder=(CHUNK,),
+                          metrics_sink=sink)
+    eng.open_session("a")
+    eng.open_session("b")
+    ctrl = (CoDesignController(eng, SLO, window=8, min_ticks=4,
+                               cooldown_ticks=8)
+            if with_controller else None)
+    sig = jax.random.normal(jax.random.key(1), (2, N_TICKS * CHUNK, 1))
+    for t in range(N_TICKS):
+        chunks = {"a": sig[0, CHUNK * t:CHUNK * (t + 1)],
+                  "b": sig[1, CHUNK * t:CHUNK * (t + 1)]}
+        (ctrl.engine if ctrl else eng).step(chunks)
+        if ctrl:
+            ctrl.maybe_reconfigure()
+    return sink, ctrl
+
+
+def _recovery_ticks(sink, min_ticks=4):
+    """Ticks from burst onset until sliding p95 is back under the SLO."""
+    window = [m.duration_s for m in sink.window()]
+    for t in range(BURST_TICK + min_ticks, N_TICKS):
+        if percentile(window[t - min_ticks:t], 95) <= SLO.p95_tick_s:
+            return t - BURST_TICK
+    return None
+
+
+def bench_slo_recovery():
+    for label, on in (("on", True), ("off", False)):
+        sink, ctrl = _serve(on)
+        rec_ticks = _recovery_ticks(sink)
+        tail = [m.tokens_per_sec for m in sink.window()
+                if m.tick >= N_TICKS - 8]
+        p95 = percentile([m.duration_s for m in sink.window()
+                          if m.tick >= N_TICKS - 8], 95)
+        applied = sum(1 for r in ctrl.decisions if r.applied) if ctrl else 0
+        common.emit(
+            f"controller.recovery.{label}", 0.0,
+            f"recovery_ticks={rec_ticks};steady_p95_ms={p95 * 1e3:.2f};"
+            f"steady_tokens_p50={percentile(tail, 50):.0f};"
+            f"decisions_applied={applied};"
+            f"slo_met={bool(rec_ticks is not None and p95 <= SLO.p95_tick_s)}")
+
+
+def run():
+    bench_decision_overhead()
+    bench_slo_recovery()
+
+
+if __name__ == "__main__":
+    run()

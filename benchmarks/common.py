@@ -30,7 +30,14 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
     return sorted(ts)[len(ts) // 2] * 1e6
 
 
+#: Every emit() of the process, in order — ``run.py --json`` serializes
+#: this as the machine-readable baseline (e.g. BENCH_serving.json).
+RECORDS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
 
 

@@ -12,18 +12,27 @@ Prints ``name,us_per_call,derived`` CSV per benchmark line.
   streaming    bench_streaming       (stateful session serving sweep)
   controlplane bench_controlplane    (admission, snapshot/restore, pad waste)
   sharding     bench_sharding        (tokens/s vs device count, data plane)
+  controller   bench_controller      (decision overhead, SLO recovery)
   roofline     roofline              (dry-run derived terms, all 40 cells)
+
+``--only`` filters by suite name (substring, repeatable); ``--json PATH``
+additionally writes every emitted record as JSON — CI uses
+``--only controlplane --only controller --json BENCH_serving.json`` to pin
+the serving-stack baseline.
 """
 
+import argparse
+import json
 import sys
 import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_controlplane, bench_dse_sweep,
-                            bench_kernels, bench_latency, bench_opt_modes,
-                            bench_quantization, bench_resource_model,
-                            bench_sampling, bench_sharding, bench_streaming,
+    from benchmarks import (bench_controller, bench_controlplane,
+                            bench_dse_sweep, bench_kernels, bench_latency,
+                            bench_opt_modes, bench_quantization,
+                            bench_resource_model, bench_sampling,
+                            bench_sharding, bench_streaming, common,
                             roofline)
     benches = [
         ("dse_sweep", bench_dse_sweep),
@@ -36,8 +45,23 @@ def main() -> None:
         ("streaming", bench_streaming),
         ("controlplane", bench_controlplane),
         ("sharding", bench_sharding),
+        ("controller", bench_controller),
         ("roofline", roofline),
     ]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", action="append", default=None,
+                    help="run only suites whose name contains this "
+                    "substring (repeatable)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every emitted record as JSON "
+                    "(the machine-readable baseline, e.g. "
+                    "BENCH_serving.json)")
+    args = ap.parse_args()
+    if args.only:
+        benches = [(n, m) for n, m in benches
+                   if any(pat in n for pat in args.only)]
+        if not benches:
+            sys.exit(f"--only {args.only} matches no suite")
     failed = 0
     for name, mod in benches:
         print(f"# --- {name} ---", flush=True)
@@ -47,6 +71,12 @@ def main() -> None:
             failed += 1
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": [n for n, _ in benches],
+                       "records": common.RECORDS}, f, indent=1)
+        print(f"# wrote {len(common.RECORDS)} records -> {args.json}",
+              flush=True)
     if failed:
         sys.exit(1)
 

@@ -18,6 +18,14 @@ N devices (``repro.launch.rnn_shardings``) with bit-identical results,
 ``--prewarm`` compiles every capacity rung before the first tick, and
 ``--metrics-out`` streams per-tick ``TickMetrics`` to a JSONL file.
 
+``--controller`` closes the DSE→serving loop online: a
+``CoDesignController`` watches the tick metrics, calibrates the roofline
+against observed latency, and under an SLO breach (``--slo-p95-ms``,
+``--min-tokens-per-sec``) re-runs the paper's optimization over the live
+knobs — swapping the winning config in at a tick boundary with every
+session's stream continuing bit-identically.  ``--decisions-out`` appends
+each ``DecisionRecord`` as a JSON line.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.stream --sessions 4 --chunk-len 20 \
       --samples 8 --beats 2 --backend pallas_seq
@@ -29,6 +37,9 @@ Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.stream --sessions 8 --shards 8 \
       --capacity auto --prewarm --metrics-out /tmp/ticks.jsonl
+  PYTHONPATH=src python -m repro.launch.stream --sessions 4 --samples 8 \
+      --capacity auto --controller --slo-p95-ms 30 \
+      --decisions-out /tmp/decisions.jsonl
 """
 
 from __future__ import annotations
@@ -104,6 +115,21 @@ def main():
     ap.add_argument("--metrics-out", default=None,
                     help="append per-tick TickMetrics as JSON lines to "
                     "this file (JsonlSink; default: in-memory ring only)")
+    ap.add_argument("--controller", action="store_true",
+                    help="run the online co-design controller: calibrate "
+                    "the roofline against observed ticks and reconfigure "
+                    "(S chains, precision) at tick boundaries to hold the "
+                    "SLO (repro.serve.controller)")
+    ap.add_argument("--slo-p95-ms", type=float, default=50.0,
+                    help="SLO: p95 tick latency bound in milliseconds")
+    ap.add_argument("--min-tokens-per-sec", type=float, default=0.0,
+                    help="SLO: minimum delivered chain-timesteps/sec (p50)")
+    ap.add_argument("--min-samples", type=int, default=1,
+                    help="uncertainty floor: the controller never trades "
+                    "S below this, whatever the latency requirement")
+    ap.add_argument("--decisions-out", default=None,
+                    help="append controller DecisionRecords as JSON lines "
+                    "(default: in-memory ring only)")
     ap.add_argument("--snapshot-dir", default=None,
                     help="durable session snapshots (crash-safe resume)")
     ap.add_argument("--snapshot-every", type=int, default=5,
@@ -149,6 +175,18 @@ def main():
         caps = prewarm(eng)
         print(f"prewarmed capacities {caps} in "
               f"{time.perf_counter() - t0:.2f}s")
+    ctrl = None
+    if args.controller:
+        from repro.serve import CoDesignController, SLOPolicy
+        slo = SLOPolicy(p95_tick_s=args.slo_p95_ms / 1e3,
+                        min_tokens_per_sec=args.min_tokens_per_sec,
+                        min_samples=args.min_samples)
+        trail = (JsonlSink(args.decisions_out) if args.decisions_out
+                 else None)
+        ctrl = CoDesignController(eng, slo, decision_sink=trail)
+        print(f"controller on: SLO p95<={args.slo_p95_ms}ms "
+              f"tokens/s>={args.min_tokens_per_sec} "
+              f"S>={args.min_samples} | knobs S{list(ctrl.knobs.samples)}")
 
     # Streams are regenerated deterministically from their generation
     # params; the per-stream cursor lives *in* the session (steps served
@@ -212,6 +250,13 @@ def main():
         stat = (f"cap={m.capacity} q={m.queue_depth} "
                 f"waste={m.pad_waste:4.2f}" if m else "idle")
         print(f"tick {eng.tick:3d} [{stat}] | " + " | ".join(line))
+        if ctrl is not None:
+            rec = ctrl.maybe_reconfigure()
+            if rec is not None:
+                print(f"  controller[{rec.reason}] applied={rec.applied} "
+                      f"winner={rec.winner} "
+                      f"p95={rec.observed['duration_s_p95'] * 1e3:.2f}ms")
+            eng = ctrl.engine       # maybe a prewarmed replacement
 
         for sid in list(eng.active_sessions):
             k = int(sid.split("-")[1])
@@ -234,6 +279,13 @@ def main():
               f"steps over {agg['ticks']} ticks | "
               f"capacities used {agg['capacities_used']} | "
               f"pad waste {agg['pad_waste']:4.2f}")
+    if ctrl is not None:
+        n_applied = sum(1 for r in ctrl.decisions if r.applied)
+        print(f"controller: {len(ctrl.decisions)} decision(s), "
+              f"{n_applied} applied | final config {ctrl.config}")
+        if args.decisions_out:
+            ctrl.decision_sink.close()
+            print(f"decision trail -> {args.decisions_out}")
     if args.metrics_out:
         eng.metrics_sink.close()
         print(f"tick metrics -> {args.metrics_out}")

@@ -3,11 +3,16 @@
 Data plane: ``sessions`` (carried state + mask coordinates) and ``stream``
 (the batched tick loop).  Control plane: ``admission`` (async queue with
 bounded backpressure), ``persistence`` (crash-safe snapshots over
-``repro.ckpt``) and ``scheduler`` (adaptive launch shapes + tick metrics).
+``repro.ckpt``), ``scheduler`` (adaptive launch shapes + tick metrics) and
+``controller`` (online co-design: calibrated DSE over the live knobs,
+applied via prewarmed config swaps under an SLO).
 """
 
 from repro.serve.admission import (AdmissionQueue, DrainRejected, QueueFull,
                                    Ticket)
+from repro.serve.controller import (CoDesignController, DecisionRecord,
+                                    KnobSpace, ServingConfig,
+                                    SimulatedLoadSink, SLOPolicy)
 from repro.serve.persistence import (load_snapshot_meta, restore_store,
                                      snapshot_store)
 from repro.serve.scheduler import (AdaptiveTickScheduler, TickMetrics,
@@ -17,8 +22,10 @@ from repro.serve.stream import (ChunkResult, JsonlSink, MetricsSink,
                                 RingBufferSink, StreamingEngine)
 
 __all__ = ["AdmissionQueue", "AdaptiveTickScheduler", "CapacityError",
-           "ChunkResult", "DrainRejected", "JsonlSink", "MetricsSink",
-           "QueueFull", "RingBufferSink", "Session", "SessionStore",
+           "ChunkResult", "CoDesignController", "DecisionRecord",
+           "DrainRejected", "JsonlSink", "KnobSpace", "MetricsSink",
+           "QueueFull", "RingBufferSink", "SLOPolicy", "Session",
+           "SessionStore", "ServingConfig", "SimulatedLoadSink",
            "StreamingEngine", "Ticket", "TickMetrics",
            "load_snapshot_meta", "pow2_ladder", "prewarm", "restore_store",
            "snapshot_store", "summarize"]

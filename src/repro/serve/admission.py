@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 from typing import Iterator
 
 from repro.serve.sessions import CapacityError, Session, SessionStore
@@ -64,6 +65,7 @@ class Ticket:
     priority: int
     seq: int                        # FIFO tiebreak within a priority class
     session: Session | None = None  # set for re-attach (evicted carry)
+    submitted_at: float = 0.0       # monotonic clock at submit (queue-wait age)
 
 
 class AdmissionQueue:
@@ -96,7 +98,7 @@ class AdmissionQueue:
                 f"admission queue full ({self.max_pending} pending); "
                 "shed load upstream or raise max_pending")
         ticket = Ticket(sid=sid, priority=int(priority), seq=self._seq,
-                        session=session)
+                        session=session, submitted_at=time.monotonic())
         self._seq += 1
         self._pending[sid] = ticket
         heapq.heappush(self._heap, (-ticket.priority, ticket.seq, ticket))
@@ -144,6 +146,20 @@ class AdmissionQueue:
         if rejected:
             raise DrainRejected(admitted, rejected)
         return admitted
+
+    def oldest_wait_s(self, now: float | None = None) -> float:
+        """Age (s) of the oldest still-waiting ticket; 0.0 when empty.
+
+        Measured at tick boundaries right after the drain, this is the
+        head-of-line queueing delay — the observable that separates "the
+        store is full and streams are waiting" (genuine overload) from a
+        slow tick (compile stall, long chunk): ``TickMetrics.queue_wait_s``.
+        """
+        if not self._pending:
+            return 0.0
+        now = time.monotonic() if now is None else now
+        return max(0.0, now - min(t.submitted_at
+                                  for t in self._pending.values()))
 
     def waiting(self) -> list[Ticket]:
         """Live tickets in drain order (priority desc, FIFO within)."""

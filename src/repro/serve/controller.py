@@ -1,0 +1,688 @@
+"""Online co-design: close the paper's DSE→serving loop under an SLO.
+
+The paper's central contribution (§IV, Fig. 7) is a framework that searches
+algorithmic–hardware configurations for the best accuracy/latency/
+uncertainty trade-off — offline, against a benchmarked lookup table.  The
+serving stack meanwhile emits live :class:`~repro.serve.scheduler.
+TickMetrics` through a :class:`~repro.serve.stream.MetricsSink` that, until
+this module, nothing consumed.  :class:`CoDesignController` runs the same
+framework *online*:
+
+1. **observe** — roll up the sink's recent window (p95 tick latency,
+   tokens/s, queue depth, queue wait, compile count);
+2. **calibrate** — fit the :mod:`repro.dse.tpu_model` roofline to the
+   observed durations (:mod:`repro.dse.calibrate`), so predicted candidate
+   latency is in the same wall-clock world the SLO is written in;
+3. **search** — build a candidate table over the live knobs (S MC chains,
+   serving precision, chunk-capacity ladder, shard width) and drive
+   :func:`repro.dse.search.optimize` with the calibrated
+   ``latency_model=`` and the SLO as ``requirements=`` — exactly the
+   paper's requirement-filtered DSE, pointed at live traffic;
+4. **apply** — swap the winning config in at a tick boundary: a fresh
+   engine is built, every live session's carry is converted and
+   re-attached (same ``(seed, rows)`` mask coordinates, so the Bayesian
+   draw continues), queued tickets follow, and the new engine is prewarmed
+   (``scheduler.prewarm``) before it takes traffic — post-swap ticks
+   compile nothing.
+
+Every evaluation that proposes (or refuses) a change is recorded as a
+typed :class:`DecisionRecord` — candidate table, winner, predicted vs
+observed latency, calibration fit, reason — to its own sink (the
+``MetricsSink`` protocol is duck-typed: ``RingBufferSink`` in memory,
+``JsonlSink`` for a durable trail).  Hysteresis and a post-swap cooldown
+keep an overload burst from thrashing reconfigurations: downshifts need a
+breached window, upshifts need a comfortably-under-SLO window *and* a
+calibrated prediction that the richer config stays under the SLO with
+margin.
+
+The safety contract, pinned by ``tests/test_controller.py``: a session's
+streamed outputs across a reconfiguration boundary are bit-identical to an
+uninterrupted run at the new config from the same carried state — the
+PR 3/PR 6 snapshot contract extended across config swaps.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mcd as _mcd
+from repro.dse import calibrate as _calib
+from repro.dse import search as _search
+from repro.dse.fpga_model import RNNArch
+from repro.kernels import quantize as _quant
+from repro.serve import scheduler as _sched
+from repro.serve.scheduler import TickMetrics, percentile, pow2_ladder
+from repro.serve.sessions import Session
+from repro.serve.stream import RingBufferSink, StreamingEngine
+
+#: Serving-quality rank of each precision (higher = richer numerics).  The
+#: paper's Opt-* modes trade metric quality against latency; online we rank
+#: a config's quality as S first (the uncertainty estimate the whole
+#: Bayesian machinery exists for degrades directly with fewer MC chains),
+#: precision second.  ``None`` (native dtypes) and ``"fp32"`` tie.
+PRECISION_RANK = {None: 3, "fp32": 3, "bf16": 2, "int8": 1, "int4": 0}
+
+#: Roofline weight width per serving precision (``None`` = native fp32).
+_WEIGHT_BITS = {**_quant.WEIGHT_BITS, None: 32}
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOPolicy:
+    """The service-level objective the controller defends.
+
+    ``p95_tick_s`` is the headline bound: the 95th-percentile engine tick
+    wall-clock over the observation window.  ``min_tokens_per_sec`` bounds
+    delivered throughput (p50), ``max_queue_depth`` the admissions left
+    waiting after a drain, and ``min_samples`` is the **uncertainty
+    floor** — the controller never trades S below it, however hard the
+    latency requirement binds (an uncertainty-free Bayesian monitor is a
+    contradiction, not a config).
+    """
+
+    p95_tick_s: float
+    min_tokens_per_sec: float = 0.0
+    max_queue_depth: int | None = None
+    min_samples: int = 1
+
+    def __post_init__(self):
+        if self.p95_tick_s <= 0:
+            raise ValueError(f"p95_tick_s must be > 0, got {self.p95_tick_s}")
+        if self.min_samples < 1:
+            raise ValueError(
+                f"min_samples must be >= 1, got {self.min_samples}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """The live-reconfigurable knobs — the online slice of the DSE space.
+
+    ``chunk_capacity`` is the launch-shape budget (the top ladder rung; 0 =
+    dynamic shapes, no budget).  H/NL/placement/cell stay offline: they
+    change the parameter set itself, which is a deploy, not a reconfig.
+    """
+
+    n_samples: int
+    precision: str | None = None
+    chunk_capacity: int = 0
+    shards: int = 1
+
+    @property
+    def quality(self) -> int:
+        """Scalar serving quality: S dominates, precision breaks ties."""
+        return self.n_samples * 8 + PRECISION_RANK[self.precision]
+
+
+@dataclasses.dataclass(frozen=True)
+class KnobSpace:
+    """Candidate values per knob — the controller's search grid."""
+
+    samples: tuple[int, ...]
+    precisions: tuple[str | None, ...] = (None,)
+    capacities: tuple[int, ...] = (0,)
+    shards: tuple[int, ...] = (1,)
+
+    @classmethod
+    def around(cls, config: ServingConfig, *,
+               precisions: Sequence[str | None] | None = None) -> KnobSpace:
+        """The default grid: pow2 S downshifts from the current config.
+
+        S candidates are ``S, S/2, …, 1``; precision/capacity/shards stay
+        at the current value unless ``precisions`` widens that axis.  A
+        deliberately conservative default — an operator opts into the
+        sharper knives (precision downshift, capacity changes) explicitly.
+        """
+        s, ladder = config.n_samples, []
+        while s >= 1:
+            ladder.append(s)
+            s //= 2
+        return cls(samples=tuple(ladder),
+                   precisions=(tuple(precisions) if precisions
+                               else (config.precision,)),
+                   capacities=(config.chunk_capacity,),
+                   shards=(config.shards,))
+
+    def configs(self) -> list[ServingConfig]:
+        """Every grid point, best quality first (ties: larger capacity).
+
+        The order is the tiebreak: ``search.optimize``'s sort is stable, so
+        equal-score survivors keep table order.
+        """
+        out = []
+        for s in sorted(set(self.samples), reverse=True):
+            for prec in sorted(set(self.precisions),
+                               key=lambda p: -PRECISION_RANK[p]):
+                for cap in sorted(set(self.capacities), reverse=True):
+                    for sh in self.shards:
+                        out.append(ServingConfig(
+                            n_samples=int(s), precision=prec,
+                            chunk_capacity=int(cap), shards=int(sh)))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionRecord:
+    """One controller evaluation — the observable decision trail.
+
+    JSON-able end to end (``dataclasses.asdict`` → one JSONL line via a
+    ``JsonlSink``): what was observed, what the calibration believed, every
+    candidate's predicted latency, the winner, and why.  ``applied`` is
+    False for records that explain a *refusal* (compile stall, no feasible
+    candidate, already optimal) — those are exactly the ones an operator
+    paging through an incident needs.
+    """
+
+    tick: int
+    reason: str            # slo-breach | headroom-upshift | compile-stall |
+                           # no-feasible-fallback | already-optimal
+    applied: bool
+    current: dict          # ServingConfig, asdict
+    winner: dict | None    # ServingConfig, asdict
+    predicted_s: float | None   # winner's calibrated per-tick latency
+    observed: dict         # the window roll-up the decision was made on
+    slo: dict
+    fit: dict | None       # RooflineFit, asdict
+    candidates: list = dataclasses.field(default_factory=list)
+
+
+class SimulatedLoadSink(RingBufferSink):
+    """A metrics sink that *rewrites* tick durations from a cost model.
+
+    Real tick wall-clock is noisy and platform-bound — useless for
+    deterministic tests, demos and CI of control logic.  This sink keeps
+    every structural observable the engine measured (rows, capacity, queue
+    depth, compiles) and replaces ``duration_s``/``tokens_per_sec`` with
+
+        load(tick) · (overhead_s + per_chain_step_s · batch_rows · capacity)
+
+    so latency responds to the knobs exactly as a busy accelerator would
+    (more chains, longer launches, heavier load ⇒ slower ticks), and an
+    injected ``load`` burst is reproducible to the tick.  The controller
+    cannot tell the difference — it reads the sink window like any other.
+    """
+
+    def __init__(self, *, per_chain_step_s: float = 1e-5,
+                 overhead_s: float = 5e-4,
+                 load: Callable[[int], float] | None = None,
+                 window: int = 4096):
+        super().__init__(window)
+        self.per_chain_step_s = float(per_chain_step_s)
+        self.overhead_s = float(overhead_s)
+        self.load = load or (lambda tick: 1.0)
+
+    def emit(self, m) -> None:
+        if isinstance(m, TickMetrics):
+            dur = self.load(m.tick) * (
+                self.overhead_s
+                + self.per_chain_step_s * m.batch_rows * m.capacity)
+            m = dataclasses.replace(
+                m, duration_s=dur,
+                tokens_per_sec=m.live_chain_steps / dur if dur > 0 else 0.0)
+        super().emit(m)
+
+
+def carry_dtypes(cell: str, precision: str | None, backend: str,
+                 chunk_dtype=jnp.float32) -> tuple:
+    """Per-part carry dtypes a target engine stores sessions in.
+
+    Mirrors ``StreamingEngine._gather_states``: h in the activation dtype
+    of the serving precision, LSTM c in fp32 (reference backend keeps c in
+    the activation dtype).  Converting a transferred carry **to** these
+    dtypes is what keeps the post-swap jit signature identical to the
+    prewarmed graphs — and the conversion itself is the documented numeric
+    boundary of a precision swap (an fp32→bf16 downshift rounds the carry
+    once, exactly as if the stream had always been served at bf16 from
+    that state onward).
+    """
+    h_dt = _quant.activation_dtype(precision, chunk_dtype)
+    if precision is not None:
+        c_dt = jnp.float32
+    else:
+        c_dt = chunk_dtype if backend == "reference" else jnp.float32
+    return (h_dt,) if cell == "gru" else (h_dt, c_dt)
+
+
+def convert_session(sess: Session, *, n_samples: int, part_dtypes: tuple,
+                    extra_rows: np.ndarray | None = None) -> Session:
+    """Re-shape one session's carry for a new (S, precision) config.
+
+    Chains are independent trajectories (each batch row sees only its own
+    mask row and the shared signal), so a downshift keeps the *first*
+    ``n_samples`` chains bit-exactly — their continuation is identical to a
+    session that had streamed at the smaller S with those rows all along.
+    An upshift appends fresh chains (zero state, newly-allocated rows via
+    ``extra_rows``): they join the draw mid-signal, warming up from the
+    swap point.  Dtype casts follow ``part_dtypes`` (see
+    :func:`carry_dtypes`).  Cursors and sid are preserved — the stream
+    does not notice the swap.
+    """
+    rows = np.asarray(sess.rows)
+    s_old = int(rows.shape[0])
+    if n_samples <= s_old:
+        new_rows = rows[:n_samples]
+    else:
+        if extra_rows is None or len(extra_rows) != n_samples - s_old:
+            raise ValueError(
+                f"upshift {s_old}→{n_samples} needs {n_samples - s_old} "
+                "freshly-allocated extra_rows")
+        new_rows = np.concatenate([rows, np.asarray(extra_rows, np.uint32)])
+    state = None
+    if sess.state is not None:
+        state = []
+        for layer in sess.state:
+            parts = []
+            for part, dt in zip(layer, part_dtypes):
+                p = jnp.asarray(part)[:min(s_old, n_samples)].astype(dt)
+                if n_samples > s_old:
+                    pad = jnp.zeros((n_samples - s_old, p.shape[-1]), dt)
+                    p = jnp.concatenate([p, pad])
+                parts.append(p)
+            state.append(tuple(parts))
+    return Session(sid=sess.sid, rows=jnp.asarray(new_rows, jnp.uint32),
+                   seed=sess.seed, state=state, steps=sess.steps,
+                   chunks=sess.chunks)
+
+
+class CoDesignController:
+    """Drive the paper's co-design search online, against live metrics.
+
+    Two modes share the decision logic:
+
+    * **attached** (``engine=`` given): the controller owns the serving
+      engine — call :meth:`maybe_reconfigure` after each tick; on a
+      decision it swaps ``controller.engine`` for a prewarmed replacement
+      with every session transferred.  Always read the engine through the
+      controller after that.
+    * **detached** (``engine=None``, ``config=``/``arch=`` given): pure
+      decision logic over a caller-supplied metrics window —
+      :meth:`plan` returns the :class:`DecisionRecord` it *would* apply.
+      This is the unit-test and what-if surface; :meth:`mark_applied`
+      simulates the apply (config + cooldown bookkeeping).
+
+    Args:
+      engine: the :class:`StreamingEngine` to control, or None (detached).
+      slo: the :class:`SLOPolicy` to defend.
+      knobs: the candidate grid; default ``KnobSpace.around(current)``
+        (S downshifts only — see its docstring).
+      decision_sink: where :class:`DecisionRecord`\\ s go (``MetricsSink``
+        duck-typed; default in-memory ring).
+      window: ticks of history a decision looks at (and how many
+        comfortable ticks an upshift requires).
+      min_ticks: observations below which the controller stays silent —
+        both for SLO stats and the calibration fit.
+      cooldown_ticks: after any emitted decision, no further evaluation
+        for this many ticks (thrash guard; also the recovery budget the
+        acceptance test holds the controller to).
+      upshift_margin: hysteresis — upshift only when observed p95 is under
+        ``margin × p95_tick_s`` *and* the candidate's predicted latency
+        stays under the same margin.
+      headroom: downshift target — a breach picks candidates predicted
+        under ``headroom × p95_tick_s``, not exactly at the line.
+      prewarm: compile every ladder rung of a replacement engine before it
+        takes traffic (needs a bounded shape family; skipped for
+        dynamic-shape engines).
+      config, arch, slots: detached-mode substitutes for what an engine
+        would provide (current config, its :class:`RNNArch`, and the
+        session slots a fixed-shape tick pads to).
+    """
+
+    def __init__(self, engine: StreamingEngine | None, slo: SLOPolicy, *,
+                 knobs: KnobSpace | None = None, decision_sink=None,
+                 window: int = 16, min_ticks: int = 4,
+                 cooldown_ticks: int = 8, upshift_margin: float = 0.5,
+                 headroom: float = 0.9, prewarm: bool = True,
+                 config: ServingConfig | None = None,
+                 arch: RNNArch | None = None, slots: int | None = None):
+        self.engine = engine
+        self.slo = slo
+        self.window = int(window)
+        self.min_ticks = int(min_ticks)
+        self.cooldown_ticks = int(cooldown_ticks)
+        self.upshift_margin = float(upshift_margin)
+        self.headroom = float(headroom)
+        self.prewarm = bool(prewarm)
+        self.decision_sink = decision_sink or RingBufferSink()
+        if engine is not None:
+            self.config = self._derive_config(engine)
+            self.arch = self._derive_arch(engine, self.config)
+            self._slots = engine.max_sessions if engine._fixed else None
+        else:
+            if config is None or arch is None:
+                raise ValueError("detached mode (engine=None) needs "
+                                 "config= and arch=")
+            self.config = config
+            self.arch = dataclasses.replace(
+                arch, weight_bits=_WEIGHT_BITS[config.precision])
+            self._slots = slots
+        self.knobs = knobs or KnobSpace.around(self.config)
+        if min(self.knobs.samples) < 1:
+            raise ValueError(f"knob S candidates must be >= 1, "
+                             f"got {self.knobs.samples}")
+        self._window_start_tick = 0
+        self._cooldown_until = 0
+        self.last_swap: dict | None = None
+
+    # -- observation ---------------------------------------------------------
+    @property
+    def decisions(self) -> list:
+        """The decision sink's retained window (oldest first)."""
+        return list(self.decision_sink.window())
+
+    def window_metrics(self, metrics: Sequence[TickMetrics] | None = None
+                       ) -> list[TickMetrics]:
+        """The ticks a decision may look at: post-last-swap, bounded.
+
+        The window resets at every applied swap — a calibration fit (and an
+        SLO judgment) must not straddle a config change, since the old
+        config's ticks were produced by a different arch.
+        """
+        if metrics is None:
+            if self.engine is None:
+                raise ValueError("detached controller: pass metrics=")
+            metrics = self.engine.metrics
+        return [m for m in metrics
+                if m.tick >= self._window_start_tick][-self.window:]
+
+    # -- decision ------------------------------------------------------------
+    def plan(self, metrics: Sequence[TickMetrics] | None = None
+             ) -> DecisionRecord | None:
+        """Evaluate the window; return the decision, or None for a no-op.
+
+        Pure with respect to the engine: nothing is applied and nothing is
+        emitted — :meth:`maybe_reconfigure` owns the side effects.  Returns
+        None when the SLO is met with no upshift headroom, inside a
+        cooldown, or with too little history to judge.
+        """
+        win = self.window_metrics(metrics)
+        if len(win) < self.min_ticks:
+            return None
+        tick = win[-1].tick
+        if tick < self._cooldown_until:
+            return None
+        stats = _sched.summarize(win)
+        observed = {
+            "duration_s_p95": stats["duration_s_p95"],
+            "duration_s_p50": stats["duration_s_p50"],
+            "tokens_per_sec_p50": stats["tokens_per_sec_p50"],
+            "mean_queue_depth": stats["mean_queue_depth"],
+            "queue_wait_s_p95": stats["queue_wait_s_p95"],
+            "compiles": stats["compiles"],
+            "ticks": stats["ticks"],
+        }
+        lat_breach = stats["duration_s_p95"] > self.slo.p95_tick_s
+        tps_breach = (self.slo.min_tokens_per_sec > 0 and
+                      stats["tokens_per_sec_p50"]
+                      < self.slo.min_tokens_per_sec)
+        q_breach = (self.slo.max_queue_depth is not None and
+                    stats["mean_queue_depth"] > self.slo.max_queue_depth)
+        if lat_breach and not (tps_breach or q_breach):
+            # A slow window whose slowness vanishes once compile ticks are
+            # excluded is a compile stall, not overload: reconfiguring
+            # would *cause* more compiles.  Record the distinction (the
+            # queue_wait/compiles satellite exists for this) and hold —
+            # also when compiles are present but too few clean ticks remain
+            # to judge: a downshift on contaminated evidence is exactly the
+            # boot-time thrash this guard exists to prevent.
+            clean = [m.duration_s for m in win if m.compiles == 0]
+            if any(m.compiles for m in win) and (
+                    len(clean) < self.min_ticks
+                    or percentile(clean, 95) <= self.slo.p95_tick_s):
+                return self._record(tick, "compile-stall", observed,
+                                    fit=None, winner=None, candidates=[])
+        breach = lat_breach or tps_breach or q_breach
+        if not breach:
+            best = max(c.quality for c in self.knobs.configs())
+            if (self.config.quality >= best
+                    or len(win) < self.window
+                    or stats["duration_s_p95"]
+                    > self.upshift_margin * self.slo.p95_tick_s):
+                return None
+            target_lat = self.upshift_margin * self.slo.p95_tick_s
+            reason = "headroom-upshift"
+        else:
+            target_lat = self.headroom * self.slo.p95_tick_s
+            reason = "slo-breach"
+        fit = _calib.fit_roofline(win, self.arch, min_ticks=self.min_ticks)
+        if fit is None:
+            return None
+        winner_cfg, predicted, cands = self._search(win, fit, target_lat)
+        if winner_cfg is None and breach:
+            winner_cfg, predicted, cands = self._search(
+                win, fit, target_lat, fallback=True)
+            reason = "no-feasible-fallback"
+        if winner_cfg is None or winner_cfg == self.config:
+            if reason == "headroom-upshift":
+                return None          # nothing better that is safely faster
+            return self._record(tick, "already-optimal", observed, fit=fit,
+                                winner=None, candidates=cands)
+        rec = self._record(tick, reason, observed, fit=fit,
+                           winner=winner_cfg, candidates=cands,
+                           predicted_s=predicted, applied=True)
+        return rec
+
+    def maybe_reconfigure(self) -> DecisionRecord | None:
+        """Plan against the engine's window; apply and record the outcome.
+
+        The attached-mode entry point — call once per tick, *after*
+        ``engine.step``.  Emits every non-None decision to the decision
+        sink and starts the cooldown; on an applied decision the engine is
+        swapped (sessions transferred, replacement prewarmed) before the
+        record is emitted, so a crash between swap and emit can lose the
+        record but never a session.
+        """
+        if self.engine is None:
+            raise ValueError("detached controller: use plan()/mark_applied()")
+        rec = self.plan()
+        if rec is None:
+            return None
+        if rec.applied:
+            self.apply_config(ServingConfig(**rec.winner))
+        self._cooldown_until = rec.tick + self.cooldown_ticks
+        self.decision_sink.emit(rec)
+        return rec
+
+    def mark_applied(self, rec: DecisionRecord) -> None:
+        """Detached-mode apply: adopt the winner + cooldown bookkeeping."""
+        if rec.winner is not None:
+            self.config = ServingConfig(**rec.winner)
+            self.arch = dataclasses.replace(
+                self.arch, weight_bits=_WEIGHT_BITS[self.config.precision])
+        self._window_start_tick = rec.tick + 1
+        self._cooldown_until = rec.tick + self.cooldown_ticks
+
+    # -- the DSE call --------------------------------------------------------
+    def _search(self, win, fit, target_lat, *, fallback=False):
+        """One ``dse.search.optimize`` run over the knob grid.
+
+        Normal mode maximizes config quality under the SLO requirements
+        (latency ≤ target, S ≥ floor, tokens/s ≥ floor) — the paper's
+        requirement-filtered DSE.  ``fallback`` (no candidate met the
+        requirements) keeps only the uncertainty floor and minimizes
+        latency: under a breach the least-bad config is still better than
+        thrashing at the current one.
+        """
+        demand = max(1, int(percentile([m.n_chunks for m in win], 95)))
+        obs_cap = max((m.capacity for m in win), default=1)
+        lat_model = _calib.latency_model(fit, slots=self._slots,
+                                         shards=self.config.shards)
+        table, cfgs = [], []
+        for i, cfg in enumerate(self.knobs.configs()):
+            cap = cfg.chunk_capacity or obs_cap
+            arch = dataclasses.replace(
+                self.arch, weight_bits=_WEIGHT_BITS[cfg.precision],
+                timesteps=cap)
+            pred = lat_model(arch, None, batch=demand,
+                             n_samples=cfg.n_samples)
+            slots = max(demand, self._slots or 0)
+            tps = (slots * cfg.n_samples * cap / pred) if pred > 0 else 0.0
+            table.append(_search.Candidate(
+                arch=arch, n_samples=cfg.n_samples,
+                metrics={"quality": float(cfg.quality),
+                         "samples": float(cfg.n_samples),
+                         "tokens_per_sec": tps,
+                         "cand_index": float(i)}))
+            cfgs.append((cfg, pred, tps))
+        if fallback:
+            mode, requirements = "latency", {
+                "samples": float(self.slo.min_samples)}
+        else:
+            mode, requirements = "quality", {
+                "latency": target_lat,
+                "samples": float(self.slo.min_samples),
+                "tokens_per_sec": self.slo.min_tokens_per_sec,
+            }
+        winner = _search.optimize(table, mode, requirements=requirements,
+                                  latency_model=lat_model, hw_model=None,
+                                  batch=demand)
+        cands = [dict(dataclasses.asdict(cfg), predicted_s=pred,
+                      tokens_per_sec=tps,
+                      feasible=(pred <= target_lat
+                                and cfg.n_samples >= self.slo.min_samples
+                                and tps >= self.slo.min_tokens_per_sec))
+                 for cfg, pred, tps in cfgs]
+        if winner is None:
+            return None, None, cands
+        w_cfg, w_pred, _ = cfgs[int(winner.metrics["cand_index"])]
+        return w_cfg, w_pred, cands
+
+    def _record(self, tick, reason, observed, *, fit, winner, candidates,
+                predicted_s=None, applied=False) -> DecisionRecord:
+        return DecisionRecord(
+            tick=int(tick), reason=reason, applied=applied,
+            current=dataclasses.asdict(self.config),
+            winner=None if winner is None else dataclasses.asdict(winner),
+            predicted_s=predicted_s, observed=observed,
+            slo=dataclasses.asdict(self.slo),
+            fit=None if fit is None else dataclasses.asdict(fit),
+            candidates=candidates)
+
+    # -- apply: the prewarmed graph swap -------------------------------------
+    def apply_config(self, new: ServingConfig) -> StreamingEngine:
+        """Swap the engine to ``new`` at a tick boundary, sessions intact.
+
+        The dims ``restore`` refuses to mismatch (S, precision) are exactly
+        why this is a rebuild, not a restore: a fresh engine is constructed
+        at the new config, every live session's carry is converted
+        (:func:`convert_session`) and re-attached with its original mask
+        coordinates, queued tickets are re-queued in order, the tick
+        counter and metrics sink carry over (one continuous trail), and the
+        replacement is prewarmed before it takes traffic.  The row
+        allocator cursor transfers too, so post-swap admissions can never
+        collide with any row ever drawn in the old engine.
+        """
+        old = self.engine
+        _quant.check_precision(new.precision)
+        model_cfg = dataclasses.replace(
+            old.cfg, mcd=old.cfg.mcd.replace(n_samples=new.n_samples))
+        if old._scheduler is not None:
+            cap_arg = "auto"
+            ladder = (pow2_ladder(new.chunk_capacity) if new.chunk_capacity
+                      else old._scheduler.ladder)
+        elif isinstance(old.chunk_capacity, int):
+            cap_arg, ladder = (new.chunk_capacity or old.chunk_capacity), None
+        else:
+            cap_arg, ladder = None, None
+        mesh, policy = old.mesh, old.policy
+        if new.shards != old._shards:
+            if new.shards <= 1:
+                mesh = policy = None
+            else:
+                from repro.launch.mesh import make_data_mesh
+                mesh, policy = make_data_mesh(new.shards), old.policy
+        eng = StreamingEngine(
+            old.params, model_cfg, backend=old.backend,
+            max_sessions=old.max_sessions, chunk_capacity=cap_arg,
+            ladder=ladder, max_pending=old.queue.max_pending,
+            metrics_sink=old.metrics_sink, mesh=mesh, policy=policy,
+            precision=new.precision, interpret=old.interpret)
+        if (old._scheduler is not None and eng._scheduler is not None
+                and eng._scheduler.ladder == old._scheduler.ladder):
+            # Same ladder → carry the chunk-length observation window, so
+            # the replacement starts on the rung the traffic had settled on
+            # instead of re-learning it from the bottom.
+            eng._scheduler.load_state(old._scheduler.state())
+        part_dtypes = carry_dtypes(eng.cell, new.precision, eng.backend)
+        # Fresh chains on an upshift draw rows the old engine never used.
+        cursor = old.store.next_row
+        moved: list[Session] = []
+        for sess in old.store.sessions():
+            extra = None
+            missing = new.n_samples - int(np.asarray(sess.rows).shape[0])
+            if missing > 0:
+                extra = np.arange(cursor, cursor + missing, dtype=np.uint32)
+                cursor += missing
+            moved.append(convert_session(sess, n_samples=new.n_samples,
+                                         part_dtypes=part_dtypes,
+                                         extra_rows=extra))
+        for sess in moved:
+            eng.attach_session(sess)
+        for t in old.queue.waiting():
+            queued = None
+            if t.session is not None:
+                missing = (new.n_samples
+                           - int(np.asarray(t.session.rows).shape[0]))
+                extra = None
+                if missing > 0:
+                    extra = np.arange(cursor, cursor + missing,
+                                      dtype=np.uint32)
+                    cursor += missing
+                queued = convert_session(t.session,
+                                         n_samples=new.n_samples,
+                                         part_dtypes=part_dtypes,
+                                         extra_rows=extra)
+            eng.queue.submit(t.sid, priority=t.priority, session=queued)
+        # Never re-draw a row either engine ever allocated.
+        eng.store._next_row = max(eng.store.next_row, cursor)
+        eng.tick = old.tick
+        if self.prewarm and (eng._scheduler is not None
+                             or isinstance(eng.chunk_capacity, int)):
+            _sched.prewarm(eng)
+        self.last_swap = {
+            "tick": old.tick,
+            "old_config": self.config,
+            "new_config": new,
+            # Shallow session copies: carries are immutable jax arrays, so
+            # a copy of the dataclass pins the pre-swap state for
+            # verification (the bit-identity acceptance check replays from
+            # these).
+            "old_sessions": [copy.copy(s) for s in old.store.sessions()],
+        }
+        self.engine = eng
+        self.config = new
+        self.arch = dataclasses.replace(
+            self.arch, weight_bits=_WEIGHT_BITS[new.precision])
+        self._slots = eng.max_sessions if eng._fixed else None
+        self._window_start_tick = eng.tick
+        return eng
+
+    # -- derivation helpers --------------------------------------------------
+    @staticmethod
+    def _derive_config(engine: StreamingEngine) -> ServingConfig:
+        if engine._scheduler is not None:
+            cap = engine._scheduler.max_capacity
+        elif isinstance(engine.chunk_capacity, int):
+            cap = engine.chunk_capacity
+        else:
+            cap = 0
+        return ServingConfig(n_samples=engine.n_samples,
+                             precision=engine.precision,
+                             chunk_capacity=cap, shards=engine._shards)
+
+    @staticmethod
+    def _derive_arch(engine: StreamingEngine,
+                     config: ServingConfig) -> RNNArch:
+        cfg = engine.cfg
+        if engine.kind == "classifier":
+            out_dim = cfg.num_classes
+        else:
+            out_dim = cfg.input_dim
+        return RNNArch(hidden=cfg.hidden, num_layers=cfg.num_layers,
+                       placement=_mcd.placement_str(cfg.mcd.placement),
+                       kind=engine.kind, cell=engine.cell,
+                       weight_bits=_WEIGHT_BITS[config.precision],
+                       input_dim=cfg.input_dim, output_dim=out_dim,
+                       timesteps=config.chunk_capacity or 1)

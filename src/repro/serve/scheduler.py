@@ -23,6 +23,7 @@ pad waste, tokens/sec — the control-plane observables the ROADMAP's
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Iterable, Sequence
 
@@ -63,6 +64,11 @@ class TickMetrics:
     duration_s: float      # wall-clock of the engine tick (dispatch incl.)
     tokens_per_sec: float  # live chain-timesteps / duration (proxy off-TPU)
     shards: int = 1        # data-parallel width the tick launched across
+    queue_wait_s: float = 0.0  # oldest-pending admission age at the drain
+    compiles: int = 0      # new stack-graph jit entries this tick (a slow
+                           # tick with compiles > 0 is a compile stall, not
+                           # overload — the co-design controller and any
+                           # operator reading the JSONL trail need the split)
 
 
 class AdaptiveTickScheduler:
@@ -184,19 +190,37 @@ def prewarm(engine, *, dtype=None) -> list[int]:
     return caps
 
 
+def percentile(values: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile (p in (0, 100]); 0.0 on an empty sequence.
+
+    The SLO arithmetic used by ``summarize`` and the co-design controller —
+    one definition so "p95 tick latency" means the same thing in the
+    decision trail, the benchmark and the tests.
+    """
+    vals = sorted(values)
+    if not vals:
+        return 0.0
+    k = max(0, min(len(vals) - 1, math.ceil(p / 100.0 * len(vals)) - 1))
+    return vals[k]
+
+
 def summarize(metrics: Sequence[TickMetrics]) -> dict:
     """Aggregate control-plane observables over recorded ticks.
 
     The engine's ``metrics`` list is the single source of truth (the
     scheduler holds no copy); feed it here for the roll-up an operator or
     autoscaler wants: pad waste, distinct launch shapes (compiled-graph
-    count), queue depth, chain-timesteps/sec.
+    count), queue depth, chain-timesteps/sec.  Latency and throughput come
+    as p50/p95 too, not just means — an SLO is a tail guarantee, and the
+    mean hides exactly the slow ticks the controller must react to.
     """
     if not metrics:
         return {"ticks": 0}
     live = sum(m.live_chain_steps for m in metrics)
     padded = sum(m.padded_steps for m in metrics)
     dur = sum(m.duration_s for m in metrics)
+    durs = [m.duration_s for m in metrics]
+    tps = [m.tokens_per_sec for m in metrics]
     return {
         "ticks": len(metrics),
         "capacities_used": sorted({m.capacity for m in metrics}),
@@ -206,4 +230,10 @@ def summarize(metrics: Sequence[TickMetrics]) -> dict:
         "mean_queue_depth": (sum(m.queue_depth for m in metrics)
                              / len(metrics)),
         "tokens_per_sec": live / dur if dur > 0 else 0.0,
+        "duration_s_p50": percentile(durs, 50),
+        "duration_s_p95": percentile(durs, 95),
+        "tokens_per_sec_p50": percentile(tps, 50),
+        "tokens_per_sec_p95": percentile(tps, 95),
+        "queue_wait_s_p95": percentile([m.queue_wait_s for m in metrics], 95),
+        "compiles": sum(m.compiles for m in metrics),
     }

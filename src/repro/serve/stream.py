@@ -59,6 +59,23 @@ from repro.serve.scheduler import AdaptiveTickScheduler, TickMetrics
 from repro.serve.sessions import Session, SessionStore
 
 
+def stack_compile_count() -> int:
+    """Total jit cache entries across the recurrent-stack entry points.
+
+    The delta across a tick is ``TickMetrics.compiles`` — how many *new*
+    stack graphs that tick had to build.  A latency spike with
+    ``compiles > 0`` is a compile stall (fix: ``scheduler.prewarm``); one
+    with ``compiles == 0`` is genuine overload (fix: shed load or let the
+    co-design controller downshift).  Counts the ``repro.kernels.ops``
+    jitted wrappers every unsharded backend dispatches through (the sharded
+    path caches whole-tick callables separately).
+    """
+    from repro.kernels import ops
+    fns = (ops.lstm_stack_layer, ops.fused_lstm_seq, ops.fused_lstm_layer,
+           ops.gru_stack_layer, ops.fused_gru_seq, ops.fused_gru_layer)
+    return sum(fn._cache_size() for fn in fns)
+
+
 @dataclasses.dataclass
 class ChunkResult:
     """Per-chunk Bayesian output for one session."""
@@ -116,19 +133,23 @@ class RingBufferSink:
 class JsonlSink(RingBufferSink):
     """Append every tick as one JSON line; keeps the ring for ``window()``.
 
-    Lines are flushed per tick so an operator can ``tail -f`` the file (and
-    a crash loses at most the in-flight line).  Used by
-    ``repro.launch.stream --metrics-out``.
+    Every record is flushed as it is written: the JSONL trail is what
+    post-mortem SLO analysis reads after a crash, so a killed engine must
+    not lose a buffered tail — at most the in-flight line is torn (and an
+    operator can ``tail -f`` the file live).  Used by
+    ``repro.launch.stream --metrics-out`` and, duck-typed, as the durable
+    ``DecisionRecord`` trail of ``repro.serve.controller``.
     """
 
     def __init__(self, path, *, window: int = 4096):
         super().__init__(window)
         self.path = path
-        self._fh = open(path, "a", buffering=1)
+        self._fh = open(path, "a")
 
-    def emit(self, m: TickMetrics) -> None:
+    def emit(self, m) -> None:
         super().emit(m)
         self._fh.write(json.dumps(dataclasses.asdict(m)) + "\n")
+        self._fh.flush()
 
     def close(self) -> None:
         self._fh.close()
@@ -464,6 +485,10 @@ class StreamingEngine:
         self._drain()          # tick boundary: freed rows feed the wait-list
         if not chunks:
             return {}
+        # Head-of-line admission delay *after* the drain: how long the
+        # oldest stream that still couldn't get a row has been waiting.
+        queue_wait_s = self.queue.oldest_wait_s()
+        compiles_before = stack_compile_count()
         t_start = time.perf_counter()
         s = self.n_samples
         sessions, xs, lens = [], [], []
@@ -559,7 +584,8 @@ class StreamingEngine:
             pad_waste=1.0 - (live_steps * s) / (nb * int(t_max)),
             duration_s=dur,
             tokens_per_sec=live_steps * s / dur if dur > 0 else 0.0,
-            shards=self._shards)
+            shards=self._shards, queue_wait_s=queue_wait_s,
+            compiles=stack_compile_count() - compiles_before)
         self.metrics_sink.emit(m)
         self.tick += 1
         return results

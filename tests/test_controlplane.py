@@ -20,16 +20,18 @@ import pytest
 from repro.ckpt import checkpoint
 from repro.core import classifier as clf, mcd
 from repro.serve import (AdmissionQueue, AdaptiveTickScheduler, CapacityError,
-                         DrainRejected, QueueFull, Session, SessionStore,
-                         StreamingEngine, pow2_ladder, restore_store,
-                         snapshot_store, summarize)
+                         DrainRejected, JsonlSink, QueueFull, Session,
+                         SessionStore, StreamingEngine, TickMetrics,
+                         pow2_ladder, restore_store, snapshot_store,
+                         summarize)
+from repro.serve.scheduler import percentile
 
 BACKENDS = ("reference", "pallas_step", "pallas_seq")
 
 
-def _cfg_params(s=3, seed=3):
+def _cfg_params(s=3, seed=3, hidden=8):
     cfg = clf.ClassifierConfig(
-        hidden=8, num_layers=2, num_classes=4,
+        hidden=hidden, num_layers=2, num_classes=4,
         mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s, seed=seed))
     return cfg, clf.init(jax.random.key(0), cfg)
 
@@ -271,6 +273,66 @@ class TestScheduler:
             eng.step({"a": jnp.ones((2, 1))})
         assert len(eng.metrics) == 2 and eng.tick == 4
         assert eng.last_metrics.tick == 3
+
+    def test_percentile_is_nearest_rank(self):
+        vals = list(range(1, 21))                   # 1..20
+        assert percentile(vals, 50) == 10
+        assert percentile(vals, 95) == 19
+        assert percentile(vals, 100) == 20
+        assert percentile([7.0], 95) == 7.0
+        assert percentile([], 95) == 0.0
+
+    def test_summarize_reports_tail_latency(self):
+        def m(i, dur):
+            return TickMetrics(tick=i, capacity=4, n_chunks=1, live_rows=2,
+                               batch_rows=2, queue_depth=0, live_steps=4,
+                               live_chain_steps=8, padded_steps=8,
+                               pad_waste=0.0, duration_s=dur,
+                               tokens_per_sec=8 / dur,
+                               queue_wait_s=0.1 * i, compiles=i % 2)
+        agg = summarize([m(i, dur) for i, dur in
+                         enumerate([1.0] * 19 + [100.0])])
+        # the mean would hide the one 100 s tick; the tail must not
+        assert agg["duration_s_p50"] == 1.0
+        assert agg["duration_s_p95"] == 1.0
+        assert agg["duration_s_p95"] < 100.0 <= max(
+            [1.0] * 19 + [100.0])
+        assert summarize([m(i, 100.0) for i in range(20)])[
+            "duration_s_p95"] == 100.0
+        assert agg["tokens_per_sec_p50"] == 8.0
+        assert agg["queue_wait_s_p95"] == pytest.approx(1.8)
+        assert agg["compiles"] == 10
+
+    def test_tick_metrics_thread_queue_wait_and_compiles(self):
+        # hidden=6 gives this test its own jit shape family, so the first
+        # tick *must* register fresh stack compiles whatever ran before.
+        cfg, params = _cfg_params(s=5, hidden=6)
+        eng = StreamingEngine(params, cfg, max_sessions=1, chunk_capacity=4)
+        eng.open_session("a")
+        eng.admit("b")                              # waits: store is full
+        m1 = (eng.step({"a": jnp.ones((4, 1))}), eng.last_metrics)[1]
+        assert m1.compiles >= 1                     # cold graph, counted
+        assert m1.queue_depth == 1
+        assert m1.queue_wait_s > 0.0                # b has been waiting
+        m2 = (eng.step({"a": jnp.ones((4, 1))}), eng.last_metrics)[1]
+        assert m2.compiles == 0                     # warm graph, same shape
+        assert m2.queue_wait_s > m1.queue_wait_s    # b is still waiting
+
+    def test_jsonl_sink_flushes_per_record(self, tmp_path):
+        # the trail must be readable after a crash — i.e. *before* close()
+        path = tmp_path / "ticks.jsonl"
+        sink = JsonlSink(str(path))
+        sink.emit(TickMetrics(tick=0, capacity=4, n_chunks=1, live_rows=2,
+                              batch_rows=2, queue_depth=0, live_steps=4,
+                              live_chain_steps=8, padded_steps=8,
+                              pad_waste=0.0, duration_s=0.5,
+                              tokens_per_sec=16.0))
+        lines = path.read_text().splitlines()       # no close(), no flush()
+        assert len(lines) == 1
+        rec = __import__("json").loads(lines[0])
+        assert rec["tick"] == 0 and rec["queue_wait_s"] == 0.0
+        assert rec["compiles"] == 0                 # new fields serialize
+        sink.close()
 
 
 class TestPersistence:
