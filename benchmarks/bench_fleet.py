@@ -1,0 +1,178 @@
+"""Multi-tenant fleet serving costs: co-batching, routing, fairness, snapshot.
+
+Four numbers the fleet engine has to earn over N solo engines:
+
+* **co-batching win** — one fleet tick for two tenants sharing a launch
+  group (same params/config/backend) vs the same sessions served as two
+  separate solo-engine ticks.  Folded tenants ride ONE batched launch per
+  layer, so the fleet tick should cost about one solo tick, not two;
+* **tenancy overhead** — two tenants in *different* launch groups vs two
+  solo engines: the fleet's routing/namespacing/per-tenant metric tagging
+  on top of the same two launches.  This is the price of the abstraction
+  and it must be small;
+* **drain cost** — host µs of one weighted-fair drain over a deep
+  backlog (the per-tick admission path under overload);
+* **snapshot/restore** — one atomic fleet manifest (every group store +
+  tenant table + fairness ledger + queue) written and adopted back.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import classifier as clf, mcd
+from repro.serve import FleetEngine, StreamingEngine, TenantSpec
+
+CHUNK, SESSIONS_PER_TENANT = 32, 4
+
+
+def _cfg(s=4, seed=3):
+    return clf.ClassifierConfig(
+        hidden=8, num_layers=2, num_classes=5,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s, seed=seed))
+
+
+def _chunks(tenants, t_steps=CHUNK):
+    x = jnp.ones((t_steps, 1), jnp.float32)
+    return {t: {f"s{k}": x for k in range(SESSIONS_PER_TENANT)}
+            for t in tenants}
+
+
+def _tick_us(step, chunks, iters=7):
+    ts = []
+    for _ in range(2):
+        jax.block_until_ready(step(chunks))
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(chunks))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
+def _block(results):
+    return jax.block_until_ready(
+        [r.summary.probs for tr in results.values() for r in tr.values()])
+
+
+def bench_cobatch_vs_solo():
+    cfg = _cfg()
+    params = clf.init(jax.random.key(0), cfg)
+
+    def fleet_for(shared: bool):
+        cfg_b = cfg if shared else _cfg(seed=4)
+        params_b = params if shared else clf.init(jax.random.key(1), cfg_b)
+        fleet = FleetEngine([
+            TenantSpec(name="a", cfg=cfg, params=params, weight=3.0,
+                       max_sessions=SESSIONS_PER_TENANT),
+            TenantSpec(name="b", cfg=cfg_b, params=params_b,
+                       max_sessions=SESSIONS_PER_TENANT)])
+        for t in ("a", "b"):
+            for k in range(SESSIONS_PER_TENANT):
+                fleet.admit(t, f"s{k}")
+        return fleet
+
+    def solo():
+        eng = StreamingEngine(params, cfg, backend="pallas_seq",
+                              max_sessions=SESSIONS_PER_TENANT)
+        for k in range(SESSIONS_PER_TENANT):
+            eng.admit(f"s{k}")
+        return eng
+
+    chunks = _chunks(("a", "b"))
+    shared = fleet_for(shared=True)
+    assert len(shared.groups) == 1
+    us_shared = _tick_us(lambda c: _block(shared.step(c)), chunks)
+
+    split = fleet_for(shared=False)
+    assert len(split.groups) == 2
+    us_split = _tick_us(lambda c: _block(split.step(c)), chunks)
+
+    eng_a, eng_b = solo(), solo()
+    x = chunks["a"]
+
+    def two_solos(c):
+        return jax.block_until_ready(
+            [r.summary.probs
+             for eng in (eng_a, eng_b) for r in eng.step(c).values()])
+
+    us_solo2 = _tick_us(two_solos, x)
+    common.emit("fleet.tick.shared_group", us_shared,
+                f"2 tenants x {SESSIONS_PER_TENANT} sessions, 1 launch "
+                f"group, vs 2 solo engines {us_solo2:.0f}us "
+                f"({us_solo2 / us_shared:.2f}x)")
+    common.emit("fleet.tick.split_groups", us_split,
+                f"2 launch groups, overhead vs 2 solo engines "
+                f"{(us_split / us_solo2 - 1) * 100:+.1f}%")
+
+
+def bench_fair_drain():
+    cfg = _cfg()
+    params = clf.init(jax.random.key(0), cfg)
+    depth, budget = 512, 16
+    fleet = FleetEngine(
+        [TenantSpec(name=n, cfg=cfg, params=params, weight=w,
+                    max_sessions=4096)
+         for n, w in (("a", 4.0), ("b", 2.0), ("c", 1.0))],
+        max_pending=4096, admit_per_tick=budget)
+    for i in range(depth):
+        for n in ("a", "b", "c"):
+            fleet.admit(n, f"s{i}")
+    ts = []
+    for _ in range(10):
+        t0 = time.perf_counter()
+        fleet._drain()
+        ts.append(time.perf_counter() - t0)
+    us = sorted(ts)[len(ts) // 2] * 1e6
+    common.emit("fleet.drain.weighted_fair", us,
+                f"budget {budget} from 3x{depth} backlog "
+                f"({us / budget:.1f}us/admission)")
+
+
+def bench_snapshot_restore():
+    cfg = _cfg()
+    params = clf.init(jax.random.key(0), cfg)
+
+    params_b = clf.init(jax.random.key(1), _cfg(seed=4))
+
+    def fresh():
+        return FleetEngine([
+            TenantSpec(name="a", cfg=cfg, params=params, weight=3.0,
+                       max_sessions=SESSIONS_PER_TENANT),
+            TenantSpec(name="b", cfg=_cfg(seed=4), params=params_b,
+                       max_sessions=SESSIONS_PER_TENANT)])
+
+    fleet = fresh()
+    for t in ("a", "b"):
+        for k in range(SESSIONS_PER_TENANT):
+            fleet.admit(t, f"s{k}")
+    _block(fleet.step(_chunks(("a", "b"))))
+    with tempfile.TemporaryDirectory() as tmp:
+        ts_s, ts_r = [], []
+        for i in range(5):
+            t0 = time.perf_counter()
+            fleet.snapshot(tmp, step=i)
+            ts_s.append(time.perf_counter() - t0)
+            reader = fresh()
+            t0 = time.perf_counter()
+            reader.restore(tmp, step=i)
+            ts_r.append(time.perf_counter() - t0)
+        n_sess = 2 * SESSIONS_PER_TENANT
+        common.emit("fleet.snapshot", sorted(ts_s)[2] * 1e6,
+                    f"2 groups, {n_sess} sessions, atomic manifest")
+        common.emit("fleet.restore", sorted(ts_r)[2] * 1e6,
+                    f"2 groups, {n_sess} sessions adopted")
+
+
+def run():
+    bench_cobatch_vs_solo()
+    bench_fair_drain()
+    bench_snapshot_restore()
+
+
+if __name__ == "__main__":
+    run()

@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV per benchmark line.
   controlplane bench_controlplane    (admission, snapshot/restore, pad waste)
   sharding     bench_sharding        (tokens/s vs device count, data plane)
   controller   bench_controller      (decision overhead, SLO recovery)
+  fleet        bench_fleet           (multi-tenant co-batching, fair drain)
   roofline     roofline              (dry-run derived terms, all 40 cells)
 
 ``--only`` filters by suite name (substring, repeatable); ``--json PATH``
@@ -29,11 +30,11 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_controller, bench_controlplane,
-                            bench_dse_sweep, bench_kernels, bench_latency,
-                            bench_opt_modes, bench_quantization,
-                            bench_resource_model, bench_sampling,
-                            bench_sharding, bench_streaming, common,
-                            roofline)
+                            bench_dse_sweep, bench_fleet, bench_kernels,
+                            bench_latency, bench_opt_modes,
+                            bench_quantization, bench_resource_model,
+                            bench_sampling, bench_sharding, bench_streaming,
+                            common, roofline)
     benches = [
         ("dse_sweep", bench_dse_sweep),
         ("sampling", bench_sampling),
@@ -46,6 +47,7 @@ def main() -> None:
         ("controlplane", bench_controlplane),
         ("sharding", bench_sharding),
         ("controller", bench_controller),
+        ("fleet", bench_fleet),
         ("roofline", roofline),
     ]
     ap = argparse.ArgumentParser()

@@ -32,6 +32,20 @@ class AutoencoderConfig:
     mcd: mcd.MCDConfig = dataclasses.field(
         default_factory=lambda: mcd.MCDConfig(placement="YNYN"))
     heteroscedastic: bool = True
+    # Windowed decoder (the cheap-AE serving path): replay the bottleneck
+    # over only min(T, decode_window) positions instead of the full
+    # repeat-T cache.  The encoder (and therefore the rolling bottleneck a
+    # streaming session carries) is untouched, and the decoder replay at
+    # position t depends only on the bottleneck and the time-invariant
+    # per-row masks — so the windowed reconstruction is bit-identical to
+    # the first min(T, W) positions of the full replay, on every backend.
+    # None: full replay (the paper's repeat-T decoder).
+    decode_window: int | None = None
+
+    def __post_init__(self):
+        if self.decode_window is not None and self.decode_window < 1:
+            raise ValueError(f"decode_window must be >= 1 or None, "
+                             f"got {self.decode_window}")
 
     @property
     def encoder_hiddens(self) -> tuple[int, ...]:
@@ -78,7 +92,9 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
         (reference masks then sample in it), fp32 master weights
         quantized/cast in-graph; the dense head stays fp32.
     Returns:
-      (mean [B, T, I], log_var [B, T, I] or None)[, encoder states].
+      (mean [B, W, I], log_var [B, W, I] or None)[, encoder states], where
+      ``W = min(T, cfg.decode_window or T)`` — the full T unless the config
+      asks for a windowed decode.
       When streaming, each chunk is reconstructed from the *running*
       bottleneck h_T (encoder state carries across chunks; the decoder
       replays the current bottleneck over the chunk's T — per-chunk
@@ -116,10 +132,17 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
     # is replayed fresh per chunk — only encoder state streams forward — but
     # it inherits `lengths` so streaming stays on the pinned graph family
     # end-to-end (rows past their own length are sliced off by the caller).
-    dec_in = jnp.broadcast_to(h_T[:, None, :], (h_T.shape[0], T, h_T.shape[1]))
+    # Windowed decoder: replay only the newest min(T, W) positions.  The
+    # replay at position t sees the same bottleneck and the same
+    # time-invariant masks whatever the launch T, so truncating the replay
+    # is bit-exact on the positions it does produce (config docstring).
+    W = T if cfg.decode_window is None else min(T, cfg.decode_window)
+    dec_in = jnp.broadcast_to(h_T[:, None, :], (h_T.shape[0], W, h_T.shape[1]))
+    dec_lengths = (lengths if lengths is None or W == T
+                   else jnp.minimum(lengths, W))
     dec_out, _ = rnn.run_stack(params["decoder"], dec_in, dec_masks, cfg.mcd.p,
                                backend=backend, rows=rows, seed=cfg.mcd.seed,
-                               layer_offset=cfg.num_layers, lengths=lengths,
+                               layer_offset=cfg.num_layers, lengths=dec_lengths,
                                cell=cfg.cell, mesh=mesh, policy=policy,
                                precision=precision)
     y = linear.dense(params["head"], dec_out)

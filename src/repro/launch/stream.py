@@ -26,9 +26,19 @@ knobs — swapping the winning config in at a tick boundary with every
 session's stream continuing bit-identically.  ``--decisions-out`` appends
 each ``DecisionRecord`` as a JSON line.
 
+``--tenants fleet.json`` switches to multi-tenant fleet serving (ISSUE 8):
+the JSON declares heterogeneous tenants — classifier or autoencoder, LSTM
+or GRU, each with its own S, precision and priority weight — and one
+``FleetEngine`` serves all of them per tick (same-config tenants fold into
+shared launch groups; admission is weighted-fair under overload).  The
+other serving flags (``--chunk-len``, ``--metrics-out``,
+``--snapshot-dir``, ``--resume``) apply fleet-wide.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.stream --sessions 4 --chunk-len 20 \
       --samples 8 --beats 2 --backend pallas_seq
+  PYTHONPATH=src python -m repro.launch.stream --tenants fleet.json \
+      --chunk-len 20 --metrics-out /tmp/fleet.jsonl
   PYTHONPATH=src python -m repro.launch.stream --sessions 4 --cell gru
   PYTHONPATH=src python -m repro.launch.stream --sessions 2 --overload 6 \
       --capacity auto --snapshot-dir /tmp/snap --snapshot-every 3
@@ -45,6 +55,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -52,10 +63,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import checkpoint
-from repro.core import classifier as clf, mcd
+from repro.core import autoencoder as ae, classifier as clf, mcd
 from repro.data import ecg
-from repro.serve import (JsonlSink, StreamingEngine, pow2_ladder, prewarm,
-                         summarize)
+from repro.serve import (FleetEngine, JsonlSink, StreamingEngine, TenantSpec,
+                         pow2_ladder, prewarm, summarize)
 
 
 def build_streams(n_sessions: int, beats: int, seed: int):
@@ -70,8 +81,163 @@ def build_streams(n_sessions: int, beats: int, seed: int):
     return streams, labels
 
 
+def load_fleet(path: str, default_seed: int):
+    """Parse a fleet JSON tenant table into ``TenantSpec``s + stream plans.
+
+    Schema (every per-tenant key optional except ``name``)::
+
+        {"admit_per_tick": 4, "aging_rounds": 16, "max_pending": 256,
+         "tenants": [
+           {"name": "ward", "task": "classifier", "cell": "lstm",
+            "hidden": 8, "layers": 2, "classes": 5, "samples": 4,
+            "p": 0.125, "placement": "YN", "weight": 3.0,
+            "precision": null, "backend": "pallas_seq",
+            "max_sessions": 4, "streams": 6, "beats": 2,
+            "decode_window": null, "seed": 0},
+           ...]}
+
+    ``streams`` is how many signals the tenant submits (> ``max_sessions``
+    overloads its row quota and exercises the weighted-fair queue);
+    ``decode_window`` truncates autoencoder replay to the last W steps.
+    Tenants declaring identical model spec *and* seed share one params
+    object, so the fleet folds them into a shared launch group.
+    """
+    with open(path) as fh:
+        doc = json.load(fh)
+    specs, plans, params_cache = [], {}, {}
+    for e in doc["tenants"]:
+        name = e["name"]
+        task = e.get("task", "classifier")
+        layers = int(e.get("layers", 2))
+        m = mcd.MCDConfig(
+            p=float(e.get("p", 0.125)),
+            placement=e.get("placement") or "Y" + "N" * (layers - 1),
+            n_samples=int(e.get("samples", 4)),
+            seed=int(e.get("seed", default_seed)))
+        if task == "classifier":
+            cfg = clf.ClassifierConfig(
+                hidden=int(e.get("hidden", 8)), num_layers=layers,
+                num_classes=int(e.get("classes", 5)),
+                cell=e.get("cell", "lstm"), mcd=m)
+            init = clf.init
+        elif task == "autoencoder":
+            cfg = ae.AutoencoderConfig(
+                hidden=int(e.get("hidden", 8)), num_layers=layers,
+                cell=e.get("cell", "lstm"), mcd=m,
+                decode_window=e.get("decode_window"))
+            init = ae.init
+        else:
+            raise ValueError(f"tenant {name!r}: unknown task {task!r} "
+                             "(classifier | autoencoder)")
+        key = (task, cfg, m.seed)
+        if key not in params_cache:
+            params_cache[key] = init(jax.random.key(m.seed), cfg)
+        max_sessions = int(e.get("max_sessions", 4))
+        specs.append(TenantSpec(
+            name=name, cfg=cfg, params=params_cache[key],
+            weight=float(e.get("weight", 1.0)),
+            precision=e.get("precision"),
+            backend=e.get("backend", "pallas_seq"),
+            max_sessions=max_sessions))
+        plans[name] = {"streams": int(e.get("streams", max_sessions)),
+                       "beats": int(e.get("beats", 2)),
+                       "seed": int(e.get("seed", default_seed))}
+    fleet_kw = {k: doc[k] for k in ("admit_per_tick", "aging_rounds",
+                                    "max_pending") if k in doc}
+    return specs, plans, fleet_kw
+
+
+def run_fleet(args):
+    """Serve a multi-tenant fleet declared by ``--tenants fleet.json``."""
+    specs, plans, fleet_kw = load_fleet(args.tenants, args.seed)
+    sink = JsonlSink(args.metrics_out) if args.metrics_out else None
+    fleet = FleetEngine(specs, metrics_sink=sink, **fleet_kw)
+    for g in fleet.groups.values():
+        print(f"launch group {g.name}: tenants={g.tenants}")
+    print(f"fleet of {len(specs)} tenant(s), "
+          f"admit_per_tick={fleet.admit_per_tick or 'eager'} | "
+          + " ".join(f"{s.name}[w={s.weight:g} rows={s.max_sessions} "
+                     f"streams={plans[s.name]['streams']}]" for s in specs))
+
+    # Streams regenerate deterministically from the tenant table, so a
+    # resume only needs the snapshot + the same fleet.json.
+    streams = {t: build_streams(p["streams"], p["beats"], p["seed"])[0]
+               for t, p in plans.items()}
+    planned = {t: [f"s{k}" for k in range(p["streams"])]
+               for t, p in plans.items()}
+    done: dict[str, set[str]] = {t: set() for t in plans}
+    if args.resume:
+        fleet.restore(args.snapshot_dir)
+        live = fleet.active_sessions
+        queued = {(t.tenant, t.sid.split("/", 1)[1])
+                  for t in fleet.queue.waiting()}
+        # Everything was admitted before the first snapshot, so a planned
+        # sid that is neither live nor queued has already finished.
+        for t in plans:
+            done[t] = {s for s in planned[t]
+                       if s not in live.get(t, []) and (t, s) not in queued}
+        print(f"resumed fleet tick {fleet.tick}: live={live} "
+              f"queued={sorted(queued)} "
+              f"done={ {t: sorted(v) for t, v in done.items() if v} }")
+    else:
+        for t in sorted(plans):
+            for k, s in enumerate(planned[t]):
+                went_live = fleet.admit(t, s, priority=len(planned[t]) - k)
+                print(f"admit {t}/{s}: "
+                      f"{'live' if went_live is not None else 'queued'}")
+
+    rng = np.random.default_rng(args.seed + 1)
+    total = sum(len(v) for v in planned.values())
+    while sum(len(v) for v in done.values()) < total:
+        chunks: dict[str, dict[str, jnp.ndarray]] = {}
+        for t, sids in fleet.active_sessions.items():
+            store = fleet.group_of(t).engine.store
+            for s in sids:
+                sig = streams[t][int(s[1:])]
+                pos = store.get(f"{t}/{s}").steps
+                if pos >= len(sig):
+                    continue
+                n = args.chunk_len
+                if args.ragged:
+                    n = int(rng.integers(1, args.chunk_len + 1))
+                chunks.setdefault(t, {})[s] = jnp.asarray(
+                    sig[pos:pos + n], jnp.float32)
+        results = fleet.step(chunks)
+        print(f"tick {fleet.tick:3d} | " + " ".join(
+            f"{t}:{len(results.get(t, {}))}r q={fleet.queue.depth_of(t)} "
+            f"done={len(done[t])}/{len(planned[t])}"
+            for t in sorted(plans)))
+        for t, sids in list(fleet.active_sessions.items()):
+            store = fleet.group_of(t).engine.store
+            for s in list(sids):
+                if store.get(f"{t}/{s}").steps >= len(streams[t][int(s[1:])]):
+                    sess = fleet.close(t, s)
+                    done[t].add(s)
+                    print(f"  {t}/{s}: served {sess.steps} steps in "
+                          f"{sess.chunks} chunks")
+        if args.snapshot_dir and fleet.tick % args.snapshot_every == 0:
+            path = fleet.snapshot(args.snapshot_dir)
+            checkpoint.keep_last(args.snapshot_dir, args.snapshot_keep)
+            print(f"  snapshot -> {path}")
+
+    agg = fleet.summarize()
+    for t, sub in sorted(agg.get("tenants", {}).items()):
+        print(f"{t}: {sub['ticks']} served tick(s) | "
+              f"p95 wait {sub['queue_wait_s_p95'] * 1e3:.2f}ms | "
+              f"dropped {sub['dropped']}")
+    if args.metrics_out:
+        fleet.metrics_sink.close()
+        print(f"tick metrics -> {args.metrics_out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", default=None, metavar="FLEET_JSON",
+                    help="multi-tenant fleet mode: serve the tenant table "
+                    "in this JSON file through one FleetEngine (see "
+                    "load_fleet for the schema); per-model flags below "
+                    "are ignored, serving flags (--chunk-len, --ragged, "
+                    "--metrics-out, --snapshot-*, --resume) apply")
     ap.add_argument("--sessions", type=int, default=4,
                     help="store capacity: concurrently-live streams")
     ap.add_argument("--overload", type=int, default=None,
@@ -146,6 +312,8 @@ def main():
     total = args.overload or args.sessions
     if args.resume and not args.snapshot_dir:
         ap.error("--resume requires --snapshot-dir")
+    if args.tenants:
+        return run_fleet(args)
 
     cfg = clf.ClassifierConfig(
         hidden=args.hidden, num_layers=args.layers, cell=args.cell,

@@ -5,16 +5,23 @@ Data plane: ``sessions`` (carried state + mask coordinates) and ``stream``
 bounded backpressure), ``persistence`` (crash-safe snapshots over
 ``repro.ckpt``), ``scheduler`` (adaptive launch shapes + tick metrics) and
 ``controller`` (online co-design: calibrated DSE over the live knobs,
-applied via prewarmed config swaps under an SLO).
+applied via prewarmed config swaps under an SLO).  Service plane:
+``fleet`` — heterogeneous tenants batched into per-config launch groups
+per tick, with weighted-fair shared admission, per-tenant metrics and one
+atomic fleet snapshot.
 """
 
-from repro.serve.admission import (AdmissionQueue, DrainRejected, QueueFull,
-                                   Ticket)
+from repro.serve.admission import (AdmissionQueue, DrainRejected,
+                                   FleetTicket, QueueFull, Ticket,
+                                   WeightedFairQueue)
 from repro.serve.controller import (CoDesignController, DecisionRecord,
-                                    KnobSpace, ServingConfig,
-                                    SimulatedLoadSink, SLOPolicy)
-from repro.serve.persistence import (load_snapshot_meta, restore_store,
-                                     snapshot_store)
+                                    FleetController, KnobSpace,
+                                    ServingConfig, SimulatedLoadSink,
+                                    SLOPolicy)
+from repro.serve.fleet import FleetEngine, TenantSpec
+from repro.serve.persistence import (load_fleet_meta, load_snapshot_meta,
+                                     restore_fleet, restore_store,
+                                     snapshot_fleet, snapshot_store)
 from repro.serve.scheduler import (AdaptiveTickScheduler, TickMetrics,
                                    pow2_ladder, prewarm, summarize)
 from repro.serve.sessions import CapacityError, Session, SessionStore
@@ -23,9 +30,11 @@ from repro.serve.stream import (ChunkResult, JsonlSink, MetricsSink,
 
 __all__ = ["AdmissionQueue", "AdaptiveTickScheduler", "CapacityError",
            "ChunkResult", "CoDesignController", "DecisionRecord",
-           "DrainRejected", "JsonlSink", "KnobSpace", "MetricsSink",
-           "QueueFull", "RingBufferSink", "SLOPolicy", "Session",
-           "SessionStore", "ServingConfig", "SimulatedLoadSink",
-           "StreamingEngine", "Ticket", "TickMetrics",
-           "load_snapshot_meta", "pow2_ladder", "prewarm", "restore_store",
+           "DrainRejected", "FleetController", "FleetEngine", "FleetTicket",
+           "JsonlSink", "KnobSpace", "MetricsSink", "QueueFull",
+           "RingBufferSink", "SLOPolicy", "Session", "SessionStore",
+           "ServingConfig", "SimulatedLoadSink", "StreamingEngine",
+           "TenantSpec", "Ticket", "TickMetrics", "WeightedFairQueue",
+           "load_fleet_meta", "load_snapshot_meta", "pow2_ladder", "prewarm",
+           "restore_fleet", "restore_store", "snapshot_fleet",
            "snapshot_store", "summarize"]

@@ -26,7 +26,8 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
-from typing import Iterator
+from collections import deque
+from typing import Callable, Iterator, Mapping
 
 from repro.serve.sessions import CapacityError, Session, SessionStore
 
@@ -178,3 +179,220 @@ class AdmissionQueue:
 
     def __iter__(self) -> Iterator[Ticket]:
         return iter(self.waiting())
+
+
+# ---------------------------------------------------------------------------
+# Weighted-fair admission across tenants (the fleet's shared queue)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FleetTicket(Ticket):
+    """One queued admission request, tagged with its owning tenant."""
+
+    tenant: str = ""
+    enqueued_round: int = 0     # drain round at submit (aging-guard clock)
+
+
+class WeightedFairQueue:
+    """One bounded admission queue shared by every tenant of a fleet.
+
+    ``submit`` tags each request with its tenant; ``drain`` hands free
+    capacity out **weighted-fair**: among tenants that have pending tickets
+    *and* room to admit, pick the one whose cumulative admitted count per
+    unit weight is smallest (stride scheduling), so under sustained overload
+    each tenant's share of admitted capacity converges to
+    ``weight_t / sum(weights of backlogged tenants)``.  Within a tenant the
+    order is strict FIFO — a tenant's own streams are peers; priority classes
+    across streams of one tenant belong in a per-tenant queue, not here.
+
+    Starvation guard: a head-of-line ticket that has waited
+    ``aging_rounds`` drain rounds is admitted *before* the weighted pick,
+    oldest first — a 1-weight tenant behind a 1000-weight tenant still
+    admits eventually, it just pays proportionally more latency.
+
+    The fairness state (cumulative per-tenant admitted counts + the round
+    counter) is part of the fleet's durable state: ``state()`` /
+    ``load_state`` round-trip it through fleet snapshots so a restored
+    fleet keeps the same long-run shares instead of resetting the ledger.
+    """
+
+    def __init__(self, weights: Mapping[str, float], *,
+                 max_pending: int = 256, aging_rounds: int = 16):
+        if not weights:
+            raise ValueError("need at least one tenant weight")
+        for name, w in weights.items():
+            if "/" in name:
+                raise ValueError(f"tenant name {name!r} may not contain '/' "
+                                 "(reserved for fleet sid namespacing)")
+            if not w > 0:
+                raise ValueError(f"tenant {name!r} weight must be > 0, "
+                                 f"got {w}")
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if aging_rounds < 1:
+            raise ValueError(f"aging_rounds must be >= 1, "
+                             f"got {aging_rounds}")
+        self.weights = {name: float(w) for name, w in weights.items()}
+        self.max_pending = int(max_pending)
+        self.aging_rounds = int(aging_rounds)
+        self._fifos: dict[str, deque[FleetTicket]] = {
+            name: deque() for name in self.weights}
+        self._admitted: dict[str, int] = {name: 0 for name in self.weights}
+        self._round = 0
+        self._seq = 0
+        self._sids: set[str] = set()
+
+    def submit(self, tenant: str, sid: str, *, priority: int = 0,
+               session: Session | None = None) -> FleetTicket:
+        """Queue an admission (or re-attach) request for ``tenant``."""
+        if tenant not in self._fifos:
+            raise KeyError(f"unknown tenant {tenant!r} "
+                           f"(fleet serves {sorted(self._fifos)})")
+        if session is not None and session.sid != sid:
+            raise ValueError(f"ticket sid {sid!r} != session.sid "
+                             f"{session.sid!r}")
+        if sid in self._sids:
+            raise ValueError(f"session {sid!r} already queued")
+        if len(self._sids) >= self.max_pending:
+            raise QueueFull(
+                f"fleet admission queue full ({self.max_pending} pending); "
+                "shed load upstream or raise max_pending")
+        ticket = FleetTicket(sid=sid, priority=int(priority), seq=self._seq,
+                             session=session,
+                             submitted_at=time.monotonic(),
+                             tenant=tenant, enqueued_round=self._round)
+        self._seq += 1
+        self._sids.add(sid)
+        self._fifos[tenant].append(ticket)
+        return ticket
+
+    def cancel(self, sid: str) -> bool:
+        """Withdraw a waiting request; False if it was not queued."""
+        if sid not in self._sids:
+            return False
+        self._sids.discard(sid)
+        for fifo in self._fifos.values():
+            for ticket in fifo:
+                if ticket.sid == sid:
+                    fifo.remove(ticket)
+                    return True
+        return True
+
+    def drain(self, admit: Callable[[FleetTicket], Session],
+              has_room: Callable[[str], bool],
+              budget: int | None = None) -> list[FleetTicket]:
+        """Admit pending tickets weighted-fair until no tenant can take more.
+
+        Args:
+          admit: callback taking a :class:`FleetTicket` and returning the
+            live :class:`Session` (the fleet routes it into the ticket's
+            tenant's launch group).  A ``ValueError``/``CapacityError`` it
+            raises marks the ticket rejected (dropped — it could never
+            succeed later) without poisoning the rest of the drain.
+          has_room: per-tenant eligibility — False freezes that tenant's
+            FIFO for this drain (its group store is full).
+          budget: at most this many admissions this drain (None:
+            unbounded).  The budget is the *shared* capacity the weights
+            ration: with every tenant backlogged and roomy, a per-tick
+            budget B splits as ``B · w_t / Σw`` — without one, each tenant
+            simply fills its own free rows and the weights never bind.
+
+        Returns the admitted tickets in admission order.  Raises
+        :class:`DrainRejected` (admitted tickets + rejects attached) after
+        the drain completes if any ticket was refused.
+        """
+        self._round += 1
+        admitted: list[FleetTicket] = []
+        rejected: list[tuple[FleetTicket, Exception]] = []
+        left = float("inf") if budget is None else int(budget)
+
+        def _take(ticket: FleetTicket) -> None:
+            nonlocal left
+            self._fifos[ticket.tenant].popleft()
+            self._sids.discard(ticket.sid)
+            try:
+                admit(ticket)
+            except (ValueError, CapacityError) as err:
+                # Rejects don't consume budget — a poison ticket must not
+                # cost a healthy one its slot.
+                rejected.append((ticket, err))
+                return
+            self._admitted[ticket.tenant] += 1
+            admitted.append(ticket)
+            left -= 1
+
+        # Aging guard first: head tickets older than the guard go straight
+        # in (oldest enqueue round first), bypassing the weighted pick.
+        while left > 0:
+            stale = [f[0] for name, f in self._fifos.items()
+                     if f and has_room(name)
+                     and self._round - f[0].enqueued_round
+                     >= self.aging_rounds]
+            if not stale:
+                break
+            _take(min(stale, key=lambda t: (t.enqueued_round, t.seq)))
+
+        # Weighted-fair: repeatedly admit from the eligible tenant with the
+        # lowest admitted/weight pass (deterministic name tiebreak).
+        while left > 0:
+            eligible = [name for name, f in self._fifos.items()
+                        if f and has_room(name)]
+            if not eligible:
+                break
+            name = min(eligible,
+                       key=lambda n: (self._admitted[n] / self.weights[n], n))
+            _take(self._fifos[name][0])
+        if rejected:
+            raise DrainRejected(admitted, rejected)
+        return admitted
+
+    def oldest_wait_s(self, tenant: str | None = None,
+                      now: float | None = None) -> float:
+        """Head-of-line age (s) — fleet-wide, or one tenant's own FIFO."""
+        fifos = ([self._fifos[tenant]] if tenant is not None
+                 else self._fifos.values())
+        heads = [f[0].submitted_at for f in fifos if f]
+        if not heads:
+            return 0.0
+        now = time.monotonic() if now is None else now
+        return max(0.0, now - min(heads))
+
+    def waiting(self, tenant: str | None = None) -> list[FleetTicket]:
+        """Pending tickets (one tenant's FIFO, or all tenants, FIFO order)."""
+        if tenant is not None:
+            return list(self._fifos[tenant])
+        out = [t for f in self._fifos.values() for t in f]
+        return sorted(out, key=lambda t: t.seq)
+
+    def shares(self) -> dict[str, float]:
+        """Cumulative admitted-capacity share per tenant (sums to 1.0)."""
+        total = sum(self._admitted.values())
+        if not total:
+            return {name: 0.0 for name in self._admitted}
+        return {name: n / total for name, n in self._admitted.items()}
+
+    @property
+    def depth(self) -> int:
+        return len(self._sids)
+
+    def depth_of(self, tenant: str) -> int:
+        return len(self._fifos[tenant])
+
+    def __len__(self) -> int:
+        return len(self._sids)
+
+    def __contains__(self, sid: str) -> bool:
+        return sid in self._sids
+
+    # -- persistence hooks (repro.serve.persistence fleet snapshots) ---------
+    def state(self) -> dict:
+        """Fairness ledger + round/seq cursors (tickets serialize apart)."""
+        return {"admitted": dict(self._admitted), "round": self._round,
+                "seq": self._seq}
+
+    def load_state(self, state: dict) -> None:
+        for name, n in (state.get("admitted") or {}).items():
+            if name in self._admitted:
+                self._admitted[name] = int(n)
+        self._round = int(state.get("round", 0))
+        self._seq = max(self._seq, int(state.get("seq", 0)))

@@ -187,6 +187,8 @@ class DecisionRecord:
     slo: dict
     fit: dict | None       # RooflineFit, asdict
     candidates: list = dataclasses.field(default_factory=list)
+    tenant: str | None = None   # owning tenant when a FleetController made
+                                # the call (None: single-engine controller)
 
 
 class SimulatedLoadSink(RingBufferSink):
@@ -661,7 +663,7 @@ class CoDesignController:
 
     # -- derivation helpers --------------------------------------------------
     @staticmethod
-    def _derive_config(engine: StreamingEngine) -> ServingConfig:
+    def _derive_config(engine: "StreamingEngine") -> ServingConfig:
         if engine._scheduler is not None:
             cap = engine._scheduler.max_capacity
         elif isinstance(engine.chunk_capacity, int):
@@ -686,3 +688,77 @@ class CoDesignController:
                        weight_bits=_WEIGHT_BITS[config.precision],
                        input_dim=cfg.input_dim, output_dim=out_dim,
                        timesteps=config.chunk_capacity or 1)
+
+
+class FleetController:
+    """Per-tenant co-design over a fleet: one SLO loop per tenant.
+
+    Wraps one *detached* :class:`CoDesignController` per tenant with an
+    SLO (``TenantSpec.slo``, or the ``slos`` override).  Each tenant's
+    controller sees only that tenant's tagged slice of the fleet metrics
+    trail, derives its config/arch from the tenant's own launch group, and
+    scopes its knob grid to that tenant's live knobs — a breach on the
+    GRU-autoencoder tenant downshifts *its* S, never the classifier's.
+
+    Applied decisions go through :meth:`FleetEngine.reconfigure_tenant`
+    (the tenant's sessions move to a dedicated group, carries converted
+    bit-safely); every decision — applied or refused — is emitted to the
+    shared decision sink tagged with ``DecisionRecord.tenant``.
+    """
+
+    def __init__(self, fleet, *, slos=None, knobs=None, decision_sink=None,
+                 **ctrl_kwargs):
+        """``fleet``: a :class:`~repro.serve.fleet.FleetEngine`.
+
+        ``slos``: {tenant: SLOPolicy} overriding/extending the specs' own;
+        tenants without an SLO from either source are left unmanaged.
+        ``knobs``: {tenant: KnobSpace} per-tenant grid override.
+        ``ctrl_kwargs`` forward to every per-tenant controller (window,
+        min_ticks, cooldown_ticks, ...).
+        """
+        self.fleet = fleet
+        self.decision_sink = decision_sink or RingBufferSink()
+        slos = dict(slos or {})
+        for name, spec in fleet.specs.items():
+            if name not in slos and spec.slo is not None:
+                slos[name] = spec.slo
+        self.controllers: dict[str, CoDesignController] = {}
+        for name, slo in slos.items():
+            engine = fleet.group_of(name).engine
+            config = CoDesignController._derive_config(engine)
+            self.controllers[name] = CoDesignController(
+                None, slo, config=config,
+                arch=CoDesignController._derive_arch(engine, config),
+                slots=engine.max_sessions if engine._fixed else None,
+                knobs=(knobs or {}).get(name),
+                decision_sink=RingBufferSink(4), **ctrl_kwargs)
+
+    @property
+    def decisions(self) -> list:
+        return list(self.decision_sink.window())
+
+    def maybe_reconfigure(self) -> list[DecisionRecord]:
+        """Run every tenant's loop once; apply winners; return the records.
+
+        Call once per fleet tick, after ``fleet.step``.  Per tenant: plan
+        on the tenant's metric slice; an applied plan reconfigures just
+        that tenant (and resets its observation window); refusals record
+        with the same cooldown the single-engine controller keeps.
+        """
+        out: list[DecisionRecord] = []
+        trail = list(self.fleet.metrics)
+        for name, ctrl in self.controllers.items():
+            win = [m for m in trail if m.tenant == name]
+            rec = ctrl.plan(metrics=win)
+            if rec is None:
+                continue
+            if rec.applied:
+                self.fleet.reconfigure_tenant(name,
+                                              ServingConfig(**rec.winner))
+                ctrl.mark_applied(rec)
+            else:
+                ctrl._cooldown_until = rec.tick + ctrl.cooldown_ticks
+            rec = dataclasses.replace(rec, tenant=name)
+            self.decision_sink.emit(rec)
+            out.append(rec)
+        return out

@@ -103,21 +103,15 @@ def _rebuild_session(sid: str, meta: dict, arrays: dict, seed) -> Session:
                    chunks=int(meta["chunks"]))
 
 
-def snapshot_store(directory: str, store: SessionStore, *,
-                   step: int | None = None, queue: AdmissionQueue | None = None,
-                   extra: dict | None = None) -> str:
-    """Atomically snapshot a store (and optionally its admission queue).
+def _store_tree_meta(store: SessionStore, used: set[str],
+                     extra: dict | None = None) -> tuple[dict, dict]:
+    """One store's checkpoint tree + structural meta (no queue, no save).
 
-    ``step`` defaults to one past the latest snapshot in ``directory`` (a
-    monotone history; prune with ``ckpt.keep_last``).  ``extra`` is caller
-    JSON riding in the manifest (engines stash tick counters etc. there).
-    Returns the snapshot path.
+    The shared core of :func:`snapshot_store` and :func:`snapshot_fleet` —
+    the fleet commits one of these per launch group under a single
+    manifest, with ``extra`` carrying that group's engine meta.
     """
-    if step is None:
-        latest = ckpt.latest_step(directory)
-        step = 0 if latest is None else latest + 1
     tree: dict = {}
-    used: set[str] = set()
     meta: dict = {
         "format": FORMAT_VERSION,
         "n_samples": store.n_samples,
@@ -131,6 +125,26 @@ def snapshot_store(directory: str, store: SessionStore, *,
         key = _tree_key(sess.sid, used)
         tree[key] = _session_tree(sess)
         meta["sessions"][sess.sid] = dict(_session_meta(sess), key=key)
+    if extra is not None:
+        meta["extra"] = extra
+    return tree, meta
+
+
+def snapshot_store(directory: str, store: SessionStore, *,
+                   step: int | None = None, queue: AdmissionQueue | None = None,
+                   extra: dict | None = None) -> str:
+    """Atomically snapshot a store (and optionally its admission queue).
+
+    ``step`` defaults to one past the latest snapshot in ``directory`` (a
+    monotone history; prune with ``ckpt.keep_last``).  ``extra`` is caller
+    JSON riding in the manifest (engines stash tick counters etc. there).
+    Returns the snapshot path.
+    """
+    if step is None:
+        latest = ckpt.latest_step(directory)
+        step = 0 if latest is None else latest + 1
+    used: set[str] = set()
+    tree, meta = _store_tree_meta(store, used, extra)
     if queue is not None:
         for ticket in queue.waiting():
             entry = {"sid": ticket.sid, "priority": ticket.priority,
@@ -143,8 +157,6 @@ def snapshot_store(directory: str, store: SessionStore, *,
                 entry["session"] = dict(_session_meta(ticket.session),
                                         key=key)
             meta["queue"].append(entry)
-    if extra is not None:
-        meta["extra"] = extra
     return ckpt.save(directory, step, tree, meta=meta)
 
 
@@ -227,3 +239,147 @@ def restore_store(directory: str, *, step: int | None = None,
             queue.submit(entry["sid"], priority=entry["priority"],
                          session=sess)
     return store, meta
+
+
+# ---------------------------------------------------------------------------
+# Fleet snapshots — every launch group under one atomic manifest
+# ---------------------------------------------------------------------------
+
+FLEET_FORMAT_VERSION = 1
+
+
+def snapshot_fleet(directory: str, *, groups, tenants: dict, queue,
+                   fair: dict, tick: int, step: int | None = None) -> str:
+    """Atomically snapshot a whole fleet: N stores, one ``os.replace``.
+
+    Args:
+      groups: ``{group name: (SessionStore, engine meta dict)}`` — one per
+        launch group; the engine meta is what
+        ``StreamingEngine._engine_meta`` builds (validated per group on
+        restore by ``_check_restore_meta``).
+      tenants: JSON tenant table ``{name: {"group": ..., "weight": ...}}``.
+      queue: the fleet's pending :class:`~repro.serve.admission.FleetTicket`
+        list (``WeightedFairQueue.waiting()``); attached re-attach carries
+        are serialized with session fidelity under their tenant's group.
+      fair: the fairness ledger (``WeightedFairQueue.state()``) — restored
+        so long-run admitted shares survive the crash instead of resetting.
+      tick: the fleet tick counter.
+
+    A crash mid-save can never leave a readable-but-partial fleet: arrays
+    for every group and all bookkeeping commit in the one manifest.
+    """
+    if step is None:
+        latest = ckpt.latest_step(directory)
+        step = 0 if latest is None else latest + 1
+    tree: dict = {}
+    used_by_group: dict[str, set[str]] = {}
+    meta: dict = {
+        "fleet_format": FLEET_FORMAT_VERSION,
+        "tick": int(tick),
+        "tenants": dict(tenants),
+        "fair": dict(fair),
+        "groups": {},
+        "queue": [],
+    }
+    for gname, (store, engine_meta) in groups.items():
+        used = used_by_group.setdefault(gname, set())
+        g_tree, g_meta = _store_tree_meta(store, used, engine_meta)
+        tree[gname] = g_tree
+        meta["groups"][gname] = g_meta
+    for ticket in queue:
+        tenant = ticket.tenant
+        gname = tenants[tenant]["group"]
+        entry = {"tenant": tenant, "sid": ticket.sid,
+                 "priority": ticket.priority,
+                 "attached": ticket.session is not None}
+        if ticket.session is not None:
+            key = _tree_key(ticket.sid, used_by_group.setdefault(gname,
+                                                                 set()))
+            tree.setdefault(gname, {})[key] = _session_tree(ticket.session)
+            entry["session"] = dict(_session_meta(ticket.session),
+                                    key=key, group=gname)
+        meta["queue"].append(entry)
+    return ckpt.save(directory, step, tree, meta=meta)
+
+
+def load_any_snapshot_meta(directory: str, step: int | None = None) -> dict:
+    """Peek a snapshot's meta, fleet or single-engine layout alike.
+
+    Returns the meta with ``"step"`` resolved; the caller branches on
+    layout (``"sessions"`` key: single engine; ``"groups"``: fleet).
+    """
+    if step is None:
+        step = ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no snapshot under {directory!r}")
+    meta = ckpt.load_meta(directory, step)
+    if meta is None or not ("sessions" in meta or "groups" in meta):
+        raise IOError(f"{directory!r} step {step} is not a session or "
+                      "fleet snapshot")
+    meta["step"] = step
+    return meta
+
+
+def load_fleet_meta(directory: str, step: int | None = None) -> dict:
+    """The fleet snapshot's meta dict (typed errors on the wrong layout)."""
+    meta = load_any_snapshot_meta(directory, step)
+    if "groups" not in meta:
+        raise IOError(
+            f"{directory!r} step {meta['step']} is a single-engine session "
+            "snapshot, not a fleet snapshot — restore it through a "
+            "one-tenant FleetEngine (or a StreamingEngine)")
+    if meta.get("fleet_format") != FLEET_FORMAT_VERSION:
+        raise IOError(f"fleet snapshot format {meta.get('fleet_format')!r}, "
+                      f"expected {FLEET_FORMAT_VERSION}")
+    for gname, g_meta in meta["groups"].items():
+        if g_meta.get("format") != FORMAT_VERSION:
+            raise IOError(f"group {gname!r} snapshot format "
+                          f"{g_meta.get('format')!r}, "
+                          f"expected {FORMAT_VERSION}")
+    return meta
+
+
+def restore_fleet(directory: str, step: int | None = None,
+                  ) -> tuple[dict, dict]:
+    """Rebuild every launch group's store from one fleet manifest.
+
+    Returns ``(meta, {group name: (SessionStore, group meta)})``; queued
+    re-attach carries are rebuilt and attached to their ``meta["queue"]``
+    entries as ``entry["session_obj"]`` (None for fresh wait-list entries),
+    so the caller refills its fleet queue without touching arrays itself.
+    Restores everything — partial (per-sid) restores stay a single-engine
+    feature; shedding a tenant is a fleet-level reconfiguration, not a
+    restore-time filter.
+    """
+    meta = load_fleet_meta(directory, step)
+    step = meta["step"]
+    like: dict = {}
+    for gname, g_meta in meta["groups"].items():
+        g_like = {smeta["key"]: _session_like(smeta)
+                  for smeta in g_meta["sessions"].values()}
+        if g_like:
+            like[gname] = g_like
+    for entry in meta["queue"]:
+        if entry["attached"]:
+            smeta = entry["session"]
+            like.setdefault(smeta["group"], {})[smeta["key"]] = \
+                _session_like(smeta)
+    loaded = ckpt.restore(directory, step, like, partial=True) if like else {}
+    stores: dict = {}
+    for gname, g_meta in meta["groups"].items():
+        store = SessionStore(g_meta["n_samples"], g_meta["seed"],
+                             max_sessions=g_meta["max_sessions"],
+                             first_row=int(g_meta["next_row"]))
+        for sid, smeta in g_meta["sessions"].items():
+            store.attach(_rebuild_session(
+                sid, smeta, loaded[gname][smeta["key"]], g_meta["seed"]))
+        stores[gname] = (store, g_meta)
+    for entry in meta["queue"]:
+        entry["session_obj"] = None
+        if entry["attached"]:
+            smeta = entry["session"]
+            g_meta = meta["groups"][smeta["group"]]
+            entry["session_obj"] = _rebuild_session(
+                entry["sid"], smeta, loaded[smeta["group"]][smeta["key"]],
+                g_meta["seed"])
+    return meta, stores

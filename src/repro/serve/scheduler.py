@@ -69,6 +69,13 @@ class TickMetrics:
                            # tick with compiles > 0 is a compile stall, not
                            # overload — the co-design controller and any
                            # operator reading the JSONL trail need the split)
+    dropped: int = 0       # admissions the store refused this tick (tickets
+                           # drained out of the queue that could never go
+                           # live — previously visible only in the engine's
+                           # in-memory dropped_admissions deque)
+    tenant: str | None = None  # owning tenant when the record came from a
+                               # FleetEngine tick (None: single-tenant
+                               # engine); summarize() groups on it
 
 
 class AdaptiveTickScheduler:
@@ -213,6 +220,12 @@ def summarize(metrics: Sequence[TickMetrics]) -> dict:
     count), queue depth, chain-timesteps/sec.  Latency and throughput come
     as p50/p95 too, not just means — an SLO is a tail guarantee, and the
     mean hides exactly the slow ticks the controller must react to.
+
+    Fleet trails carry tenant-tagged records (``TickMetrics.tenant``).
+    When any are present the roll-up gains a ``"tenants"`` key: per-tenant
+    sub-summaries over that tenant's own records, so each tenant's SLO
+    (queue_wait_s_p95, duration_s_p95, dropped) is read off its own slice
+    rather than the fleet mix.
     """
     if not metrics:
         return {"ticks": 0}
@@ -221,7 +234,7 @@ def summarize(metrics: Sequence[TickMetrics]) -> dict:
     dur = sum(m.duration_s for m in metrics)
     durs = [m.duration_s for m in metrics]
     tps = [m.tokens_per_sec for m in metrics]
-    return {
+    out = {
         "ticks": len(metrics),
         "capacities_used": sorted({m.capacity for m in metrics}),
         "live_chain_steps": live,
@@ -236,4 +249,14 @@ def summarize(metrics: Sequence[TickMetrics]) -> dict:
         "tokens_per_sec_p95": percentile(tps, 95),
         "queue_wait_s_p95": percentile([m.queue_wait_s for m in metrics], 95),
         "compiles": sum(m.compiles for m in metrics),
+        "dropped": sum(m.dropped for m in metrics),
     }
+    tenants = sorted({m.tenant for m in metrics if m.tenant is not None})
+    if tenants:
+        # Sub-summaries see tenant-stripped copies — a tagged record must
+        # not spawn a second "tenants" level inside its own slice.
+        out["tenants"] = {
+            name: summarize([dataclasses.replace(m, tenant=None)
+                             for m in metrics if m.tenant == name])
+            for name in tenants}
+    return out

@@ -268,6 +268,12 @@ class StreamingEngine:
         # last).  A drain rejection concerns the ticket's *owner*, not
         # whichever caller happened to trigger the drain — see _drain.
         self.dropped_admissions: deque = deque(maxlen=metrics_window)
+        # Drops not yet surfaced in a TickMetrics record.  The deque above
+        # is in-memory only; the metrics trail is the durable record, so
+        # every drop — whether it happened inside step()'s drain or between
+        # ticks in admit()/close_session() — lands in the next tick's
+        # ``dropped`` count.
+        self._dropped_unreported = 0
 
     # -- session lifecycle ---------------------------------------------------
     def open_session(self, sid: str):
@@ -316,8 +322,9 @@ class StreamingEngine:
             # "queued" — the ticket is gone and would never go live.
             # Other sessions' poison is contained as in _drain.
             mine = next((e for t, e in err.rejected if t.sid == sid), None)
-            self.dropped_admissions.extend(
-                (t, e) for t, e in err.rejected if t.sid != sid)
+            others = [(t, e) for t, e in err.rejected if t.sid != sid]
+            self.dropped_admissions.extend(others)
+            self._dropped_unreported += len(others)
             if mine is not None:
                 raise mine from err
         live = self.store
@@ -347,6 +354,7 @@ class StreamingEngine:
             return self.queue.drain(self.store)
         except DrainRejected as err:
             self.dropped_admissions.extend(err.rejected)
+            self._dropped_unreported += len(err.rejected)
             return err.admitted
 
     @property
@@ -380,6 +388,17 @@ class StreamingEngine:
         why restore is bit-exact.  Model params ride the training
         checkpoint, not the session snapshot.
         """
+        return _persist.snapshot_store(directory, self.store, step=step,
+                                       queue=self.queue,
+                                       extra=self._engine_meta(extra))
+
+    def _engine_meta(self, extra: dict | None = None) -> dict:
+        """The per-engine snapshot meta — validated by :meth:`restore`.
+
+        Factored out so a :class:`~repro.serve.fleet.FleetEngine` snapshot
+        can embed one of these per launch group under a single atomic
+        manifest and reuse the exact same restore-time validation.
+        """
         engine_meta = {"tick": self.tick, "kind": self.kind,
                        "backend": self.backend, "cell": self.cell,
                        # Validated on restore: the carry dtypes (h in the
@@ -399,8 +418,7 @@ class StreamingEngine:
             engine_meta["sched"] = self._scheduler.state()
         if extra is not None:
             engine_meta["extra"] = extra
-        return _persist.snapshot_store(directory, self.store, step=step,
-                                       queue=self.queue, extra=engine_meta)
+        return engine_meta
 
     def restore(self, directory: str, *, step: int | None = None,
                 sids: list[str] | None = None) -> dict:
@@ -425,6 +443,17 @@ class StreamingEngine:
         store, meta = _persist.restore_store(
             directory, step=peek["step"], sids=sids, queue=queue,
             max_sessions=self.max_sessions)
+        engine_meta = self._check_restore_meta(meta)
+        self._adopt(store, queue, engine_meta)
+        return engine_meta.get("extra", {})
+
+    def _check_restore_meta(self, meta: dict) -> dict:
+        """Validate snapshot meta against this engine; return its engine meta.
+
+        Shared by :meth:`restore` and the fleet restore path — every typed
+        mismatch error below fires identically whether the snapshot is a
+        standalone engine's or one launch group inside a fleet manifest.
+        """
         if meta["n_samples"] != self.n_samples:
             raise ValueError(
                 f"snapshot serves {meta['n_samples']} MC chains/session, "
@@ -466,12 +495,16 @@ class StreamingEngine:
             raise ValueError(
                 f"snapshot streamed under mcd {snap_mcd}, engine uses "
                 f"{here_mcd} — resuming would silently change the masks")
+        return engine_meta
+
+    def _adopt(self, store: SessionStore, queue: AdmissionQueue,
+               engine_meta: dict) -> None:
+        """Take over a restored store/queue + validated engine meta."""
         self.store = store
         self.queue = queue
         self.tick = int(engine_meta.get("tick", 0))
         if self._scheduler is not None and "sched" in engine_meta:
             self._scheduler.load_state(engine_meta["sched"])
-        return engine_meta.get("extra", {})
 
     # -- serving -------------------------------------------------------------
     def step(self, chunks: Mapping[str, Any]) -> dict[str, ChunkResult]:
@@ -556,13 +589,17 @@ class StreamingEngine:
                 mu.astype(jnp.float32),
                 None if lv is None else lv.astype(jnp.float32))
 
+        # Windowed-decoder AEs reconstruct only min(L, W) positions per chunk
+        # — the valid slice is capped by the decode window, not the chunk.
+        win = getattr(self.cfg, "decode_window", None)
         results: dict[str, ChunkResult] = {}
         for k, (sess, L) in enumerate(zip(sessions, lens)):
             sl = slice(k * s, (k + 1) * s)
             if self.kind == "classifier":
                 summary = ClassificationSummary(*(v[k] for v in batched))
             else:
-                summary = RegressionSummary(*(v[k, :L] for v in batched))
+                valid = L if win is None else min(L, win)
+                summary = RegressionSummary(*(v[k, :valid] for v in batched))
             sess.state = [tuple(part[sl] for part in layer)
                           for layer in states]
             sess.steps += L
@@ -585,10 +622,16 @@ class StreamingEngine:
             duration_s=dur,
             tokens_per_sec=live_steps * s / dur if dur > 0 else 0.0,
             shards=self._shards, queue_wait_s=queue_wait_s,
-            compiles=stack_compile_count() - compiles_before)
+            compiles=stack_compile_count() - compiles_before,
+            dropped=self._take_dropped())
         self.metrics_sink.emit(m)
         self.tick += 1
         return results
+
+    def _take_dropped(self) -> int:
+        """Drops accumulated since the last metrics record (and reset)."""
+        n, self._dropped_unreported = self._dropped_unreported, 0
+        return n
 
     def _slot_count(self, n_sessions: int) -> int:
         """Session slots a tick launches with — the batch-layout contract.

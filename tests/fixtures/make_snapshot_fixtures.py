@@ -12,6 +12,10 @@ still loads them:
 * ``pr4_gru/`` — the variable-arity layout: ``parts`` records the carry
   tuple length (1 for GRU), ``extra`` has ``cell`` but still no
   ``precision``.
+* ``fleet_v1/`` — the first multi-tenant fleet layout (``fleet_format: 1``):
+  one manifest holding per-group store trees plus the tenant table, the
+  shared queue and the fairness ledger.  Written at the layout's birth so
+  later fleet-format evolution keeps a restore path for it.
 
 Arrays are seeded, so re-running reproduces the same bytes:
 
@@ -60,6 +64,42 @@ def _write(name, *, parts, extra, include_parts_key):
     return root
 
 
+def _write_fleet():
+    """The fleet_v1 layout: two tenants sharing launch group ``g0``."""
+    rng = np.random.default_rng(5678)
+    root = os.path.join(HERE, "snapshots", "fleet_v1")
+    if os.path.exists(root):
+        shutil.rmtree(root)
+    g_tree, sessions = {}, {}
+    for i, (gsid, steps, chunks) in enumerate(
+            (("ward/p1", 7, 2), ("anom/p1", 4, 1))):
+        key = gsid.replace("/", "_")             # the recorded tree key
+        g_tree[key] = {"rows": np.arange(N_SAMPLES, dtype=np.uint32)
+                       + i * N_SAMPLES,
+                       "state": _carry(rng, 2)}
+        sessions[gsid] = {"steps": steps, "chunks": chunks,
+                          "layers": NUM_LAYERS, "parts": 2, "key": key}
+    g_meta = {"format": 1, "n_samples": N_SAMPLES, "seed": SEED,
+              "max_sessions": 8, "next_row": 2 * N_SAMPLES,
+              "sessions": sessions, "queue": [],
+              "extra": {"tick": 3, "kind": "classifier",
+                        "backend": "pallas_seq", "cell": "lstm",
+                        "precision": None, "data_shards": 1,
+                        "mcd": {"p": 0.125, "placement": "YN"}}}
+    tenant = {"n_samples": N_SAMPLES, "precision": None,
+              "backend": "pallas_seq", "group": "g0"}
+    meta = {"fleet_format": 1, "tick": 3,
+            "tenants": {"ward": dict(tenant, weight=3.0),
+                        "anom": dict(tenant, weight=1.0)},
+            "fair": {"admitted": {"ward": 3, "anom": 1},
+                     "round": 5, "seq": 4},
+            "groups": {"g0": g_meta},
+            "queue": [{"tenant": "ward", "sid": "ward/p2",
+                       "priority": 1, "attached": False}]}
+    ckpt.save(root, 0, {"g0": g_tree}, meta=meta)
+    return root
+
+
 def main():
     _write("pr3_lstm", parts=2, include_parts_key=False,
            extra={"tick": 2, "kind": "classifier", "backend": "pallas_seq"})
@@ -67,6 +107,7 @@ def main():
            extra={"tick": 2, "kind": "classifier", "backend": "pallas_seq",
                   "cell": "gru",
                   "mcd": {"p": 0.125, "placement": "YN"}})
+    _write_fleet()
     print("fixtures written under", os.path.join(HERE, "snapshots"))
 
 

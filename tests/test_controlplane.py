@@ -144,6 +144,34 @@ class TestAdmissionQueue:
         (ticket, err), = eng.dropped_admissions
         assert ticket.sid == "clash" and "collide" in str(err)
 
+    def test_dropped_threads_through_metrics(self, tmp_path):
+        """Regression (ISSUE 8): drops were visible only in the in-memory
+        ``dropped_admissions`` deque — invisible to the JSONL trail and
+        ``summarize``.  A mid-drain reject must land as ``dropped`` on the
+        next tick's TickMetrics, serialize through JsonlSink, sum in
+        summarize, and reset (not double-report) on the following tick."""
+        cfg, params = _cfg_params()
+        path = tmp_path / "ticks.jsonl"
+        sink = JsonlSink(str(path))
+        eng = StreamingEngine(params, cfg, max_sessions=2,
+                              metrics_sink=sink)
+        eng.open_session("live1")                    # rows 0..2
+        eng.open_session("hog")
+        clash = SessionStore(n_samples=3, seed=3).admit("clash")
+        eng.admit("clash", priority=9, session=clash)
+        eng.close_session("hog")                     # drain drops "clash"
+        assert len(eng.dropped_admissions) == 1
+        m1 = (eng.step({"live1": jnp.ones((2, 1))}), eng.last_metrics)[1]
+        assert m1.dropped == 1
+        m2 = (eng.step({"live1": jnp.ones((2, 1))}), eng.last_metrics)[1]
+        assert m2.dropped == 0                       # reported once
+        assert summarize(list(eng.metrics))["dropped"] == 1
+        recs = [__import__("json").loads(line)
+                for line in path.read_text().splitlines()]
+        assert [r["dropped"] for r in recs] == [1, 0]
+        assert all(r["tenant"] is None for r in recs)
+        sink.close()
+
     def test_admit_reraises_own_tickets_rejection(self):
         """When the synchronous drain inside admit() rejects the caller's
         OWN ticket, admit must raise — returning None would read as

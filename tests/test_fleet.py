@@ -1,0 +1,591 @@
+"""Multi-tenant fleet serving: heterogeneity, weighted fairness, durability.
+
+The ISSUE 8 acceptance pins live here:
+
+* **Heterogeneity** (``TestHeterogeneityPin``): a fleet tick serving >= 2
+  tenants with different (cell, H, S, precision) is bit-identical, per
+  session, to each tenant served alone in a single-tenant
+  ``StreamingEngine`` from the same carried state — across backends, chunk
+  splits, and a fleet kill -> snapshot -> restore in the middle of a
+  stream.  This is PR 2/6's batch-composition + chunk-split invariance
+  promoted to the tenant level: a shared launch group is *the same* batched
+  launch a solo engine would run, just with more rows.
+* **Fairness** (``TestWeightedFairness``): under sustained overload the
+  admitted-capacity shares converge to the tenant weights, order within a
+  tenant stays FIFO, and the aging guard un-starves a low-weight tenant
+  that the stride pick alone would leave queued (skewed ledger +
+  replenishing backlog — the scenario where pure stride scheduling fails).
+* **Observability** (``TestPerTenantObservability``): every fleet tick
+  lands one tenant-tagged ``TickMetrics`` per involved tenant; per-tenant
+  ``queue_wait_s``/``dropped`` read off ``summarize()["tenants"]`` and the
+  JSONL trail.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autoencoder as ae, classifier as clf, mcd
+from repro.serve import (CapacityError, FleetController, FleetEngine,
+                         JsonlSink, QueueFull, SLOPolicy, SessionStore,
+                         StreamingEngine, TenantSpec, TickMetrics,
+                         WeightedFairQueue, load_fleet_meta, summarize)
+
+BACKENDS = ("reference", "pallas_step", "pallas_seq")
+
+
+def _clf_cfg(s=3, seed=3, hidden=8, cell="lstm"):
+    return clf.ClassifierConfig(
+        hidden=hidden, num_layers=2, num_classes=4, cell=cell,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s, seed=seed))
+
+
+def _ae_cfg(s=2, seed=1, hidden=8, cell="gru"):
+    return ae.AutoencoderConfig(
+        hidden=hidden, num_layers=1, cell=cell,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s, seed=seed))
+
+
+def _two_tenant_fleet(backend, **kw):
+    """An LSTM classifier + a GRU autoencoder: different cell, task, S."""
+    cfg_w = _clf_cfg()
+    cfg_a = _ae_cfg()
+    p_w = clf.init(jax.random.key(0), cfg_w)
+    p_a = ae.init(jax.random.key(1), cfg_a)
+    fleet = FleetEngine([
+        TenantSpec(name="ward", cfg=cfg_w, params=p_w, weight=3.0,
+                   max_sessions=4, backend=backend),
+        TenantSpec(name="anom", cfg=cfg_a, params=p_a, weight=1.0,
+                   max_sessions=4, backend=backend),
+    ], **kw)
+    return fleet, (cfg_w, p_w), (cfg_a, p_a)
+
+
+class TestTenantSpecAndGrouping:
+    def test_spec_validation(self):
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        with pytest.raises(ValueError, match="/"):
+            TenantSpec(name="a/b", cfg=cfg, params=params)
+        with pytest.raises(ValueError, match="weight"):
+            TenantSpec(name="a", cfg=cfg, params=params, weight=0.0)
+        with pytest.raises(TypeError, match="config"):
+            TenantSpec(name="a", cfg=object(), params=params)
+        with pytest.raises(ValueError, match="duplicate"):
+            FleetEngine([TenantSpec(name="a", cfg=cfg, params=params),
+                         TenantSpec(name="a", cfg=cfg, params=params)])
+        with pytest.raises(ValueError, match="at least one"):
+            FleetEngine([])
+
+    def test_same_signature_tenants_fold_into_one_group(self):
+        """Same params object + same resolved config -> one shared engine
+        whose capacity is the sum of the member caps; sessions of both
+        tenants co-batch without colliding (namespaced sids)."""
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        fleet = FleetEngine([
+            TenantSpec(name="icu", cfg=cfg, params=params, max_sessions=2,
+                       backend="reference"),
+            TenantSpec(name="er", cfg=cfg, params=params, max_sessions=3,
+                       backend="reference"),
+        ])
+        assert len(fleet.groups) == 1
+        eng = fleet.group_of("icu").engine
+        assert eng is fleet.group_of("er").engine
+        assert eng.max_sessions == 5
+        fleet.admit("icu", "p1")
+        fleet.admit("er", "p1")               # same bare sid, no collision
+        assert fleet.active_sessions == {"icu": ["p1"], "er": ["p1"]}
+        assert sorted(eng.active_sessions) == ["er/p1", "icu/p1"]
+
+    def test_different_signatures_get_own_groups(self):
+        """S override, precision and cell each split the launch group."""
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        fleet = FleetEngine([
+            TenantSpec(name="a", cfg=cfg, params=params, backend="reference"),
+            TenantSpec(name="b", cfg=cfg, params=params, n_samples=2,
+                       backend="reference"),
+            TenantSpec(name="c", cfg=cfg, params=params, precision="int8",
+                       backend="pallas_seq"),
+        ])
+        assert len(fleet.groups) == 3
+        assert fleet.group_of("b").engine.n_samples == 2
+        assert fleet.group_of("c").engine.precision == "int8"
+
+    def test_per_tenant_capacity_enforced_inside_shared_group(self):
+        """A tenant's own max_sessions binds even when the shared group
+        store still has room for its peers."""
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        fleet = FleetEngine([
+            TenantSpec(name="icu", cfg=cfg, params=params, max_sessions=1,
+                       backend="reference"),
+            TenantSpec(name="er", cfg=cfg, params=params, max_sessions=2,
+                       backend="reference"),
+        ])
+        assert fleet.admit("icu", "p1") is not None
+        assert fleet.admit("icu", "p2") is None          # queued, not live
+        assert fleet.queue.depth_of("icu") == 1
+        assert fleet.admit("er", "p1") is not None       # peer unaffected
+        fleet.close("icu", "p1")                         # frees icu's slot
+        assert fleet.active_sessions["icu"] == ["p2"]
+
+
+class TestHeterogeneityPin:
+    """The acceptance invariant: co-tenancy is invisible in the outputs."""
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_fleet_tick_bit_identical_to_solo(self, backend):
+        fleet, (cfg_w, p_w), (cfg_a, p_a) = _two_tenant_fleet(backend)
+        T = 8
+        sig_w = jax.random.normal(jax.random.key(2), (T, 1))
+        sig_a = jax.random.normal(jax.random.key(3), (T, 1))
+        fleet.admit("ward", "p1")
+        fleet.admit("anom", "p1")
+        # Ragged fleet ticks: different split per tenant, incl. a length-1
+        # chunk and a tick one tenant sits out.
+        fleet.step({"ward": {"p1": sig_w[:3]}, "anom": {"p1": sig_a[:5]}})
+        fleet.step({"ward": {"p1": sig_w[3:4]}})
+        got = fleet.step({"ward": {"p1": sig_w[4:]},
+                          "anom": {"p1": sig_a[5:]}})
+
+        solo_w = StreamingEngine(p_w, cfg_w, backend=backend, max_sessions=1)
+        solo_w.open_session("p1")
+        want_w = solo_w.step({"p1": sig_w})["p1"]     # different split too
+        np.testing.assert_array_equal(
+            np.asarray(got["ward"]["p1"].summary.probs),
+            np.asarray(want_w.summary.probs))
+        np.testing.assert_array_equal(
+            np.asarray(got["ward"]["p1"].summary.mutual_information),
+            np.asarray(want_w.summary.mutual_information))
+        assert got["ward"]["p1"].steps_total == want_w.steps_total == T
+
+        # The AE summary is per-chunk reconstruction, so the solo run uses
+        # the same final chunk boundary; the carried bottleneck it decodes
+        # from integrated the stream under a *different* earlier split.
+        solo_a = StreamingEngine(p_a, cfg_a, backend=backend, max_sessions=1)
+        solo_a.open_session("p1")
+        solo_a.step({"p1": sig_a[:5]})
+        want_a = solo_a.step({"p1": sig_a[5:]})["p1"]
+        np.testing.assert_array_equal(
+            np.asarray(got["anom"]["p1"].summary.mean),
+            np.asarray(want_a.summary.mean))
+        np.testing.assert_array_equal(
+            np.asarray(got["anom"]["p1"].summary.total),
+            np.asarray(want_a.summary.total))
+
+    def test_quantized_tenant_bit_identical_to_solo(self):
+        """An int8 low-priority tenant next to a native one: the quantized
+        group serves exactly what a solo quantized engine serves."""
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        fleet = FleetEngine([
+            TenantSpec(name="hi", cfg=cfg, params=params, weight=4.0),
+            TenantSpec(name="lo", cfg=cfg, params=params, weight=1.0,
+                       precision="int8"),
+        ])
+        assert len(fleet.groups) == 2
+        T = 6
+        sig = jax.random.normal(jax.random.key(4), (T, 1))
+        fleet.admit("hi", "s")
+        fleet.admit("lo", "s")
+        got = None
+        for a, b in ((0, 4), (4, T)):
+            got = fleet.step({"hi": {"s": sig[a:b]}, "lo": {"s": sig[a:b]}})
+        for tenant, precision in (("hi", None), ("lo", "int8")):
+            solo = StreamingEngine(params, cfg, max_sessions=1,
+                                   precision=precision)
+            solo.open_session("s")
+            want = solo.step({"s": sig})["s"]
+            np.testing.assert_array_equal(
+                np.asarray(got[tenant]["s"].summary.probs),
+                np.asarray(want.summary.probs))
+
+    @pytest.mark.parametrize("backend", ("reference", "pallas_seq"))
+    def test_kill_restore_mid_stream_bit_identical(self, backend, tmp_path):
+        """snapshot -> kill -> restore into a fresh fleet between two
+        chunks: the continuation is bit-identical to solo uninterrupted
+        engines — for *both* heterogeneous tenants at once."""
+        fleet, (cfg_w, p_w), (cfg_a, p_a) = _two_tenant_fleet(backend)
+        T = 8
+        sig_w = jax.random.normal(jax.random.key(5), (T, 1))
+        sig_a = jax.random.normal(jax.random.key(6), (T, 1))
+        fleet.admit("ward", "p1")
+        fleet.admit("anom", "p1")
+        fleet.step({"ward": {"p1": sig_w[:3]}, "anom": {"p1": sig_a[:3]}})
+        fleet.snapshot(str(tmp_path))
+
+        fleet2 = FleetEngine([
+            TenantSpec(name="ward", cfg=cfg_w, params=p_w, weight=3.0,
+                       max_sessions=4, backend=backend),
+            TenantSpec(name="anom", cfg=cfg_a, params=p_a, weight=1.0,
+                       max_sessions=4, backend=backend),
+        ])
+        fleet2.restore(str(tmp_path))
+        assert fleet2.tick == fleet.tick
+        got = fleet2.step({"ward": {"p1": sig_w[3:]},
+                           "anom": {"p1": sig_a[3:]}})
+
+        solo_w = StreamingEngine(p_w, cfg_w, backend=backend, max_sessions=1)
+        solo_w.open_session("p1")
+        solo_w.step({"p1": sig_w[:3]})
+        want_w = solo_w.step({"p1": sig_w[3:]})["p1"]
+        np.testing.assert_array_equal(
+            np.asarray(got["ward"]["p1"].summary.probs),
+            np.asarray(want_w.summary.probs))
+        solo_a = StreamingEngine(p_a, cfg_a, backend=backend, max_sessions=1)
+        solo_a.open_session("p1")
+        solo_a.step({"p1": sig_a[:3]})
+        want_a = solo_a.step({"p1": sig_a[3:]})["p1"]
+        np.testing.assert_array_equal(
+            np.asarray(got["anom"]["p1"].summary.mean),
+            np.asarray(want_a.summary.mean))
+        assert got["anom"]["p1"].steps_total == T
+
+
+class TestFleetSnapshot:
+    def _fleet(self, **kw):
+        fleet, *_ = _two_tenant_fleet("reference", **kw)
+        return fleet
+
+    def test_one_atomic_manifest(self, tmp_path):
+        fleet = self._fleet()
+        fleet.admit("ward", "p1")
+        fleet.step({"ward": {"p1": jnp.ones((3, 1))}})
+        fleet.snapshot(str(tmp_path))
+        # one committed step directory, one meta covering every group
+        steps = [d for d in os.listdir(tmp_path) if d.startswith("step-")]
+        assert len(steps) == 1
+        meta = load_fleet_meta(str(tmp_path))
+        assert meta["fleet_format"] == 1
+        assert set(meta["tenants"]) == {"ward", "anom"}
+        assert set(meta["groups"]) == {g.name for g in fleet.groups.values()}
+
+    def test_queue_and_fairness_ledger_roundtrip(self, tmp_path):
+        fleet = self._fleet(admit_per_tick=1)
+        for i in range(3):
+            fleet.admit("ward", f"w{i}")
+        fleet.admit("anom", "a0", priority=2)
+        fleet.step({})                          # budget 1: one admission
+        ledger = fleet.queue.state()
+        pending = [(t.tenant, t.sid) for t in fleet.queue.waiting()]
+        assert pending                           # something is still queued
+        fleet.snapshot(str(tmp_path))
+
+        fleet2 = self._fleet(admit_per_tick=1)
+        fleet2.restore(str(tmp_path))
+        assert fleet2.queue.state()["admitted"] == ledger["admitted"]
+        assert [(t.tenant, t.sid) for t in fleet2.queue.waiting()] == pending
+        assert fleet2.active_sessions == fleet.active_sessions
+
+    def test_restore_refuses_wrong_tenant_set(self, tmp_path):
+        fleet = self._fleet()
+        fleet.admit("ward", "p1")
+        fleet.snapshot(str(tmp_path))
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        other = FleetEngine([TenantSpec(name="ward", cfg=cfg, params=params,
+                                        backend="reference")])
+        with pytest.raises(ValueError, match="tenants"):
+            other.restore(str(tmp_path))
+
+    def test_restore_refuses_mismatched_tenant_config(self, tmp_path):
+        """Same tenant names but a changed S: the group's typed restore
+        validation (the standalone engine's own checks) must refuse."""
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        fleet = FleetEngine([TenantSpec(name="a", cfg=cfg, params=params,
+                                        backend="reference")])
+        fleet.admit("a", "s")
+        fleet.step({"a": {"s": jnp.ones((2, 1))}})
+        fleet.snapshot(str(tmp_path))
+        wrong = FleetEngine([TenantSpec(name="a", cfg=cfg, params=params,
+                                        n_samples=2, backend="reference")])
+        with pytest.raises(ValueError, match="chains|n_samples"):
+            wrong.restore(str(tmp_path))
+
+    def test_restore_needs_fresh_fleet(self, tmp_path):
+        fleet = self._fleet()
+        fleet.admit("ward", "p1")
+        fleet.snapshot(str(tmp_path))
+        with pytest.raises(RuntimeError, match="fresh"):
+            fleet.restore(str(tmp_path))
+
+
+class TestWeightedFairness:
+    """WeightedFairQueue semantics + the fleet-level fairness pin."""
+
+    def test_queue_validation(self):
+        with pytest.raises(ValueError, match="/"):
+            WeightedFairQueue({"a/b": 1.0})
+        with pytest.raises(ValueError, match="weight"):
+            WeightedFairQueue({"a": 0.0})
+        with pytest.raises(ValueError, match="at least one"):
+            WeightedFairQueue({})
+        q = WeightedFairQueue({"a": 1.0}, max_pending=1)
+        q.submit("a", "s1")
+        with pytest.raises(QueueFull):
+            q.submit("a", "s2")
+        with pytest.raises(KeyError, match="unknown tenant"):
+            q.submit("zzz", "s3")
+        with pytest.raises(ValueError, match="already queued"):
+            q.submit("a", "s1")
+
+    def test_fifo_within_tenant(self):
+        q = WeightedFairQueue({"a": 1.0, "b": 1.0})
+        for sid in ("s1", "s2", "s3"):
+            q.submit("a", sid)
+        order = []
+        q.drain(lambda t: order.append(t.sid), lambda n: True)
+        assert order == ["s1", "s2", "s3"]
+        assert q.depth == 0
+
+    def test_rejects_do_not_consume_budget(self):
+        store = SessionStore(n_samples=2, seed=7, max_sessions=4)
+        poison = SessionStore(n_samples=2, seed=999).admit("a/bad")
+        q = WeightedFairQueue({"a": 1.0})
+        q.submit("a", "a/bad", session=poison)
+        q.submit("a", "a/ok")
+        from repro.serve import DrainRejected
+        with pytest.raises(DrainRejected) as exc_info:
+            q.drain(lambda t: (store.attach(t.session) if t.session
+                               is not None else store.admit(t.sid)),
+                    lambda n: True, 1)          # budget 1
+        err = exc_info.value
+        # the poison ticket burned no budget: the healthy one still went in
+        assert [t.sid for t in err.admitted] == ["a/ok"]
+        assert [t.sid for t, _ in err.rejected] == ["a/bad"]
+
+    def test_shares_converge_to_weights_under_overload(self):
+        """The fairness pin: sustained overload, weights 3:1, rate-limited
+        admission -> cumulative admitted shares converge to 0.75/0.25."""
+        fleet, *_ = _two_tenant_fleet(
+            "reference", admit_per_tick=2, max_pending=512,
+            aging_rounds=10**6)
+        for i in range(100):
+            fleet.admit("ward", f"w{i}")
+            fleet.admit("anom", f"a{i}")
+        admitted = {"ward": 0, "anom": 0}
+        for _ in range(60):
+            fleet.step({})
+            for t in ("ward", "anom"):
+                for sid in fleet.active_sessions[t]:
+                    fleet.close(t, sid)
+                    admitted[t] += 1
+        total = sum(admitted.values())
+        assert total >= 100
+        assert admitted["ward"] / total == pytest.approx(0.75, abs=0.05)
+        assert admitted["anom"] / total == pytest.approx(0.25, abs=0.05)
+        shares = fleet.queue.shares()
+        assert shares["ward"] == pytest.approx(0.75, abs=0.05)
+
+    def test_aging_guard_prevents_starvation(self):
+        """A skewed fairness ledger makes the stride pick starve the
+        low-weight tenant indefinitely (its historic admitted/weight ratio
+        is huge); the aging guard admits its head ticket within
+        ``aging_rounds`` anyway.  With the guard effectively disabled the
+        same scenario starves — proving the guard is what un-starves it."""
+        def run(aging_rounds, rounds=30):
+            fleet, *_ = _two_tenant_fleet(
+                "reference", admit_per_tick=1, max_pending=512,
+                aging_rounds=aging_rounds)
+            st = fleet.queue.state()
+            st["admitted"] = {"ward": 0, "anom": 1000}
+            fleet.queue.load_state(st)
+            fleet.admit("anom", "t0")
+            k = 0
+            for r in range(rounds):
+                for _ in range(2):          # ward backlog replenishes
+                    fleet.admit("ward", f"w{k}")
+                    k += 1
+                fleet.step({})
+                if "t0" in fleet.active_sessions["anom"]:
+                    return r
+                for sid in fleet.active_sessions["ward"]:
+                    fleet.close("ward", sid)
+            return None
+
+        guarded = run(aging_rounds=4)
+        assert guarded is not None and guarded <= 4 + 1
+        assert run(aging_rounds=10**6) is None
+
+    def test_rate_limited_admit_only_queues(self):
+        fleet, *_ = _two_tenant_fleet("reference", admit_per_tick=2)
+        assert fleet.admit("ward", "p1") is None
+        assert fleet.queue.depth_of("ward") == 1
+        assert fleet.active_sessions["ward"] == []
+        fleet.step({})
+        assert fleet.active_sessions["ward"] == ["p1"]
+
+    def test_eager_mode_admits_on_submit(self):
+        fleet, *_ = _two_tenant_fleet("reference")
+        sess = fleet.admit("ward", "p1")
+        assert sess is not None and sess.sid == "ward/p1"
+        assert fleet.close("ward", "p1").sid == "p1"   # bare sid restored
+
+
+class TestPerTenantObservability:
+    def test_tick_metrics_tagged_per_tenant(self):
+        fleet, *_ = _two_tenant_fleet("reference")
+        fleet.admit("ward", "p1")
+        fleet.admit("anom", "p1")
+        fleet.step({"ward": {"p1": jnp.ones((4, 1))},
+                    "anom": {"p1": jnp.ones((2, 1))}})
+        recs = {m.tenant: m for m in fleet.metrics}
+        assert set(recs) == {"ward", "anom"}
+        # per-tenant load fields are the tenant's own slice
+        assert recs["ward"].n_chunks == 1 and recs["ward"].live_steps == 4
+        assert recs["anom"].live_steps == 2
+        s_w = fleet.group_of("ward").engine.n_samples
+        assert recs["ward"].live_chain_steps == 4 * s_w
+        assert recs["ward"].tick == recs["anom"].tick == 0
+
+    def test_starving_tenant_emits_quiet_record(self):
+        """A tenant with queued-but-unserved work must be visible in the
+        trail of the tick it did NOT serve in."""
+        fleet, *_ = _two_tenant_fleet("reference", admit_per_tick=1)
+        fleet.admit("ward", "p1")
+        fleet.admit("anom", "p1")
+        fleet.step({})                # budget 1: one tenant stays queued
+        (starved,) = [t for t in ("ward", "anom")
+                      if fleet.queue.depth_of(t) == 1]
+        quiet = [m for m in fleet.metrics if m.tenant == starved]
+        assert len(quiet) == 1
+        assert quiet[0].n_chunks == 0 and quiet[0].queue_depth == 1
+
+    def test_dropped_lands_in_tenant_slice_and_jsonl(self, tmp_path):
+        """A poison re-attach (row collision only the store can catch) is
+        dropped mid-drain; the drop must surface as ``dropped`` on the
+        owning tenant's next record — in memory and in the JSONL trail."""
+        path = tmp_path / "fleet.jsonl"
+        sink = JsonlSink(str(path))
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        fleet = FleetEngine(
+            [TenantSpec(name="icu", cfg=cfg, params=params, max_sessions=2,
+                        backend="reference"),
+             TenantSpec(name="er", cfg=cfg, params=params, max_sessions=2,
+                        backend="reference")],
+            admit_per_tick=4, metrics_sink=sink)
+        fleet.admit("icu", "live")
+        fleet.step({})                                   # live goes in
+        # collides on rows with "live" — passes the eager checks, only
+        # SessionStore.attach can reject it, mid-drain
+        s = cfg.mcd.n_samples
+        clash = SessionStore(n_samples=s, seed=cfg.mcd.seed).admit("icu/bad")
+        fleet.admit("icu", "bad", session=clash)
+        fleet.step({})
+        icu = [m for m in fleet.metrics if m.tenant == "icu"]
+        assert icu[-1].dropped == 1
+        (ticket, err), = fleet.dropped_admissions
+        assert ticket.tenant == "icu" and "collide" in str(err)
+        recs = [json.loads(line) for line in
+                path.read_text().splitlines()]
+        assert any(r["tenant"] == "icu" and r["dropped"] == 1 for r in recs)
+        sink.close()
+
+    def test_summarize_groups_by_tenant(self):
+        fleet, *_ = _two_tenant_fleet("reference")
+        fleet.admit("ward", "p1")
+        fleet.admit("anom", "p1")
+        for _ in range(3):
+            fleet.step({"ward": {"p1": jnp.ones((2, 1))},
+                        "anom": {"p1": jnp.ones((2, 1))}})
+        agg = fleet.summarize()
+        assert set(agg["tenants"]) == {"ward", "anom"}
+        sub = agg["tenants"]["ward"]
+        assert sub["ticks"] == 3
+        assert "queue_wait_s_p95" in sub and "dropped" in sub
+        assert "tenants" not in sub          # no recursive nesting
+        # the roll-up across tenants still aggregates everything
+        assert agg["ticks"] == 6
+
+    def test_summarize_handles_untagged_trail(self):
+        """A single-engine trail (no tenant tags) keeps the old shape."""
+        m = TickMetrics(tick=0, capacity=4, n_chunks=1, live_rows=2,
+                        batch_rows=2, queue_depth=0, live_steps=4,
+                        live_chain_steps=8, padded_steps=8, pad_waste=0.0,
+                        duration_s=0.5, tokens_per_sec=16.0)
+        assert "tenants" not in summarize([m])
+
+
+class TestReconfigureAndController:
+    def test_reconfigure_tenant_moves_to_dedicated_group(self):
+        """Downshifting one tenant of a shared group: its sessions move,
+        the peer's stay; both keep serving; the row allocators of both
+        stores advance past every transferred row."""
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        fleet = FleetEngine([
+            TenantSpec(name="icu", cfg=cfg, params=params, max_sessions=2,
+                       backend="reference"),
+            TenantSpec(name="er", cfg=cfg, params=params, max_sessions=2,
+                       backend="reference"),
+        ])
+        assert len(fleet.groups) == 1
+        fleet.admit("icu", "s")
+        fleet.admit("er", "s")
+        sig = jax.random.normal(jax.random.key(7), (6, 1))
+        fleet.step({"icu": {"s": sig[:3]}, "er": {"s": sig[:3]}})
+
+        from repro.serve import ServingConfig
+        fleet.reconfigure_tenant("icu", ServingConfig(
+            n_samples=2, precision=None, chunk_capacity=0))
+        assert len(fleet.groups) == 2
+        new_eng = fleet.group_of("icu").engine
+        old_eng = fleet.group_of("er").engine
+        assert new_eng is not old_eng and new_eng.n_samples == 2
+        assert fleet.active_sessions == {"icu": ["s"], "er": ["s"]}
+        # downshift keeps the surviving chains' carried draw: serving
+        # continues from the same state in the new group
+        got = fleet.step({"icu": {"s": sig[3:]}, "er": {"s": sig[3:]}})
+        assert got["icu"]["s"].steps_total == 6
+        assert got["er"]["s"].steps_total == 6
+        # no later admission in either group can repeat a transferred row
+        assert new_eng.store.next_row >= old_eng.store.next_row
+
+    def test_fleet_controller_downshifts_breaching_tenant_only(self):
+        """Synthetic sustained breach on one tenant's slice: its controller
+        downshifts S via reconfigure_tenant; the unmanaged peer keeps its
+        group untouched."""
+        cfg_hot = _clf_cfg(s=8)
+        cfg_cold = _clf_cfg(s=3, seed=11)
+        p_hot = clf.init(jax.random.key(0), cfg_hot)
+        p_cold = clf.init(jax.random.key(1), cfg_cold)
+        fleet = FleetEngine([
+            TenantSpec(name="hot", cfg=cfg_hot, params=p_hot,
+                       max_sessions=4, chunk_capacity=64,
+                       backend="reference",
+                       slo=SLOPolicy(p95_tick_s=4e-3)),
+            TenantSpec(name="cold", cfg=cfg_cold, params=p_cold,
+                       max_sessions=4, backend="reference"),
+        ])
+        ctrl = FleetController(fleet, window=8, min_ticks=4)
+        assert set(ctrl.controllers) == {"hot"}     # cold has no SLO
+        cold_eng = fleet.group_of("cold").engine
+        # a constant 10 ms trail on the hot tenant, well over the 4 ms SLO
+        s, cap, slots = 8, 64, 4
+        for i in range(8):
+            live = 4 * cap * s
+            fleet.metrics_sink.emit(TickMetrics(
+                tick=i, capacity=cap, n_chunks=4, live_rows=4 * s,
+                batch_rows=slots * s, queue_depth=0, live_steps=4 * cap,
+                live_chain_steps=live, padded_steps=slots * s * cap,
+                pad_waste=1.0 - live / (slots * s * cap),
+                duration_s=10e-3, tokens_per_sec=live / 10e-3,
+                tenant="hot"))
+        recs = ctrl.maybe_reconfigure()
+        assert len(recs) == 1
+        rec = recs[0]
+        assert rec.applied and rec.tenant == "hot"
+        assert rec.winner["n_samples"] < 8
+        assert fleet.group_of("hot").engine.n_samples == \
+            rec.winner["n_samples"]
+        assert fleet.group_of("cold").engine is cold_eng
+        assert ctrl.decisions[-1].tenant == "hot"

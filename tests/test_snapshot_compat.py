@@ -8,6 +8,11 @@ durable-control-plane layout (2-part LSTM carries, no ``parts`` key, no
 pin that today's ``restore`` path keeps loading both — i.e. that format
 evolution stays additive — and that the ``precision`` meta added by the
 quantized serving path refuses mismatched restores with a typed error.
+
+``fleet_v1/`` is the multi-tenant fleet layout golden (committed at the
+layout's birth): it must restore into a matching ``FleetEngine``, the old
+single-engine snapshots must adopt into a *one-tenant* fleet, and every
+cross-layout or mismatched-spec load must fail with a typed error.
 """
 
 import os
@@ -18,7 +23,8 @@ import numpy as np
 import pytest
 
 from repro.core import classifier as clf, mcd
-from repro.serve import StreamingEngine
+from repro.serve import (FleetEngine, StreamingEngine, TenantSpec,
+                         load_fleet_meta, load_snapshot_meta)
 
 FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "fixtures", "snapshots")
@@ -84,6 +90,90 @@ class TestGoldenFixtures:
                               precision="int8")
         with pytest.raises(ValueError, match="precision"):
             eng.restore(os.path.join(FIXTURES, "pr3_lstm"))
+
+
+def _fleet_cfg():
+    return clf.ClassifierConfig(
+        hidden=HIDDEN, num_layers=NUM_LAYERS,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=N_SAMPLES,
+                          seed=SEED))
+
+
+class TestFleetFixtures:
+    """The fleet_v1 golden: today's fleet layout, committed at its birth."""
+
+    def _fleet(self, tenants=("ward", "anom")):
+        cfg = _fleet_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        return FleetEngine([TenantSpec(name=n, cfg=cfg, params=params,
+                                       max_sessions=4)
+                            for n in tenants])
+
+    def test_fleet_v1_restores_and_serves(self):
+        fleet = self._fleet()
+        meta = fleet.restore(os.path.join(FIXTURES, "fleet_v1"))
+        assert fleet.tick == 3
+        assert fleet.active_sessions == {"ward": ["p1"], "anom": ["p1"]}
+        sess = fleet.group_of("ward").engine.store.get("ward/p1")
+        assert sess.steps == 7 and sess.chunks == 2
+        np.testing.assert_array_equal(np.asarray(sess.rows), [0, 1])
+        # the fairness ledger survived — long-run shares don't reset
+        assert fleet.queue.state()["admitted"] == {"ward": 3, "anom": 1}
+        # the fresh wait-list entry is back in the shared queue
+        assert [(t.tenant, t.sid) for t in fleet.queue.waiting()] == \
+            [("ward", "ward/p2")]
+        assert meta["fleet_format"] == 1
+        # and the restored group actually serves
+        out = fleet.step({"ward": {"p1": jnp.ones((3, 1))}})
+        assert out["ward"]["p1"].steps_total == 10
+
+    def test_single_engine_snapshot_adopts_into_one_tenant_fleet(self):
+        """A pre-fleet StreamingEngine snapshot loads into a one-tenant
+        fleet: sessions are re-namespaced under the tenant and serve on."""
+        cfg = _fleet_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        fleet = FleetEngine([TenantSpec(name="icu", cfg=cfg, params=params,
+                                        backend="pallas_seq")])
+        fleet.restore(os.path.join(FIXTURES, "pr3_lstm"))
+        assert sorted(fleet.active_sessions["icu"]) == ["ward_1", "ward_2"]
+        assert fleet.tick == 2
+        out = fleet.step({"icu": {"ward_1": jnp.ones((3, 1))}})
+        assert out["icu"]["ward_1"].steps_total == 10
+
+    def test_multi_tenant_fleet_refuses_single_engine_snapshot(self):
+        with pytest.raises(ValueError, match="one-tenant"):
+            self._fleet().restore(os.path.join(FIXTURES, "pr3_lstm"))
+
+    def test_fleet_snapshot_refused_by_streaming_engine(self):
+        """The layouts never cross: a StreamingEngine cannot silently load
+        one group of a fleet manifest."""
+        eng = _engine("lstm")
+        with pytest.raises(IOError, match="not a session"):
+            eng.restore(os.path.join(FIXTURES, "fleet_v1"))
+        with pytest.raises(IOError, match="not a session"):
+            load_snapshot_meta(os.path.join(FIXTURES, "fleet_v1"), 0)
+        with pytest.raises(IOError, match="fleet"):
+            load_fleet_meta(os.path.join(FIXTURES, "pr3_lstm"), 0)
+
+    def test_fleet_fixture_refused_by_wrong_tenant_set(self):
+        with pytest.raises(ValueError, match="tenants"):
+            self._fleet(("ward", "other")).restore(
+                os.path.join(FIXTURES, "fleet_v1"))
+
+    def test_fleet_fixture_refused_by_mismatched_grouping(self):
+        """Same tenant names, but this fleet's specs split them into two
+        launch groups while the snapshot co-batched them — typed refusal
+        (the specs diverged; carries cannot be adopted safely)."""
+        cfg = _fleet_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        split = FleetEngine([
+            TenantSpec(name="ward", cfg=cfg, params=params),
+            TenantSpec(name="anom", cfg=cfg,
+                       params=clf.init(jax.random.key(1), cfg)),
+        ])
+        assert len(split.groups) == 2
+        with pytest.raises(ValueError, match="diverge"):
+            split.restore(os.path.join(FIXTURES, "fleet_v1"))
 
 
 class TestPrecisionMismatch:

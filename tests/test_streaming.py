@@ -9,6 +9,8 @@ bit-stable across launch sizes, splits, batch composition and backends
 (see docs/kernels.md), which is what makes exact assertions possible here.
 """
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -509,6 +511,93 @@ class TestStreamingEngine:
         with pytest.raises(ValueError, match="t>=1"):
             eng.step({"a": jnp.ones((0, 1))})
         assert eng.step({}) == {}
+
+
+class TestWindowedDecoder:
+    """ISSUE 8 satellite: the windowed-decoder AE (``decode_window``).
+
+    The encoder — and therefore the rolling bottleneck a streaming session
+    carries — is untouched by the window, and the decoder replay at
+    position t depends only on the bottleneck and the time-invariant
+    per-row masks.  So (a) a windowed decode is bit-identical to the first
+    min(T, W) positions of the full replay, and (b) chunked streaming with
+    a windowed decoder stays bit-identical to unchunked, on every backend.
+    """
+
+    def _cfg_params(self, window, cell="lstm", s=2):
+        cfg = ae.AutoencoderConfig(
+            hidden=8, num_layers=1, cell=cell, decode_window=window,
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s, seed=1))
+        return cfg, ae.init(jax.random.key(0), cfg)
+
+    def test_window_validation(self):
+        with pytest.raises(ValueError, match="decode_window"):
+            ae.AutoencoderConfig(decode_window=0)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_windowed_equals_full_prefix_bit_identical(self, backend):
+        """apply() with decode_window=W == the first W positions of the
+        full repeat-T replay, bit-exact (same bottleneck, same masks)."""
+        W, T, B = 3, 7, 2
+        cfg_w, params = self._cfg_params(W)
+        cfg_full = ae.AutoencoderConfig(
+            **{**dataclasses.asdict(cfg_w), "mcd": cfg_w.mcd,
+               "decode_window": None})
+        x = jax.random.normal(jax.random.key(2), (B, T, 1))
+        rows = jnp.arange(B, dtype=jnp.uint32)
+        lens = jnp.full((B,), T, jnp.int32)
+        mean_w, lv_w = ae.apply(params, x, rows, cfg_w, backend=backend,
+                                lengths=lens)
+        mean_f, lv_f = ae.apply(params, x, rows, cfg_full, backend=backend,
+                                lengths=lens)
+        assert mean_w.shape == (B, W, 1)
+        np.testing.assert_array_equal(np.asarray(mean_w),
+                                      np.asarray(mean_f[:, :W]))
+        np.testing.assert_array_equal(np.asarray(lv_w),
+                                      np.asarray(lv_f[:, :W]))
+        # a window past T is a no-op: full replay, full shape
+        cfg_big = dataclasses.replace(cfg_w, decode_window=99)
+        mean_b, _ = ae.apply(params, x, rows, cfg_big, backend=backend,
+                             lengths=lens)
+        np.testing.assert_array_equal(np.asarray(mean_b),
+                                      np.asarray(mean_f))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("cell", ("lstm", "gru"))
+    def test_chunked_equals_unchunked_bit_identical(self, backend, cell):
+        """The satellite's acceptance pin: engine streaming with a windowed
+        decoder — chunked == unchunked, bit-identical, all backends.  The
+        carried bottleneck is window-independent, so the final chunk's
+        reconstruction matches a run that saw the prefix as one chunk."""
+        W, T = 4, 9
+        cfg, params = self._cfg_params(W, cell=cell)
+        sig = jax.random.normal(jax.random.key(3), (T, 1))
+        eng = StreamingEngine(params, cfg, backend=backend, max_sessions=1)
+        eng.open_session("a")
+        eng.step({"a": sig[:3]})
+        eng.step({"a": sig[3:4]})                  # length-1 chunk
+        got = eng.step({"a": sig[4:]})["a"]
+        solo = StreamingEngine(params, cfg, backend=backend, max_sessions=1)
+        solo.open_session("a")
+        solo.step({"a": sig[:4]})                  # different split
+        want = solo.step({"a": sig[4:]})["a"]
+        # the last chunk is 5 steps but the decode window caps the
+        # reconstruction at W=4 positions
+        assert got.summary.mean.shape == (W, 1)
+        np.testing.assert_array_equal(np.asarray(got.summary.mean),
+                                      np.asarray(want.summary.mean))
+        np.testing.assert_array_equal(np.asarray(got.summary.total),
+                                      np.asarray(want.summary.total))
+        assert got.steps_total == T
+
+    def test_short_chunk_keeps_own_length(self):
+        """Chunks shorter than the window reconstruct their full length."""
+        cfg, params = self._cfg_params(window=4)
+        eng = StreamingEngine(params, cfg, backend="pallas_seq",
+                              max_sessions=1)
+        eng.open_session("a")
+        res = eng.step({"a": jnp.ones((2, 1))})["a"]
+        assert res.summary.mean.shape == (2, 1)
 
 
 class TestStreamingEngineGru:
