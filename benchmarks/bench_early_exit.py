@@ -1,0 +1,171 @@
+"""Early-exit adaptive sampling: what retiring surplus chains buys.
+
+Two numbers the dynamic-S refactor (ISSUE 9) has to earn over the static
+engine it replaced:
+
+* **throughput** — steady-state tick cost and signal throughput
+  (stream-steps/s across sessions) on *confident* traffic, early-exit vs
+  static S.  In dynamic launch mode retired chains shrink the actual
+  batch, so a store full of converged streams should tick several times
+  faster than one paying for all S chains forever.  The acceptance bar is
+  >=2x on the all-confident workload.
+* **quality** — on a mixed easy/hard workload, what the adaptive engine
+  gives up: retained (full-S) sessions must match the static engine's
+  predictions *bit-exactly* (their chains never changed), and the
+  retired sessions' summaries are compared for prediction agreement and
+  uncertainty drift.
+
+Flatline streams through a freshly-initialized stack are the "confident"
+traffic: zero input x zero biases keeps every activation at zero, all S
+chains identical, MI exactly 0 — so ``threshold=0.0`` (the strictest
+setting) retires them and provably nothing else.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import classifier as clf, mcd
+from repro.serve import StreamingEngine
+
+S, FLOOR, SESSIONS = 8, 1, 8
+#: Throughput geometry: the per-chain compute must dominate the per-tick
+#: fixed cost (host assembly, dispatch) for the row shrink to show up in
+#: wall time — tiny hidden sizes are dispatch-bound on CPU and would
+#: understate the win that scales with the model.
+BENCH_HIDDEN, BENCH_CHUNK = 128, 64
+#: Quality geometry: bit-exactness doesn't need the big model.
+QUAL_HIDDEN, QUAL_CHUNK = 8, 32
+
+
+def _cfg(hidden):
+    return clf.ClassifierConfig(
+        hidden=hidden, num_layers=2, num_classes=5,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=S, seed=3))
+
+
+def _engine(params, cfg, threshold=None):
+    # Default chunk_capacity (dynamic launch shapes): retirement shrinks
+    # the real batch, which is the mode the speedup claim is about.
+    return StreamingEngine(params, cfg, backend="pallas_seq",
+                           max_sessions=SESSIONS,
+                           early_exit_threshold=threshold,
+                           min_samples=FLOOR)
+
+
+def _open_all(eng):
+    for k in range(SESSIONS):
+        eng.open_session(f"s{k}")
+
+
+def _tick_us(eng, chunks, iters=7):
+    ts = []
+    for _ in range(2):                       # warm the compiled graph
+        jax.block_until_ready(
+            [r.summary.probs for r in eng.step(chunks).values()])
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            [r.summary.probs for r in eng.step(chunks).values()])
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
+def bench_confident_throughput():
+    """All-confident traffic: steady-state early-exit vs static S."""
+    cfg = _cfg(BENCH_HIDDEN)
+    params = clf.init(jax.random.key(0), cfg)
+    zeros = {f"s{k}": jnp.zeros((BENCH_CHUNK, 1), jnp.float32)
+             for k in range(SESSIONS)}
+
+    static = _engine(params, cfg)
+    _open_all(static)
+    us_static = _tick_us(static, zeros)
+
+    adaptive = _engine(params, cfg, threshold=0.0)
+    _open_all(adaptive)
+    # Drive to the floor first (staged halving: one stage per tick), so
+    # the timed ticks measure the steady state, not the transition.
+    for _ in range(4):
+        adaptive.step(zeros)
+    assert adaptive.store.active_chains == SESSIONS * FLOOR
+    us_adaptive = _tick_us(adaptive, zeros)
+
+    tokens = SESSIONS * BENCH_CHUNK           # signal steps per tick
+    tps_static = tokens / (us_static / 1e6)
+    tps_adaptive = tokens / (us_adaptive / 1e6)
+    speedup = us_static / us_adaptive
+    common.emit("early_exit/static_tick", us_static,
+                f"S={S} rows={SESSIONS * S} tokens/s={tps_static:.0f}")
+    common.emit("early_exit/adaptive_tick", us_adaptive,
+                f"S={FLOOR} rows={SESSIONS * FLOOR} "
+                f"tokens/s={tps_adaptive:.0f}")
+    common.emit("early_exit/confident_speedup", us_static - us_adaptive,
+                f"x{speedup:.2f} (bar: >=2x)")
+    return speedup
+
+
+def bench_mixed_quality():
+    """Half easy / half hard: retained sessions bit-exact, drift bounded."""
+    cfg = _cfg(QUAL_HIDDEN)
+    params = clf.init(jax.random.key(0), cfg)
+    n_ticks = 6
+    rng = np.random.default_rng(5)
+    hard_sig = rng.normal(0, 2, (SESSIONS // 2, n_ticks * QUAL_CHUNK, 1))
+
+    def chunks_at(t):
+        out = {}
+        for k in range(SESSIONS):
+            if k < SESSIONS // 2:             # easy half
+                out[f"s{k}"] = jnp.zeros((QUAL_CHUNK, 1), jnp.float32)
+            else:
+                sig = hard_sig[k - SESSIONS // 2]
+                out[f"s{k}"] = jnp.asarray(
+                    sig[t * QUAL_CHUNK:(t + 1) * QUAL_CHUNK], jnp.float32)
+        return out
+
+    static = _engine(params, cfg)
+    adaptive = _engine(params, cfg, threshold=0.0)
+    _open_all(static)
+    _open_all(adaptive)
+    hard_exact, agree, mi_drift, reclaimed = True, 0, 0.0, 0
+    for t in range(n_ticks):
+        want = static.step(chunks_at(t))
+        got = adaptive.step(chunks_at(t))
+        reclaimed += adaptive.last_metrics.reclaimed_rows
+        for k in range(SESSIONS):
+            w, g = want[f"s{k}"].summary, got[f"s{k}"].summary
+            if k >= SESSIONS // 2:            # hard: chains untouched
+                hard_exact &= np.array_equal(np.asarray(w.probs),
+                                             np.asarray(g.probs))
+            agree += int(np.argmax(np.asarray(w.probs))
+                         == np.argmax(np.asarray(g.probs)))
+            mi_drift = max(mi_drift, abs(
+                float(w.mutual_information) - float(g.mutual_information)))
+    assert hard_exact, "early exit perturbed a full-S session's outputs"
+    n_easy = SESSIONS // 2
+    assert reclaimed == n_easy * (S - FLOOR)
+    for k in range(SESSIONS):
+        s_k = int(adaptive.store.get(f"s{k}").rows.shape[0])
+        assert s_k == (FLOOR if k < n_easy else S)
+    common.emit("early_exit/mixed_quality", 0.0,
+                f"hard_bit_exact={hard_exact} "
+                f"pred_agree={agree}/{n_ticks * SESSIONS} "
+                f"max_mi_drift={mi_drift:.2e} reclaimed={reclaimed}")
+
+
+def run():
+    speedup = bench_confident_throughput()
+    bench_mixed_quality()
+    if speedup < 2.0:
+        raise AssertionError(
+            f"confident-traffic speedup x{speedup:.2f} below the 2x bar")
+
+
+if __name__ == "__main__":
+    run()

@@ -14,6 +14,7 @@ Prints ``name,us_per_call,derived`` CSV per benchmark line.
   sharding     bench_sharding        (tokens/s vs device count, data plane)
   controller   bench_controller      (decision overhead, SLO recovery)
   fleet        bench_fleet           (multi-tenant co-batching, fair drain)
+  early_exit   bench_early_exit      (adaptive sampling speedup + quality)
   roofline     roofline              (dry-run derived terms, all 40 cells)
 
 ``--only`` filters by suite name (substring, repeatable); ``--json PATH``
@@ -30,8 +31,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_controller, bench_controlplane,
-                            bench_dse_sweep, bench_fleet, bench_kernels,
-                            bench_latency, bench_opt_modes,
+                            bench_dse_sweep, bench_early_exit, bench_fleet,
+                            bench_kernels, bench_latency, bench_opt_modes,
                             bench_quantization, bench_resource_model,
                             bench_sampling, bench_sharding, bench_streaming,
                             common, roofline)
@@ -48,6 +49,7 @@ def main() -> None:
         ("sharding", bench_sharding),
         ("controller", bench_controller),
         ("fleet", bench_fleet),
+        ("early_exit", bench_early_exit),
         ("roofline", roofline),
     ]
     ap = argparse.ArgumentParser()

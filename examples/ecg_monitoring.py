@@ -30,12 +30,22 @@ paper's DSE over the live knobs, downshifts S at a tick boundary, and the
 demo *proves* the post-swap streams are bit-identical to an uninterrupted
 run at the new config from the same carried state.
 
+Adaptive sampling (dynamic S): ``--early-exit`` serves one flatline
+("easy") stream and one real-ECG ("hard") stream through an engine with
+``early_exit_threshold=0.0`` — the strictest setting, retiring chains only
+when the uncertainty summary is *exactly* converged.  The flatline stream
+collapses to the ``min_samples`` floor (its MC chains are provably
+identical, so surplus chains buy nothing), the ECG stream keeps every
+chain, and the demo proves the surviving streams' outputs are
+bit-identical to a static-S engine's.
+
     PYTHONPATH=src python examples/ecg_monitoring.py [--steps 120]
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke   # CI: tiny + fast
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke --kill-resume
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke --cell gru
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke --precision int8
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke --controller
+    PYTHONPATH=src python examples/ecg_monitoring.py --smoke --early-exit
 """
 
 import argparse
@@ -99,6 +109,11 @@ def main():
                     "downshifts under a simulated x4 load burst, recovers "
                     "the SLO, and the streams stay bit-identical across "
                     "the swap")
+    ap.add_argument("--early-exit", action="store_true",
+                    help="adaptive-sampling demo: a flatline stream "
+                    "retires its surplus MC chains mid-stream, a real "
+                    "ECG stream keeps all of them, and the retained "
+                    "outputs stay bit-identical to a static-S engine")
     ap.add_argument("--snapshot-dir", default=None,
                     help="where --kill-resume persists sessions "
                     "(default: a temp dir)")
@@ -177,6 +192,8 @@ def main():
         kill_and_resume(params, cfg, ex, picks, args, total_t)
     if args.controller:
         controller_demo(params, cfg, ex, picks, args)
+    if args.early_exit:
+        early_exit_demo(cfg, ex, picks, args)
 
 
 def kill_and_resume(params, cfg, ex, picks, args, total_t):
@@ -231,6 +248,67 @@ def kill_and_resume(params, cfg, ex, picks, args, total_t):
         assert same, f"{sid}: kill-and-resume diverged from the " \
             "uninterrupted stream"
     print("kill-and-resume OK: restored process == never-crashed process")
+
+
+def early_exit_demo(cfg, ex, picks, args):
+    """Adaptive sampling: easy streams shed chains, hard streams keep S.
+
+    Served with ``early_exit_threshold=0.0`` — the strictest setting, so
+    a session only retires chains when halving them moves its uncertainty
+    summary by *exactly* nothing.  A flatline signal through a
+    freshly-initialized stack is that case provably: zero input × zero
+    biases keeps every activation at zero, the dropout masks multiply
+    zeros, so all S chains are identical and MI is exactly 0 whatever the
+    prefix.  A real ECG beat excites the chains differently (the masks
+    bind to nonzero activations), the prefix summary moves, and the
+    session keeps every chain.  The demo asserts both behaviours plus the
+    retained-output invariant: the hard stream's per-chunk summaries are
+    bit-identical to a static-S engine serving it solo.
+    """
+    # Fresh init (zero biases) — the flatline argument above needs it.
+    demo_params = clf.init(jax.random.key(0), cfg)
+    floor, S = 2, args.samples
+    eng = StreamingEngine(demo_params, cfg, backend=args.backend,
+                          max_sessions=2,
+                          early_exit_threshold=0.0, min_samples=floor)
+    solo = StreamingEngine(demo_params, cfg, backend=args.backend,
+                           max_sessions=1)
+    # "ecg" first: mask rows follow admission order, and the solo engine
+    # hands its only session rows [0..S) — same rows, same Bayesian draw.
+    eng.open_session("ecg")
+    eng.open_session("flatline")
+    solo.open_session("ecg")
+    print(f"\nearly-exit demo: S={S} floor={floor} threshold=0.0 "
+          f"(flatline vs real beat)")
+    n_chunks, retained_same = 4, True
+    for t in range(n_chunks):
+        lo = t * args.chunk_len
+        beat = jnp.asarray(ex[picks[0]][lo:lo + args.chunk_len], jnp.float32)
+        res = eng.step({"flatline": jnp.zeros((args.chunk_len, 1)),
+                        "ecg": beat})
+        want = solo.step({"ecg": beat})["ecg"]
+        retained_same &= np.array_equal(
+            np.asarray(res["ecg"].summary.probs),
+            np.asarray(want.summary.probs))
+        s_easy = int(eng.store.get("flatline").rows.shape[0])
+        s_hard = int(eng.store.get("ecg").rows.shape[0])
+        m = eng.last_metrics
+        print(f"  tick {t}: flatline S={s_easy} ecg S={s_hard} "
+              f"active={m.active_chains} retired={m.reclaimed_rows}")
+    s_easy = int(eng.store.get("flatline").rows.shape[0])
+    s_hard = int(eng.store.get("ecg").rows.shape[0])
+    assert s_easy == floor, \
+        f"flatline stream should retire to the floor, holds {s_easy}"
+    assert s_hard == S, \
+        f"ecg stream should keep all {S} chains, holds {s_hard}"
+    reclaimed = sum(m.reclaimed_rows for m in eng.metrics)
+    assert reclaimed == S - floor, \
+        f"expected {S - floor} retired chains, metrics counted {reclaimed}"
+    print(f"  ecg stream vs static-S solo engine: "
+          f"bit-identical={retained_same}")
+    assert retained_same, "early exit perturbed a retained stream's outputs"
+    print("early-exit demo OK: confident stream at the floor, uncertain "
+          "stream at full S, retained outputs bit-identical")
 
 
 def controller_demo(params, cfg, ex, picks, args):

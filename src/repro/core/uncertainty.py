@@ -13,6 +13,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class RegressionSummary(NamedTuple):
@@ -65,6 +66,163 @@ def classification_summary(logits: jax.Array) -> ClassificationSummary:
     pred_h = _entropy(probs)
     exp_h = jnp.mean(_entropy(probs_s), axis=0)
     return ClassificationSummary(probs, pred_h, exp_h, pred_h - exp_h)
+
+
+# ---------------------------------------------------------------------------
+# Incremental (mergeable) chain-axis summaries — the early-exit estimators
+# ---------------------------------------------------------------------------
+#
+# The streaming engine's early-exit path needs the uncertainty summary of a
+# *prefix* of a session's MC chains and of the full set, without recomputing
+# either from scratch: accumulate the first k chains, snapshot the summary,
+# fold in the rest, compare.  Both accumulators below are exact one-pass
+# algorithms over the chain axis — plain sums for the classification moments
+# (probs and entropies are chain-wise means) and Welford/Chan for the
+# regression variance (Var_s[mu] must not be computed as E[x^2]-E[x]^2 in
+# fp32).  Accumulation is float64 host numpy: a convergence *decision* must
+# not flip on fp32 summation order, and the chain counts are tiny (S <= 128)
+# so the cost is noise.  ``merge`` implements the parallel (partitioned)
+# update, so summaries over chain subsets compose associatively — the
+# property tests in tests/test_uncertainty_running.py pin both agreement
+# with the batch formulas at fp32 and partition invariance.
+
+class RunningClassificationSummary:
+    """One-pass accumulator over MC chains for ``classification_summary``.
+
+    ``update`` folds in a ``[s, B, C]`` block of stacked chain logits;
+    ``finalize`` returns the same :class:`ClassificationSummary` the batch
+    formula produces over every chain seen so far (fp32).  ``merge`` folds
+    another accumulator in (disjoint chain sets), ``copy`` snapshots the
+    state — together they give prefix-vs-full comparisons for free.
+    """
+
+    def __init__(self):
+        self.count = 0
+        self._prob_sum: np.ndarray | None = None   # [B, C] float64
+        self._ent_sum: np.ndarray | None = None    # [B]    float64
+
+    def update(self, logits) -> "RunningClassificationSummary":
+        block = np.asarray(logits, np.float64)
+        if block.ndim != 3:
+            raise ValueError(f"logits block must be [s, B, C], "
+                             f"got shape {block.shape}")
+        # Stable softmax + entropy per chain, accumulated as plain sums —
+        # the batch formula's means are sums/count, recovered in finalize.
+        z = block - block.max(axis=-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(axis=-1, keepdims=True)
+        ent = -np.sum(p * np.log(np.clip(p, 1e-12, 1.0)), axis=-1)
+        if self._prob_sum is None:
+            self._prob_sum = p.sum(axis=0)
+            self._ent_sum = ent.sum(axis=0)
+        else:
+            self._prob_sum += p.sum(axis=0)
+            self._ent_sum += ent.sum(axis=0)
+        self.count += block.shape[0]
+        return self
+
+    def merge(self, other: "RunningClassificationSummary"
+              ) -> "RunningClassificationSummary":
+        """Fold ``other``'s chains in (disjoint chain sets, any order)."""
+        if other.count == 0:
+            return self
+        if self.count == 0:
+            self._prob_sum = other._prob_sum.copy()
+            self._ent_sum = other._ent_sum.copy()
+        else:
+            self._prob_sum = self._prob_sum + other._prob_sum
+            self._ent_sum = self._ent_sum + other._ent_sum
+        self.count += other.count
+        return self
+
+    def copy(self) -> "RunningClassificationSummary":
+        out = RunningClassificationSummary()
+        out.count = self.count
+        if self._prob_sum is not None:
+            out._prob_sum = self._prob_sum.copy()
+            out._ent_sum = self._ent_sum.copy()
+        return out
+
+    def finalize(self) -> ClassificationSummary:
+        if self.count == 0:
+            raise ValueError("no chains accumulated")
+        probs = self._prob_sum / self.count
+        pred_h = -np.sum(probs * np.log(np.clip(probs, 1e-12, 1.0)), axis=-1)
+        exp_h = self._ent_sum / self.count
+        f32 = lambda a: jnp.asarray(a, jnp.float32)  # noqa: E731
+        return ClassificationSummary(f32(probs), f32(pred_h), f32(exp_h),
+                                     f32(pred_h - exp_h))
+
+
+class RunningRegressionSummary:
+    """Welford/Chan accumulator over MC chains for ``regression_summary``.
+
+    ``update`` folds in ``[s, B, T, I]`` blocks of chain means (and
+    matching log-variances); ``finalize`` matches the batch formula over
+    every chain seen (population variance, as ``jnp.var``).  The mean/M2
+    pair merges by Chan's parallel rule, so partitioned accumulation is
+    order-invariant up to float64 rounding.
+    """
+
+    def __init__(self):
+        self.count = 0
+        self._mean: np.ndarray | None = None      # [B, T, I] float64
+        self._m2: np.ndarray | None = None        # [B, T, I] float64
+        self._var_sum: np.ndarray | None = None   # [B, T, I] E_s[sigma^2] sum
+
+    def update(self, means, log_vars=None) -> "RunningRegressionSummary":
+        block = np.asarray(means, np.float64)
+        if block.ndim < 2:
+            raise ValueError(f"means block must be [s, ...], "
+                             f"got shape {block.shape}")
+        other = RunningRegressionSummary()
+        other.count = block.shape[0]
+        other._mean = block.mean(axis=0)
+        other._m2 = ((block - other._mean) ** 2).sum(axis=0)
+        if log_vars is not None:
+            other._var_sum = np.exp(
+                np.asarray(log_vars, np.float64)).sum(axis=0)
+        else:
+            other._var_sum = np.zeros_like(other._mean)
+        return self.merge(other)
+
+    def merge(self, other: "RunningRegressionSummary"
+              ) -> "RunningRegressionSummary":
+        """Chan's parallel variance update over disjoint chain sets."""
+        if other.count == 0:
+            return self
+        if self.count == 0:
+            self._mean = other._mean.copy()
+            self._m2 = other._m2.copy()
+            self._var_sum = other._var_sum.copy()
+            self.count = other.count
+            return self
+        n_a, n_b = self.count, other.count
+        n = n_a + n_b
+        delta = other._mean - self._mean
+        self._m2 = self._m2 + other._m2 + delta ** 2 * (n_a * n_b / n)
+        self._mean = self._mean + delta * (n_b / n)
+        self._var_sum = self._var_sum + other._var_sum
+        self.count = n
+        return self
+
+    def copy(self) -> "RunningRegressionSummary":
+        out = RunningRegressionSummary()
+        out.count = self.count
+        if self._mean is not None:
+            out._mean = self._mean.copy()
+            out._m2 = self._m2.copy()
+            out._var_sum = self._var_sum.copy()
+        return out
+
+    def finalize(self) -> RegressionSummary:
+        if self.count == 0:
+            raise ValueError("no chains accumulated")
+        epistemic = self._m2 / self.count
+        aleatoric = self._var_sum / self.count
+        f32 = lambda a: jnp.asarray(a, jnp.float32)  # noqa: E731
+        return RegressionSummary(f32(self._mean), f32(aleatoric),
+                                 f32(epistemic), f32(aleatoric + epistemic))
 
 
 def accuracy(probs: jax.Array, labels: jax.Array) -> jax.Array:

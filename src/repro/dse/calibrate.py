@@ -61,18 +61,21 @@ class RooflineFit:
         return self.scale * raw_s + self.overhead_s
 
 
-def tick_raw_seconds(arch: RNNArch, *, rows: int, capacity: int,
+def tick_raw_seconds(arch: RNNArch, *, rows: float, capacity: int,
                      shards: int = 1) -> float:
     """Uncalibrated roofline time for one engine tick.
 
     A tick launches ``rows`` batch rows (sessions × S chains, padding
     included — padded rows run the same graph) for ``capacity`` timesteps,
-    ``shards``-way data-parallel.  ``arch.timesteps`` is overridden by the
-    launch capacity: the arch describes the *model*, the tick decides how
-    much signal one launch consumes.
+    ``shards``-way data-parallel.  ``rows`` may be fractional: with early
+    exit live the controller prices candidates on *expected* active chains
+    (ceiling × observed survival ratio), and the roofline is smooth in the
+    batch dimension anyway.  ``arch.timesteps`` is overridden by the launch
+    capacity: the arch describes the *model*, the tick decides how much
+    signal one launch consumes.
     """
     arch_t = dataclasses.replace(arch, timesteps=int(capacity))
-    m = tpu_model.rnn_step_model(arch_t, batch=int(rows), n_samples=1,
+    m = tpu_model.rnn_step_model(arch_t, batch=float(rows), n_samples=1,
                                  data=int(shards))
     return m["t_step"]
 
@@ -139,12 +142,14 @@ def latency_model(fit: RooflineFit, *, slots: int | None = None,
     """
 
     def model(arch: RNNArch, hw=None, batch: int = 1,
-              n_samples: int = 1) -> float:
+              n_samples: float = 1) -> float:
         del hw
         sessions = max(int(batch), 1)
         if slots is not None:
             sessions = max(sessions, int(slots))
-        rows = sessions * max(int(n_samples), 1)
+        # n_samples may be fractional — expected active chains under early
+        # exit (ceiling × survival ratio), not a chain count.
+        rows = sessions * max(float(n_samples), 1.0)
         raw = tick_raw_seconds(arch, rows=rows, capacity=arch.timesteps,
                                shards=shards)
         return fit.predict(raw)

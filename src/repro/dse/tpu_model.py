@@ -39,7 +39,7 @@ class TpuHwConfig:
         return self.data * self.pod
 
 
-def rnn_step_model(arch: RNNArch, *, batch: int = 1, n_samples: int = 1,
+def rnn_step_model(arch: RNNArch, *, batch: float = 1, n_samples: float = 1,
                    data: int = 1, dtype_bytes: int = 2) -> dict:
     """Roofline terms for the paper's recurrent stack itself (both cells).
 
@@ -48,7 +48,10 @@ def rnn_step_model(arch: RNNArch, *, batch: int = 1, n_samples: int = 1,
     GRU row prices at 3/4 of the LSTM datapath exactly as in
     ``fpga_model.dsp_usage``), with ``batch × n_samples`` MC-chain rows
     sharded ``data``-ways (`repro.launch.rnn_shardings`' data strategy —
-    the mesh split is the reuse-factor analogue here).
+    the mesh split is the reuse-factor analogue here).  ``batch`` and
+    ``n_samples`` may be fractional: under early-exit serving the
+    controller prices *expected* active chains (ceiling × survival
+    ratio), and a roofline is smooth in the row dimension.
 
     Weight bytes are charged **once per launch**, not per timestep — the
     sequence-fused kernel's VMEM residency (docs/kernels.md) is precisely

@@ -26,6 +26,15 @@ knobs — swapping the winning config in at a tick boundary with every
 session's stream continuing bit-identically.  ``--decisions-out`` appends
 each ``DecisionRecord`` as a JSON line.
 
+``--early-exit-threshold`` makes S per-session state: every stream still
+*opens* with ``--samples`` chains (the engine ceiling), but once a
+session's uncertainty summary has converged — dropping half its chains
+would move the summary by at most the threshold — the engine retires the
+surplus rows mid-stream (never below ``--min-samples``).  Confident
+streams get cheaper; uncertain ones keep the full posterior sample.
+``0.0`` is the strictest setting (retire only exactly-converged
+summaries); the flag is incompatible with ``--shards``.
+
 ``--tenants fleet.json`` switches to multi-tenant fleet serving (ISSUE 8):
 the JSON declares heterogeneous tenants — classifier or autoencoder, LSTM
 or GRU, each with its own S, precision and priority weight — and one
@@ -93,7 +102,8 @@ def load_fleet(path: str, default_seed: int):
             "p": 0.125, "placement": "YN", "weight": 3.0,
             "precision": null, "backend": "pallas_seq",
             "max_sessions": 4, "streams": 6, "beats": 2,
-            "decode_window": null, "seed": 0},
+            "decode_window": null, "seed": 0,
+            "early_exit_threshold": null, "min_samples": 1},
            ...]}
 
     ``streams`` is how many signals the tenant submits (> ``max_sessions``
@@ -133,12 +143,15 @@ def load_fleet(path: str, default_seed: int):
         if key not in params_cache:
             params_cache[key] = init(jax.random.key(m.seed), cfg)
         max_sessions = int(e.get("max_sessions", 4))
+        eet = e.get("early_exit_threshold")
         specs.append(TenantSpec(
             name=name, cfg=cfg, params=params_cache[key],
             weight=float(e.get("weight", 1.0)),
             precision=e.get("precision"),
             backend=e.get("backend", "pallas_seq"),
-            max_sessions=max_sessions))
+            max_sessions=max_sessions,
+            early_exit_threshold=None if eet is None else float(eet),
+            min_samples=int(e.get("min_samples", 1))))
         plans[name] = {"streams": int(e.get("streams", max_sessions)),
                        "beats": int(e.get("beats", 2)),
                        "seed": int(e.get("seed", default_seed))}
@@ -291,8 +304,16 @@ def main():
     ap.add_argument("--min-tokens-per-sec", type=float, default=0.0,
                     help="SLO: minimum delivered chain-timesteps/sec (p50)")
     ap.add_argument("--min-samples", type=int, default=1,
-                    help="uncertainty floor: the controller never trades "
-                    "S below this, whatever the latency requirement")
+                    help="uncertainty floor: neither the controller nor "
+                    "early exit ever takes a session below this many "
+                    "chains")
+    ap.add_argument("--early-exit-threshold", type=float, default=None,
+                    metavar="DELTA",
+                    help="adaptive sampling: retire a session's surplus MC "
+                    "chains once halving them would move its uncertainty "
+                    "summary by at most DELTA (0.0 = only exactly "
+                    "converged; default: off, every session keeps "
+                    "--samples chains).  Incompatible with --shards.")
     ap.add_argument("--decisions-out", default=None,
                     help="append controller DecisionRecords as JSON lines "
                     "(default: in-memory ring only)")
@@ -312,6 +333,9 @@ def main():
     total = args.overload or args.sessions
     if args.resume and not args.snapshot_dir:
         ap.error("--resume requires --snapshot-dir")
+    if args.early_exit_threshold is not None and args.shards:
+        ap.error("--early-exit-threshold is incompatible with --shards "
+                 "(sharded launches need uniform chains per session)")
     if args.tenants:
         return run_fleet(args)
 
@@ -337,7 +361,9 @@ def main():
                           max_sessions=args.sessions,
                           chunk_capacity=capacity, ladder=ladder,
                           max_pending=args.max_pending,
-                          mesh=mesh, metrics_sink=sink)
+                          mesh=mesh, metrics_sink=sink,
+                          early_exit_threshold=args.early_exit_threshold,
+                          min_samples=min(args.min_samples, args.samples))
     if args.prewarm:
         t0 = time.perf_counter()
         caps = prewarm(eng)
@@ -417,6 +443,10 @@ def main():
         m = eng.last_metrics
         stat = (f"cap={m.capacity} q={m.queue_depth} "
                 f"waste={m.pad_waste:4.2f}" if m else "idle")
+        if m and args.early_exit_threshold is not None:
+            stat += f" chains={m.active_chains}"
+            if m.reclaimed_rows:
+                stat += f" -{m.reclaimed_rows}"
         print(f"tick {eng.tick:3d} [{stat}] | " + " | ".join(line))
         if ctrl is not None:
             rec = ctrl.maybe_reconfigure()
@@ -447,6 +477,9 @@ def main():
               f"steps over {agg['ticks']} ticks | "
               f"capacities used {agg['capacities_used']} | "
               f"pad waste {agg['pad_waste']:4.2f}")
+        if args.early_exit_threshold is not None:
+            print(f"early exit: {agg['reclaimed_rows']} chain(s) retired | "
+                  f"mean active chains {agg['active_chains_mean']:.1f}")
     if ctrl is not None:
         n_applied = sum(1 for r in ctrl.decisions if r.applied)
         print(f"controller: {len(ctrl.decisions)} decision(s), "

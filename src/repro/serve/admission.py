@@ -67,6 +67,9 @@ class Ticket:
     seq: int                        # FIFO tiebreak within a priority class
     session: Session | None = None  # set for re-attach (evicted carry)
     submitted_at: float = 0.0       # monotonic clock at submit (queue-wait age)
+    n_samples: int | None = None    # fresh admissions: chains to open with
+                                    # (None: the store ceiling; ignored for
+                                    # re-attach — the Session carries its own)
 
 
 class AdmissionQueue:
@@ -87,8 +90,14 @@ class AdmissionQueue:
         self._seq = 0
 
     def submit(self, sid: str, *, priority: int = 0,
-               session: Session | None = None) -> Ticket:
-        """Queue an admission (or, with ``session``, a re-attach) request."""
+               session: Session | None = None,
+               n_samples: int | None = None) -> Ticket:
+        """Queue an admission (or, with ``session``, a re-attach) request.
+
+        ``n_samples`` rides the ticket for a fresh admission: the session
+        opens with that many MC chains when it goes live (None: the store
+        ceiling).  Validated at drain time against the store it lands in.
+        """
         if session is not None and session.sid != sid:
             raise ValueError(f"ticket sid {sid!r} != session.sid "
                              f"{session.sid!r}")
@@ -99,7 +108,9 @@ class AdmissionQueue:
                 f"admission queue full ({self.max_pending} pending); "
                 "shed load upstream or raise max_pending")
         ticket = Ticket(sid=sid, priority=int(priority), seq=self._seq,
-                        session=session, submitted_at=time.monotonic())
+                        session=session, submitted_at=time.monotonic(),
+                        n_samples=None if n_samples is None
+                        else int(n_samples))
         self._seq += 1
         self._pending[sid] = ticket
         heapq.heappush(self._heap, (-ticket.priority, ticket.seq, ticket))
@@ -141,7 +152,8 @@ class AdmissionQueue:
                 if ticket.session is not None:
                     admitted.append(store.attach(ticket.session))
                 else:
-                    admitted.append(store.admit(ticket.sid))
+                    admitted.append(store.admit(
+                        ticket.sid, n_samples=ticket.n_samples))
             except (ValueError, CapacityError) as err:
                 rejected.append((ticket, err))
         if rejected:

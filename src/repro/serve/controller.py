@@ -509,6 +509,15 @@ class CoDesignController:
         """
         demand = max(1, int(percentile([m.n_chunks for m in win], 95)))
         obs_cap = max((m.capacity for m in win), default=1)
+        # Expected-chains discount: with early exit live, a served session
+        # averages live_rows/n_chunks chains — a fraction of the ceiling.
+        # Candidates are priced on *expected* active chains (cfg S scaled
+        # by the observed ratio), not max S: a half-retired fleet has twice
+        # the latency headroom the ceiling would suggest.  Uniform traffic
+        # (threshold off) gives ratio 1.0 and the pre-dynamic-S pricing.
+        ratios = [m.live_rows / (m.n_chunks * self.config.n_samples)
+                  for m in win if m.n_chunks > 0]
+        eff = min(1.0, sum(ratios) / len(ratios)) if ratios else 1.0
         lat_model = _calib.latency_model(fit, slots=self._slots,
                                          shards=self.config.shards)
         table, cfgs = [], []
@@ -518,9 +527,10 @@ class CoDesignController:
                 self.arch, weight_bits=_WEIGHT_BITS[cfg.precision],
                 timesteps=cap)
             pred = lat_model(arch, None, batch=demand,
-                             n_samples=cfg.n_samples)
+                             n_samples=cfg.n_samples * eff)
             slots = max(demand, self._slots or 0)
-            tps = (slots * cfg.n_samples * cap / pred) if pred > 0 else 0.0
+            tps = (slots * cfg.n_samples * eff * cap / pred) \
+                if pred > 0 else 0.0
             table.append(_search.Candidate(
                 arch=arch, n_samples=cfg.n_samples,
                 metrics={"quality": float(cfg.quality),
@@ -595,12 +605,21 @@ class CoDesignController:
             else:
                 from repro.launch.mesh import make_data_mesh
                 mesh, policy = make_data_mesh(new.shards), old.policy
+        # Early-exit config survives the swap; an attached controller also
+        # enforces its SLO's uncertainty floor in the data plane (the
+        # engine floor is the *early-exit* floor — capped by the new
+        # ceiling, since a 2-chain config can't floor at 4).
+        floor = min(new.n_samples, max(old.min_samples,
+                                       self.slo.min_samples))
         eng = StreamingEngine(
             old.params, model_cfg, backend=old.backend,
             max_sessions=old.max_sessions, chunk_capacity=cap_arg,
             ladder=ladder, max_pending=old.queue.max_pending,
             metrics_sink=old.metrics_sink, mesh=mesh, policy=policy,
-            precision=new.precision, interpret=old.interpret)
+            precision=new.precision,
+            early_exit_threshold=(None if mesh is not None
+                                  else old.early_exit_threshold),
+            min_samples=floor, interpret=old.interpret)
         if (old._scheduler is not None and eng._scheduler is not None
                 and eng._scheduler.ladder == old._scheduler.ladder):
             # Same ladder → carry the chunk-length observation window, so
@@ -608,16 +627,26 @@ class CoDesignController:
             # instead of re-learning it from the bottom.
             eng._scheduler.load_state(old._scheduler.state())
         part_dtypes = carry_dtypes(eng.cell, new.precision, eng.backend)
+        # Per-session conversion targets: a session still at the old
+        # *ceiling* follows the new ceiling (the engine-wide S swap); one
+        # that early exit already shrank keeps its earned smaller S (capped
+        # by the new ceiling) — an upshift must not resurrect chains
+        # convergence retired.
+        def _target(s_i: int) -> int:
+            return (new.n_samples if s_i == old.n_samples
+                    else min(s_i, new.n_samples))
+
         # Fresh chains on an upshift draw rows the old engine never used.
         cursor = old.store.next_row
         moved: list[Session] = []
         for sess in old.store.sessions():
             extra = None
-            missing = new.n_samples - int(np.asarray(sess.rows).shape[0])
+            target = _target(int(np.asarray(sess.rows).shape[0]))
+            missing = target - int(np.asarray(sess.rows).shape[0])
             if missing > 0:
                 extra = np.arange(cursor, cursor + missing, dtype=np.uint32)
                 cursor += missing
-            moved.append(convert_session(sess, n_samples=new.n_samples,
+            moved.append(convert_session(sess, n_samples=target,
                                          part_dtypes=part_dtypes,
                                          extra_rows=extra))
         for sess in moved:
@@ -625,18 +654,21 @@ class CoDesignController:
         for t in old.queue.waiting():
             queued = None
             if t.session is not None:
-                missing = (new.n_samples
-                           - int(np.asarray(t.session.rows).shape[0]))
+                target = _target(int(np.asarray(t.session.rows).shape[0]))
+                missing = target - int(np.asarray(t.session.rows).shape[0])
                 extra = None
                 if missing > 0:
                     extra = np.arange(cursor, cursor + missing,
                                       dtype=np.uint32)
                     cursor += missing
                 queued = convert_session(t.session,
-                                         n_samples=new.n_samples,
+                                         n_samples=target,
                                          part_dtypes=part_dtypes,
                                          extra_rows=extra)
-            eng.queue.submit(t.sid, priority=t.priority, session=queued)
+            eng.queue.submit(t.sid, priority=t.priority, session=queued,
+                             n_samples=(None if t.n_samples is None
+                                        else min(t.n_samples,
+                                                 new.n_samples)))
         # Never re-draw a row either engine ever allocated.
         eng.store._next_row = max(eng.store.next_row, cursor)
         eng.tick = old.tick

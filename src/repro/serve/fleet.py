@@ -73,12 +73,20 @@ class TenantSpec:
     cfg: Any                       # ClassifierConfig | AutoencoderConfig
     params: Any
     weight: float = 1.0
-    n_samples: int | None = None   # override cfg.mcd.n_samples (S)
+    n_samples: int | None = None   # override cfg.mcd.n_samples — the
+                                   # tenant's chain *ceiling*: sessions
+                                   # admit at it and early exit retires
+                                   # below it, never above
     precision: str | None = None
     backend: str = "pallas_seq"
     max_sessions: int = 64
     chunk_capacity: int | str | None = None
     slo: Any = None                # SLOPolicy, read by FleetController
+    early_exit_threshold: float | None = None  # staged early-exit sampling
+                                   # (StreamingEngine docstring); part of
+                                   # the launch-group signature — tenants
+                                   # sharing an engine share the policy
+    min_samples: int = 1           # early-exit floor for this tenant
 
     def __post_init__(self):
         if "/" in self.name:
@@ -142,16 +150,29 @@ class FleetEngine:
         self.specs: dict[str, TenantSpec] = {t.name: t for t in tenants}
         self._mesh, self._policy, self._interpret = mesh, policy, interpret
         # Launch-group folding: tenants sharing the same weights *object*
-        # and the same compiled signature (config incl. cell/H/NL/S/mcd,
-        # backend, precision, chunk policy) share one engine — their
-        # sessions batch into the same per-layer launches.  Different
-        # params can never share a launch, so they never share a group.
+        # and the same compiled signature (config incl. cell/H/NL/mcd,
+        # backend, precision, chunk policy, early-exit policy) share one
+        # engine — their sessions batch into the same per-layer launches.
+        # S is *not* part of the signature (unsharded): per-session chain
+        # counts made it session state, so a 4-chain tenant co-batches
+        # with an 8-chain tenant under the group ceiling (max member S).
+        # A meshed fleet keeps S in the signature — sharded launches place
+        # whole sessions per shard assuming one S.  Different params can
+        # never share a launch, so they never share a group.
         self.groups: dict[str, _Group] = {}
         self._tenant_group: dict[str, str] = {}
+        self._group_seq = 0      # names must never recycle: a reconfigured
+        #                          tenant's fresh group could otherwise be
+        #                          named after — and then deleted with — the
+        #                          emptied group it replaces
         by_sig: dict[tuple, list[TenantSpec]] = {}
         for spec in tenants:
-            sig = (id(spec.params), spec.resolved_cfg(), spec.backend,
-                   spec.precision, spec.chunk_capacity)
+            cfg = spec.resolved_cfg()
+            cfg_key = cfg if mesh is not None else dataclasses.replace(
+                cfg, mcd=cfg.mcd.replace(n_samples=1))
+            sig = (id(spec.params), cfg_key, spec.backend,
+                   spec.precision, spec.chunk_capacity,
+                   spec.early_exit_threshold, spec.min_samples)
             by_sig.setdefault(sig, []).append(spec)
         for members in by_sig.values():
             self._make_group([m.name for m in members])
@@ -171,20 +192,39 @@ class FleetEngine:
         self.dropped_admissions: list = []
         self._dropped_unreported: dict[str, int] = {n: 0 for n in names}
 
+    def _resolved_s(self, tenant: str) -> int:
+        """The tenant's chain ceiling (spec S override folded in)."""
+        cfg = self.specs[tenant].resolved_cfg()
+        return max(1, cfg.mcd.n_samples if cfg.mcd.any_bayesian else 1)
+
     def _make_group(self, members: list[str],
                     engine: StreamingEngine | None = None) -> _Group:
-        """Register a launch group for ``members`` (build its engine)."""
-        gname = f"g{len(self.groups)}"
+        """Register a launch group for ``members`` (build its engine).
+
+        The group engine's chain ceiling is the max member S — members
+        with a smaller S admit their sessions below it (per-session chain
+        counts), and the engine's launch shapes are sized by the ceiling.
+        """
+        gname = f"g{self._group_seq}"
+        self._group_seq += 1
         if engine is None:
             lead = self.specs[members[0]]
+            ceiling = max(self._resolved_s(m) for m in members)
+            cfg = lead.resolved_cfg()
+            if cfg.mcd.any_bayesian and cfg.mcd.n_samples != ceiling:
+                cfg = dataclasses.replace(
+                    cfg, mcd=cfg.mcd.replace(n_samples=ceiling))
             engine = StreamingEngine(
-                lead.params, lead.resolved_cfg(), backend=lead.backend,
+                lead.params, cfg, backend=lead.backend,
                 max_sessions=sum(self.specs[m].max_sessions
                                  for m in members),
                 chunk_capacity=lead.chunk_capacity,
                 metrics_sink=RingBufferSink(64),
                 mesh=self._mesh, policy=self._policy,
-                precision=lead.precision, interpret=self._interpret)
+                precision=lead.precision,
+                early_exit_threshold=lead.early_exit_threshold,
+                min_samples=min(lead.min_samples, ceiling),
+                interpret=self._interpret)
         group = _Group(name=gname, engine=engine, tenants=list(members))
         self.groups[gname] = group
         for m in members:
@@ -240,11 +280,11 @@ class FleetEngine:
                     f"session {sid!r} was drawn under seed "
                     f"{session.seed!r}, tenant {tenant!r} uses "
                     f"{engine.store.seed!r}")
-            if int(session.rows.shape[0]) != engine.n_samples:
+            if int(session.rows.shape[0]) > self._resolved_s(tenant):
                 raise ValueError(
                     f"session {sid!r} carries "
                     f"{int(session.rows.shape[0])} MC chains, tenant "
-                    f"{tenant!r} serves {engine.n_samples}")
+                    f"{tenant!r}'s ceiling is {self._resolved_s(tenant)}")
             if session.sid != gsid:
                 session = dataclasses.replace(session, sid=gsid)
         self.queue.submit(tenant, gsid, priority=priority, session=session)
@@ -280,11 +320,16 @@ class FleetEngine:
         return dataclasses.replace(sess, sid=sid)
 
     def _admit_ticket(self, ticket: FleetTicket) -> Session:
-        """Route one drained ticket into its tenant's launch group."""
+        """Route one drained ticket into its tenant's launch group.
+
+        Fresh sessions open at the *tenant's* ceiling, which may sit below
+        the group engine's (the group ceiling is the max member S).
+        """
         store = self.group_of(ticket.tenant).engine.store
         if ticket.session is not None:
             return store.attach(ticket.session)
-        return store.admit(ticket.sid)
+        return store.admit(ticket.sid,
+                           n_samples=self._resolved_s(ticket.tenant))
 
     def _record_drops(self, rejected: list) -> None:
         self.dropped_admissions.extend(rejected)
@@ -348,17 +393,18 @@ class FleetEngine:
         # age of the streams that still couldn't get a row.
         waits = {name: self.queue.oldest_wait_s(name) for name in self.specs}
         by_group: dict[str, dict[str, Any]] = {}
-        tenant_lens: dict[str, list[int]] = {}
+        tenant_lens: dict[str, dict[str, int]] = {}
         for tenant, tchunks in chunks.items():
             group = self.group_of(tenant)          # raises on unknown tenant
             if not tchunks:
                 continue
             gmap = by_group.setdefault(group.name, {})
-            lens = tenant_lens.setdefault(tenant, [])
+            lens = tenant_lens.setdefault(tenant, {})
             for sid, chunk in tchunks.items():
                 x = np.asarray(chunk)
-                lens.append(x.shape[0] if x.ndim else 1)
-                gmap[self._gsid(tenant, sid)] = chunk
+                gsid = self._gsid(tenant, sid)
+                lens[gsid] = x.shape[0] if x.ndim else 1
+                gmap[gsid] = chunk
 
         results: dict[str, dict[str, ChunkResult]] = {
             t: {} for t in chunks if chunks[t]}
@@ -375,22 +421,33 @@ class FleetEngine:
 
         # One tagged record per tenant that served, plus a quiet record for
         # tenants with pending or dropped work that got nothing this tick.
-        s_of = {t: self.group_of(t).engine.n_samples for t in self.specs}
+        # Chain accounting is per-session (the engine's _last_served_chains /
+        # _last_reclaimed tick attribution): with early exit live, a
+        # tenant's rows/chain-steps reflect its sessions' *own* chain
+        # counts, not the group ceiling.
         for tenant, lens in tenant_lens.items():
+            engine = self.group_of(tenant).engine
             gm = group_metrics.get(self._tenant_group[tenant])
             if gm is None:
                 continue
-            s = s_of[tenant]
-            live = int(sum(lens))
+            served = engine._last_served_chains
+            chains = sum(served.get(gsid, 0) for gsid in lens)
+            chain_steps = sum(L * served.get(gsid, 0)
+                              for gsid, L in lens.items())
+            reclaimed = sum(n for gsid, n in engine._last_reclaimed.items()
+                            if gsid in lens)
+            live = int(sum(lens.values()))
             self.metrics_sink.emit(dataclasses.replace(
                 gm, tick=self.tick, tenant=tenant,
-                n_chunks=len(lens), live_rows=len(lens) * s,
-                live_steps=live, live_chain_steps=live * s,
-                tokens_per_sec=(live * s / gm.duration_s
+                n_chunks=len(lens), live_rows=chains,
+                live_steps=live, live_chain_steps=chain_steps,
+                tokens_per_sec=(chain_steps / gm.duration_s
                                 if gm.duration_s > 0 else 0.0),
                 queue_depth=self.queue.depth_of(tenant),
                 queue_wait_s=waits[tenant],
-                dropped=self._take_dropped(tenant)))
+                dropped=self._take_dropped(tenant),
+                active_chains=self._active_chains(tenant),
+                reclaimed_rows=reclaimed))
         for tenant in self.specs:
             if tenant in tenant_lens:
                 continue
@@ -403,9 +460,14 @@ class FleetEngine:
                 live_steps=0, live_chain_steps=0, padded_steps=0,
                 pad_waste=0.0, duration_s=0.0, tokens_per_sec=0.0,
                 queue_wait_s=waits[tenant], dropped=dropped,
+                active_chains=self._active_chains(tenant),
                 tenant=tenant))
         self.tick += 1
         return results
+
+    def _active_chains(self, tenant: str) -> int:
+        """Live MC chains across one tenant's sessions (post-retire gauge)."""
+        return sum(int(s.rows.shape[0]) for s in self.sessions_of(tenant))
 
     def _take_dropped(self, tenant: str) -> int:
         n, self._dropped_unreported[tenant] = \
@@ -430,6 +492,7 @@ class FleetEngine:
         from repro.serve.controller import carry_dtypes, convert_session
 
         spec = self.specs[tenant]
+        old_ceiling = self._resolved_s(tenant)
         old_group = self.group_of(tenant)
         old_engine = old_group.engine
         new_cap = getattr(new, "chunk_capacity", 0) or spec.chunk_capacity
@@ -448,24 +511,34 @@ class FleetEngine:
         # allocated rows independently, so folding a reconfigured tenant
         # into it could only collide.  The new store's cursor starts past
         # everything the old group ever drew (same seed space).
+        new_ceiling = max(1, int(new.n_samples))
         engine = StreamingEngine(
             new_spec.params, new_spec.resolved_cfg(),
             backend=new_spec.backend, max_sessions=new_spec.max_sessions,
             chunk_capacity=new_spec.chunk_capacity,
             metrics_sink=RingBufferSink(64),
             mesh=self._mesh, policy=self._policy,
-            precision=new_spec.precision, interpret=self._interpret)
+            precision=new_spec.precision,
+            early_exit_threshold=new_spec.early_exit_threshold,
+            min_samples=min(new_spec.min_samples, new_ceiling),
+            interpret=self._interpret)
         cursor = old_engine.store.next_row
         part_dtypes = carry_dtypes(engine.cell, new_spec.precision,
                                    engine.backend)
         for sess in moved:
             extra = None
-            missing = engine.n_samples - int(np.asarray(sess.rows).shape[0])
+            s_i = int(np.asarray(sess.rows).shape[0])
+            # A session at the old tenant ceiling follows the new ceiling;
+            # one early exit already shrank keeps its earned smaller S
+            # (capped) — the swap must not resurrect retired chains.
+            target = (engine.n_samples if s_i == old_ceiling
+                      else min(s_i, engine.n_samples))
+            missing = target - s_i
             if missing > 0:
                 extra = np.arange(cursor, cursor + missing, dtype=np.uint32)
                 cursor += missing
             engine.store.attach(convert_session(
-                sess, n_samples=engine.n_samples, part_dtypes=part_dtypes,
+                sess, n_samples=target, part_dtypes=part_dtypes,
                 extra_rows=extra))
         engine.store._next_row = max(engine.store.next_row, cursor)
         old_engine.store._next_row = max(old_engine.store.next_row, cursor)
@@ -491,7 +564,9 @@ class FleetEngine:
         tenants = {
             name: {"group": self._tenant_group[name],
                    "weight": self.specs[name].weight,
-                   "n_samples": self.group_of(name).engine.n_samples,
+                   # The tenant's own ceiling (may sit below its group
+                   # engine's — the group ceiling is the max member S).
+                   "n_samples": self._resolved_s(name),
                    "precision": self.specs[name].precision,
                    "backend": self.specs[name].backend}
             for name in self.specs}

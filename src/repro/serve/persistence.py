@@ -149,6 +149,12 @@ def snapshot_store(directory: str, store: SessionStore, *,
         for ticket in queue.waiting():
             entry = {"sid": ticket.sid, "priority": ticket.priority,
                      "attached": ticket.session is not None}
+            if ticket.n_samples is not None:
+                # A fresh ticket's requested chain count is admission state
+                # too — dropping it on restore would silently admit the
+                # stream at the ceiling.  (Absent in pre-dynamic-S
+                # snapshots; restore_store's .get() defaults to None.)
+                entry["n_samples"] = int(ticket.n_samples)
             if ticket.session is not None:
                 # A queued re-attach carries live state — it must survive
                 # the crash with the same fidelity as an admitted session.
@@ -237,7 +243,7 @@ def restore_store(directory: str, *, step: int | None = None,
                 sess = _rebuild_session(entry["sid"], entry["session"],
                                         arrays[entry["sid"]], meta["seed"])
             queue.submit(entry["sid"], priority=entry["priority"],
-                         session=sess)
+                         session=sess, n_samples=entry.get("n_samples"))
     return store, meta
 
 

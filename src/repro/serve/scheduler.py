@@ -73,6 +73,13 @@ class TickMetrics:
                            # drained out of the queue that could never go
                            # live — previously visible only in the engine's
                            # in-memory dropped_admissions deque)
+    active_chains: int = 0     # live MC chains across the whole store at
+                               # tick end (post-retire) — with early-exit
+                               # sampling this drifts below sessions x S,
+                               # and it is what expected-chain cost pricing
+                               # (dse.calibrate) reads
+    reclaimed_rows: int = 0    # chain rows retired by early exit this tick
+                               # (freed batch capacity; row ids stay burned)
     tenant: str | None = None  # owning tenant when the record came from a
                                # FleetEngine tick (None: single-tenant
                                # engine); summarize() groups on it
@@ -250,6 +257,13 @@ def summarize(metrics: Sequence[TickMetrics]) -> dict:
         "queue_wait_s_p95": percentile([m.queue_wait_s for m in metrics], 95),
         "compiles": sum(m.compiles for m in metrics),
         "dropped": sum(m.dropped for m in metrics),
+        # Early-exit observables: how many chains the store still runs
+        # (mean over the window — a gauge, not a counter) and how many
+        # rows convergence retired in total.  active_chains_mean equal to
+        # live sessions x S means early exit never fired (or is off).
+        "active_chains_mean": (sum(m.active_chains for m in metrics)
+                               / len(metrics)),
+        "reclaimed_rows": sum(m.reclaimed_rows for m in metrics),
     }
     tenants = sorted({m.tenant for m in metrics if m.tenant is not None})
     if tenants:

@@ -41,7 +41,10 @@ class Session:
     """One monitored stream: mask coordinates + carried recurrent state."""
 
     sid: str
-    rows: jax.Array            # [S] uint32 — fixed mask-stream row ids
+    rows: jax.Array            # [s] uint32 mask-stream row ids; s is *this
+                               # session's* chain count — allocated once at
+                               # admission, only ever trimmed to a prefix
+                               # (retire); ids never reassigned
     seed: Any                  # counter-PRNG base seed (shared, engine-wide)
     state: list | None = None  # per-layer [(h [S,H], c [S,H]), ...] or fresh
     steps: int = 0             # timesteps consumed so far
@@ -55,13 +58,18 @@ class Session:
 class SessionStore:
     """Capacity-bounded registry of live streaming sessions.
 
-    ``n_samples`` is S, the number of MC chains per session: each admitted
-    session reserves S consecutive mask-stream rows from a monotone
-    allocator, so concurrent (and successive) sessions draw independent
-    masks while each session's own masks stay tied across every chunk it
-    ever streams.  Row ids are never reused after eviction — a restarted
+    ``n_samples`` is the store's **chain ceiling**: the default (and
+    maximum) number of MC chains per session.  S itself is *per-session
+    state* — ``admit`` takes an optional smaller chain count, and
+    :meth:`retire` shrinks a live session's chains mid-stream (the
+    early-exit path).  Each admitted session reserves its chains'
+    mask-stream rows from a monotone allocator, so concurrent (and
+    successive) sessions draw independent masks while each session's own
+    masks stay tied across every chunk it ever streams.  Row ids are never
+    reused — neither after eviction nor after a retire — so a restarted
     session is a *new* Bayesian draw unless the caller re-attaches the
-    evicted :class:`Session` object itself.
+    evicted :class:`Session` object itself, and a shrunk session's
+    surviving chains keep exactly the masks they always had.
     """
 
     def __init__(self, n_samples: int, seed=0, *, max_sessions: int = 64,
@@ -74,19 +82,58 @@ class SessionStore:
         self._next_row = int(first_row)
         self._sessions: dict[str, Session] = {}
 
-    def admit(self, sid: str) -> Session:
-        """Register a new stream; allocates its S mask rows for life."""
+    def admit(self, sid: str, *, n_samples: int | None = None) -> Session:
+        """Register a new stream; allocates its mask rows for life.
+
+        ``n_samples`` opens the session with fewer chains than the store
+        ceiling (None: the ceiling) — a cheap tenant or an operator who
+        already knows the traffic is easy; it can never exceed the ceiling,
+        which is what co-batched launch shapes are sized against.
+        """
         if sid in self._sessions:
             raise ValueError(f"session {sid!r} already admitted")
         if len(self._sessions) >= self.max_sessions:
             raise CapacityError(
                 f"store full ({self.max_sessions} sessions); evict first")
-        rows = jnp.arange(self._next_row, self._next_row + self.n_samples,
+        s = self.n_samples if n_samples is None else int(n_samples)
+        if not 1 <= s <= self.n_samples:
+            raise ValueError(
+                f"session {sid!r} wants {s} MC chains, store ceiling is "
+                f"{self.n_samples} (floor 1)")
+        rows = jnp.arange(self._next_row, self._next_row + s,
                           dtype=jnp.uint32)
-        self._next_row += self.n_samples
+        self._next_row += s
         sess = Session(sid=sid, rows=rows, seed=self.seed)
         self._sessions[sid] = sess
         return sess
+
+    def retire(self, sid: str, keep: int) -> int:
+        """Shrink a live session to its first ``keep`` MC chains.
+
+        The early-exit primitive: chains are independent trajectories
+        (each batch row sees only its own mask row and the shared signal),
+        so keeping a *prefix* leaves the survivors' masks and carries
+        untouched — the shrunk session streams on bit-identically to a
+        session that had those ``keep`` rows all along, and co-batched
+        neighbours never notice (masks are pure functions of ``(seed,
+        rows)``; batch composition is launch-invariant).  The freed rows
+        are released as batch capacity only — their ids stay burned in the
+        allocator, a retired chain's draw is never repeated.  Returns the
+        number of rows retired.
+        """
+        sess = self.get(sid)
+        s_old = int(sess.rows.shape[0])
+        keep = int(keep)
+        if not 1 <= keep <= s_old:
+            raise ValueError(
+                f"session {sid!r}: keep={keep} must be in [1, {s_old}]")
+        if keep == s_old:
+            return 0
+        sess.rows = sess.rows[:keep]
+        if sess.state is not None:
+            sess.state = [tuple(part[:keep] for part in layer)
+                          for layer in sess.state]
+        return s_old - keep
 
     def attach(self, session: Session) -> Session:
         """Re-admit a previously evicted :class:`Session` object.
@@ -106,10 +153,10 @@ class SessionStore:
                 f"session {session.sid!r} was drawn under seed "
                 f"{session.seed!r}, store uses {self.seed!r} — reattaching "
                 "would silently change its masks")
-        if int(session.rows.shape[0]) != self.n_samples:
+        if int(session.rows.shape[0]) > self.n_samples:
             raise ValueError(
                 f"session {session.sid!r} carries "
-                f"{int(session.rows.shape[0])} MC chains, store serves "
+                f"{int(session.rows.shape[0])} MC chains, store ceiling is "
                 f"{self.n_samples}")
         attached = {int(r) for r in np.asarray(session.rows)}
         for live in self._sessions.values():
@@ -142,6 +189,11 @@ class SessionStore:
     def sessions(self) -> list[Session]:
         """Live sessions in admission order (snapshot iteration order)."""
         return list(self._sessions.values())
+
+    @property
+    def active_chains(self) -> int:
+        """Total live MC chains across every session (post-retire gauge)."""
+        return sum(int(s.rows.shape[0]) for s in self._sessions.values())
 
     @property
     def next_row(self) -> int:

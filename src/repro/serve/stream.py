@@ -51,6 +51,8 @@ import numpy as np
 from repro.core import autoencoder as _ae, classifier as _clf, mcd as _mcd
 from repro.kernels import quantize as _quant
 from repro.core.uncertainty import (ClassificationSummary, RegressionSummary,
+                                    RunningClassificationSummary,
+                                    RunningRegressionSummary,
                                     classification_summary,
                                     regression_summary)
 from repro.serve import persistence as _persist
@@ -204,6 +206,24 @@ class StreamingEngine:
         activation dtype, LSTM c in fp32), so snapshots record it and
         :meth:`restore` refuses a mismatch — resuming bf16 carries into
         an fp32 engine would silently change the stream's numerics.
+      early_exit_threshold: enable staged early-exit MC sampling.  After
+        each served chunk the engine compares a session's uncertainty
+        summary over *all* its chains against the summary over the first
+        half (the incremental ``Running*Summary`` accumulators in
+        ``repro.core.uncertainty``): a prefix-converged session —
+        classification: ``|MI_full - MI_half|``; autoencoder: mean
+        ``|epistemic_full - epistemic_half|`` — has its surplus chains
+        retired to ``max(min_samples, ceil(s/2))``, one stage per tick.
+        Retirement keeps a chain *prefix*, so surviving chains' masks and
+        carries are untouched and co-batched neighbours are unaffected
+        (masks stay pure functions of ``(seed, rows)``).  ``None``
+        (default) disables the estimator entirely — the engine is then
+        bit-identical to the pre-dynamic-S static engine on every
+        backend, cell, chunking and snapshot path.  Incompatible with
+        ``mesh`` (ragged chain counts would unbalance the shards).
+      min_samples: the early-exit floor — no session is ever retired
+        below this many chains (the ``SLOPolicy.min_samples`` uncertainty
+        floor, enforced in the data plane).
       interpret: forwarded to the Pallas backends (default: auto off-TPU).
     """
 
@@ -215,6 +235,8 @@ class StreamingEngine:
                  metrics_window: int = 4096,
                  metrics_sink: MetricsSink | None = None,
                  mesh=None, policy=None, precision: str | None = None,
+                 early_exit_threshold: float | None = None,
+                 min_samples: int = 1,
                  interpret: bool | None = None):
         if isinstance(cfg, _clf.ClassifierConfig):
             self.kind = "classifier"
@@ -254,9 +276,35 @@ class StreamingEngine:
         # store per-layer (h, c), GRU sessions (h,) — see _gather_states.
         self.cell = getattr(cfg, "cell", "lstm")
         s = cfg.mcd.n_samples if cfg.mcd.any_bayesian else 1
+        # The engine-wide chain *ceiling*.  S itself is per-session state
+        # (SessionStore): admissions may open below the ceiling and early
+        # exit retires chains mid-stream, so launch shapes are sized by the
+        # ceiling while live chain counts drift underneath it.
         self.n_samples = max(1, s)
+        if early_exit_threshold is not None:
+            if mesh is not None:
+                raise ValueError(
+                    "early_exit_threshold is incompatible with mesh= — "
+                    "ragged per-session chain counts would unbalance the "
+                    "whole-sessions-per-shard placement; run early exit "
+                    "unsharded or disable it on the mesh engine")
+            if not float(early_exit_threshold) >= 0.0:
+                raise ValueError(f"early_exit_threshold must be >= 0, "
+                                 f"got {early_exit_threshold}")
+        self.early_exit_threshold = (None if early_exit_threshold is None
+                                     else float(early_exit_threshold))
+        if not 1 <= int(min_samples) <= self.n_samples:
+            raise ValueError(
+                f"min_samples must be in [1, {self.n_samples}], "
+                f"got {min_samples}")
+        self.min_samples = int(min_samples)
         self.store = SessionStore(self.n_samples, cfg.mcd.seed,
                                   max_sessions=max_sessions)
+        # Per-tick attribution for the fleet sink: sid -> chains served /
+        # rows retired on the most recent step() (read by FleetEngine to
+        # split active_chains/reclaimed_rows across tenant records).
+        self._last_served_chains: dict[str, int] = {}
+        self._last_reclaimed: dict[str, int] = {}
         self.queue = AdmissionQueue(max_pending)
         self.tick = 0
         # Pluggable, bounded: the engine is built for unbounded streams —
@@ -276,17 +324,31 @@ class StreamingEngine:
         self._dropped_unreported = 0
 
     # -- session lifecycle ---------------------------------------------------
-    def open_session(self, sid: str):
+    def open_session(self, sid: str, *, n_samples: int | None = None):
         """Admit a stream *now* or fail fast with ``CapacityError``.
 
         The synchronous path — callers that would rather wait for a freed
-        row than handle the error use :meth:`admit`.  Its S mask rows are
-        fixed here, for life.
+        row than handle the error use :meth:`admit`.  Its mask rows are
+        fixed here, for life; ``n_samples`` opens below the engine ceiling
+        (None: the ceiling).
         """
-        return self.store.admit(sid)
+        self._check_chain_count(sid, n_samples)
+        return self.store.admit(sid, n_samples=n_samples)
+
+    def _check_chain_count(self, sid: str, n_samples: int | None) -> None:
+        # Sharded engines place whole sessions per shard assuming one S —
+        # refuse a sub-ceiling admission up front rather than poisoning the
+        # tick every co-batched session shares (see step()'s guard).
+        if (n_samples is not None and self._shards > 1
+                and int(n_samples) != self.n_samples):
+            raise ValueError(
+                f"session {sid!r}: sharded engines serve a uniform "
+                f"{self.n_samples} chains/session; per-session S needs an "
+                "unsharded engine")
 
     def admit(self, sid: str, *, priority: int = 0,
-              session: Session | None = None):
+              session: Session | None = None,
+              n_samples: int | None = None):
         """Queue a stream for admission; drain it into any free row now.
 
         The asynchronous path: never raises ``CapacityError`` — at capacity
@@ -308,11 +370,17 @@ class StreamingEngine:
                 raise ValueError(
                     f"session {sid!r} was drawn under seed "
                     f"{session.seed!r}, engine uses {self.store.seed!r}")
-            if int(session.rows.shape[0]) != self.n_samples:
+            if int(session.rows.shape[0]) > self.n_samples:
                 raise ValueError(
                     f"session {sid!r} carries {int(session.rows.shape[0])} "
-                    f"MC chains, engine serves {self.n_samples}")
-        self.queue.submit(sid, priority=priority, session=session)
+                    f"MC chains, engine ceiling is {self.n_samples}")
+            if (self._shards > 1
+                    and int(session.rows.shape[0]) != self.n_samples):
+                self._check_chain_count(sid, int(session.rows.shape[0]))
+        else:
+            self._check_chain_count(sid, n_samples)
+        self.queue.submit(sid, priority=priority, session=session,
+                          n_samples=n_samples)
         try:
             self.queue.drain(self.store)
         except DrainRejected as err:
@@ -341,6 +409,7 @@ class StreamingEngine:
 
     def attach_session(self, session):
         """Re-admit an evicted Session (same draw: state + (seed, rows))."""
+        self._check_chain_count(session.sid, int(session.rows.shape[0]))
         return self.store.attach(session)
 
     def _drain(self):
@@ -454,10 +523,15 @@ class StreamingEngine:
         mismatch error below fires identically whether the snapshot is a
         standalone engine's or one launch group inside a fleet manifest.
         """
+        # The snapshot records the writing store's chain *ceiling*; sessions
+        # carry their own S in their rows arrays (pre-dynamic snapshots
+        # simply have every session at the old uniform S).  The ceilings
+        # must match exactly: it pins the row-allocator layout, and a
+        # mismatch is a config mixup, not a resumable state.
         if meta["n_samples"] != self.n_samples:
             raise ValueError(
-                f"snapshot serves {meta['n_samples']} MC chains/session, "
-                f"engine config serves {self.n_samples}")
+                f"snapshot's chain ceiling is {meta['n_samples']} MC "
+                f"chains/session, engine ceiling is {self.n_samples}")
         if meta["seed"] != self.cfg.mcd.seed:
             raise ValueError(
                 f"snapshot drawn under seed {meta['seed']!r}, engine uses "
@@ -500,6 +574,10 @@ class StreamingEngine:
     def _adopt(self, store: SessionStore, queue: AdmissionQueue,
                engine_meta: dict) -> None:
         """Take over a restored store/queue + validated engine meta."""
+        # The engine's own ceiling governs from here on (meta check pinned
+        # them equal) — restored sessions keep whatever per-session S their
+        # rows arrays carry.
+        store.n_samples = self.n_samples
         self.store = store
         self.queue = queue
         self.tick = int(engine_meta.get("tick", 0))
@@ -523,7 +601,6 @@ class StreamingEngine:
         queue_wait_s = self.queue.oldest_wait_s()
         compiles_before = stack_compile_count()
         t_start = time.perf_counter()
-        s = self.n_samples
         sessions, xs, lens = [], [], []
         for sid, chunk in chunks.items():
             sess = self.store.get(sid)
@@ -536,6 +613,17 @@ class StreamingEngine:
             sessions.append(sess)
             xs.append(x)
             lens.append(x.shape[0])
+        # Per-session chain counts — S is session state, not an engine
+        # constant.  With every session at the ceiling (the threshold-off
+        # default) the layout below is byte-identical to the static-S
+        # engine's; sharded launches require exactly that (whole sessions
+        # per shard is only well-defined with one S).
+        s_list = [int(sess.rows.shape[0]) for sess in sessions]
+        if self._shards > 1 and any(si != self.n_samples for si in s_list):
+            raise ValueError(
+                "sharded launches need every session at the engine ceiling "
+                f"({self.n_samples} chains); got {s_list} — per-session S "
+                "would straddle shard boundaries")
 
         if self._scheduler is not None:
             t_max = self._scheduler.plan(lens)
@@ -548,20 +636,29 @@ class StreamingEngine:
             t_max = max(lens)
         dtype = xs[0].dtype
         slots = self._slot_count(len(sessions))
-        n_pad = (slots - len(sessions)) * s
+        # Launch size: fixed-shape modes always budget ceiling chains per
+        # slot — retired chains become tail padding and the one-graph
+        # guarantee survives early exit.  Dynamic mode launches exactly the
+        # live chains, so retirement shrinks the actual compute.
+        live_chains = sum(s_list)
+        nb = slots * self.n_samples if (self._fixed or self._shards > 1) \
+            else live_chains
+        n_pad = nb - live_chains
         # Batch assembly stages in host numpy — one device transfer per
         # operand per tick, not O(sessions) tiny dispatches.  Session-major,
-        # chain-minor: row k*S+j is chain j of session k, matching the
-        # concatenated per-session mask rows.
-        nb = slots * s
+        # chain-minor: session k's chains pack at offsets[k], matching the
+        # concatenated per-session mask rows (offset k*S when uniform).
         x_host = np.zeros((nb, t_max, xs[0].shape[1]), dtype)
         rows_host = np.zeros((nb,), np.uint32)
         lens_host = np.ones((nb,), np.int32)
-        for k, (x, L, sess) in enumerate(zip(xs, lens, sessions)):
-            sl = slice(k * s, (k + 1) * s)
+        offsets, off = [], 0
+        for x, L, sess, si in zip(xs, lens, sessions, s_list):
+            sl = slice(off, off + si)
+            offsets.append(off)
             x_host[sl, :L] = x[None]
             rows_host[sl] = np.asarray(sess.rows)
             lens_host[sl] = L
+            off += si
         x_batch = jnp.asarray(x_host)
         rows = jnp.asarray(rows_host)
         lengths = jnp.asarray(lens_host)
@@ -573,33 +670,56 @@ class StreamingEngine:
         else:
             mean, log_var = outs
 
-        # One batched summary over [S, n_sessions, ...] — per-session results
-        # are indexed out, not recomputed per session.
+        # Batched summaries over [s, group, ...] — per-session results are
+        # indexed out, not recomputed per session.  A uniform tick (the
+        # common case, and always when the threshold is off) is one reshape
+        # of the contiguous live prefix — the static engine's exact op
+        # sequence.  Ragged ticks group sessions by chain count (staged
+        # halving keeps distinct counts at most log2(S)+1) and gather each
+        # group's rows; values are launch-layout-invariant either way.
         k_n = len(sessions)
-        if self.kind == "classifier":
-            per_chain = jnp.swapaxes(
-                logits.reshape(-1, s, logits.shape[-1])[:k_n], 0, 1)
-            batched = classification_summary(per_chain.astype(jnp.float32))
-        else:
-            shape = (-1, s) + mean.shape[1:]
-            mu = jnp.swapaxes(mean.reshape(shape)[:k_n], 0, 1)
-            lv = (None if log_var is None
-                  else jnp.swapaxes(log_var.reshape(shape)[:k_n], 0, 1))
-            batched = regression_summary(
-                mu.astype(jnp.float32),
-                None if lv is None else lv.astype(jnp.float32))
+        summaries: list = [None] * k_n
+        groups = ([(s_list[0], list(range(k_n)))] if len(set(s_list)) == 1
+                  else sorted({si: [k for k in range(k_n)
+                                    if s_list[k] == si]
+                               for si in set(s_list)}.items()))
+        for si, ks in groups:
+            if len(ks) == k_n:
+                sel = lambda a: a.reshape((-1, si) + a.shape[1:])[:k_n]  # noqa: E731
+            else:
+                idx = jnp.asarray(np.concatenate(
+                    [np.arange(offsets[k], offsets[k] + si) for k in ks]))
+                sel = lambda a: a[idx].reshape((len(ks), si) + a.shape[1:])  # noqa: E731
+            if self.kind == "classifier":
+                per_chain = jnp.swapaxes(sel(logits), 0, 1)
+                batched = classification_summary(
+                    per_chain.astype(jnp.float32))
+                for j, k in enumerate(ks):
+                    summaries[k] = ClassificationSummary(
+                        *(v[j] for v in batched))
+            else:
+                mu = jnp.swapaxes(sel(mean), 0, 1)
+                lv = (None if log_var is None
+                      else jnp.swapaxes(sel(log_var), 0, 1))
+                batched = regression_summary(
+                    mu.astype(jnp.float32),
+                    None if lv is None else lv.astype(jnp.float32))
+                for j, k in enumerate(ks):
+                    summaries[k] = RegressionSummary(
+                        *(v[j] for v in batched))
 
         # Windowed-decoder AEs reconstruct only min(L, W) positions per chunk
         # — the valid slice is capped by the decode window, not the chunk.
         win = getattr(self.cfg, "decode_window", None)
         results: dict[str, ChunkResult] = {}
         for k, (sess, L) in enumerate(zip(sessions, lens)):
-            sl = slice(k * s, (k + 1) * s)
+            sl = slice(offsets[k], offsets[k] + s_list[k])
             if self.kind == "classifier":
-                summary = ClassificationSummary(*(v[k] for v in batched))
+                summary = summaries[k]
             else:
                 valid = L if win is None else min(L, win)
-                summary = RegressionSummary(*(v[k, :valid] for v in batched))
+                summary = RegressionSummary(
+                    *(v[:valid] for v in summaries[k]))
             sess.state = [tuple(part[sl] for part in layer)
                           for layer in states]
             sess.steps += L
@@ -608,25 +728,85 @@ class StreamingEngine:
                                             steps_total=sess.steps,
                                             summary=summary)
 
+        self._last_served_chains = {sess.sid: si for sess, si
+                                    in zip(sessions, s_list)}
+        reclaimed = self._early_exit(sessions, lens, s_list, offsets, outs,
+                                     win)
+
         # Control-plane observables (host wall-clock; on CPU interpret the
         # dispatch is effectively synchronous, on TPU it's a dispatch proxy).
         dur = time.perf_counter() - t_start
         live_steps = int(sum(lens))
+        live_chain_steps = int(sum(L * si for L, si in zip(lens, s_list)))
         m = TickMetrics(
             tick=self.tick, capacity=int(t_max), n_chunks=len(sessions),
-            live_rows=len(sessions) * s, batch_rows=nb,
+            live_rows=live_chains, batch_rows=nb,
             queue_depth=len(self.queue), live_steps=live_steps,
-            live_chain_steps=live_steps * s,
+            live_chain_steps=live_chain_steps,
             padded_steps=nb * int(t_max),
-            pad_waste=1.0 - (live_steps * s) / (nb * int(t_max)),
+            pad_waste=1.0 - live_chain_steps / (nb * int(t_max)),
             duration_s=dur,
-            tokens_per_sec=live_steps * s / dur if dur > 0 else 0.0,
+            tokens_per_sec=live_chain_steps / dur if dur > 0 else 0.0,
             shards=self._shards, queue_wait_s=queue_wait_s,
             compiles=stack_compile_count() - compiles_before,
-            dropped=self._take_dropped())
+            dropped=self._take_dropped(),
+            active_chains=self.store.active_chains,
+            reclaimed_rows=reclaimed)
         self.metrics_sink.emit(m)
         self.tick += 1
         return results
+
+    def _early_exit(self, sessions, lens, s_list, offsets, outs, win) -> int:
+        """Retire surplus chains of prefix-converged sessions (one stage).
+
+        For each served session still above the floor, compare the
+        uncertainty summary over the prefix it would keep
+        (``max(min_samples, ceil(s/2))`` chains) against the summary over
+        all its chains, via the incremental accumulators — classification:
+        ``|MI_full - MI_prefix|``; autoencoder: mean
+        ``|epistemic_full - epistemic_prefix|`` over the valid positions.
+        A delta at or under the threshold halves the session (down to the
+        floor) through ``SessionStore.retire`` — prefix-trim only, so the
+        survivors' masks/carries and every co-batched neighbour are
+        untouched.  Returns total rows retired this tick.
+        """
+        self._last_reclaimed = {}
+        if self.early_exit_threshold is None:
+            return 0
+        reclaimed = 0
+        for k, (sess, L) in enumerate(zip(sessions, lens)):
+            si = s_list[k]
+            keep = max(self.min_samples, (si + 1) // 2)
+            if keep >= si:
+                continue
+            off = offsets[k]
+            if self.kind == "classifier":
+                (logits,) = outs
+                lg = np.asarray(logits[off:off + si])[:, None, :]  # [s,1,C]
+                prefix = RunningClassificationSummary().update(lg[:keep])
+                full = prefix.copy().update(lg[keep:])
+                delta = float(np.abs(
+                    np.asarray(full.finalize().mutual_information)
+                    - np.asarray(prefix.finalize().mutual_information))[0])
+            else:
+                mean, log_var = outs
+                valid = L if win is None else min(L, win)
+                mu = np.asarray(mean[off:off + si, :valid])
+                lv = (None if log_var is None
+                      else np.asarray(log_var[off:off + si, :valid]))
+                prefix = RunningRegressionSummary().update(
+                    mu[:keep], None if lv is None else lv[:keep])
+                full = prefix.copy().update(
+                    mu[keep:], None if lv is None else lv[keep:])
+                delta = float(np.mean(np.abs(
+                    np.asarray(full.finalize().epistemic)
+                    - np.asarray(prefix.finalize().epistemic))))
+            if delta <= self.early_exit_threshold:
+                n_ret = self.store.retire(sess.sid, keep)
+                if n_ret:
+                    reclaimed += n_ret
+                    self._last_reclaimed[sess.sid] = n_ret
+        return reclaimed
 
     def _take_dropped(self) -> int:
         """Drops accumulated since the last metrics record (and reset)."""
@@ -703,8 +883,11 @@ class StreamingEngine:
             parts = [[] for _ in part_dtypes]
             for sess in sessions:
                 if sess.fresh:
+                    # Zeros sized by the session's *own* chain count — the
+                    # batch layout packs per-session S, not the ceiling.
                     for acc, dt in zip(parts, part_dtypes):
-                        acc.append(jnp.zeros((self.n_samples, hid), dt))
+                        acc.append(jnp.zeros(
+                            (int(sess.rows.shape[0]), hid), dt))
                 else:
                     for acc, part in zip(parts, sess.state[li]):
                         acc.append(part)

@@ -1,0 +1,420 @@
+"""Per-session dynamic S + early-exit adaptive sampling (ISSUE 9).
+
+The MC-chain count S is session state, not an engine constant: sessions
+can open below the engine ceiling, and with ``early_exit_threshold`` set
+the engine retires a converged session's surplus chains mid-stream
+(prefix-trim only — surviving chains keep their mask rows and carries).
+
+The invariants pinned here:
+
+* **Ragged-layout identity** — a tick mixing per-session chain counts
+  produces, for every session, exactly the outputs that session gets
+  served alone (batch composition stays invisible, now including the
+  chain dimension), on all three backends and both cells, chunked and
+  unchunked.
+* **Retirement behaviour** — with ``threshold=0.0`` a provably-converged
+  (flatline) stream steps down to the ``min_samples`` floor one halving
+  per tick, a random stream keeps every chain, and retained sessions'
+  outputs never move.
+* **Durability** — per-session S survives kill→snapshot→restore (live
+  sessions and queued tickets alike) and the resumed engine continues
+  bit-identically.
+* **Observability** — ``active_chains``/``reclaimed_rows`` ride
+  ``TickMetrics`` through the JSONL sink and ``summarize()``, per-tenant
+  in fleet mode.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autoencoder as ae, classifier as clf, mcd
+from repro.serve import (FleetEngine, JsonlSink, SessionStore,
+                         StreamingEngine, TenantSpec, summarize)
+
+BACKENDS = ("reference", "pallas_step", "pallas_seq")
+
+
+def _clf_cfg(s=8, seed=3, cell="lstm"):
+    return clf.ClassifierConfig(
+        hidden=8, num_layers=2, num_classes=4, cell=cell,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s, seed=seed))
+
+
+def _clf_engine(s=8, cell="lstm", **kw):
+    cfg = _clf_cfg(s=s, cell=cell)
+    params = clf.init(jax.random.key(0), cfg)
+    return StreamingEngine(params, cfg, **kw), params, cfg
+
+
+def _ae_engine(s=8, **kw):
+    cfg = ae.AutoencoderConfig(
+        hidden=8, num_layers=1,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=s, seed=1))
+    params = ae.init(jax.random.key(0), cfg)
+    return StreamingEngine(params, cfg, **kw), params, cfg
+
+
+def _sig(key, t):
+    return jax.random.normal(jax.random.key(key), (t, 1))
+
+
+class TestStoreRetire:
+    def test_retire_prefix_trims_rows_and_state(self):
+        store = SessionStore(n_samples=6, seed=0)
+        sess = store.admit("a")
+        rows_before = np.asarray(sess.rows).copy()
+        sess.state = [(np.arange(12.0).reshape(6, 2),
+                       np.arange(12.0).reshape(6, 2) + 100)]
+        assert store.retire("a", 4) == 2
+        np.testing.assert_array_equal(np.asarray(sess.rows),
+                                      rows_before[:4])
+        assert sess.state[0][0].shape == (4, 2)
+        np.testing.assert_array_equal(sess.state[0][1],
+                                      np.arange(8.0).reshape(4, 2) + 100)
+        assert store.retire("a", 4) == 0          # no-op at current size
+        with pytest.raises(ValueError, match="keep"):
+            store.retire("a", 5)                  # chains never come back
+        with pytest.raises(ValueError, match="keep"):
+            store.retire("a", 0)
+
+    def test_admit_below_ceiling_and_bounds(self):
+        store = SessionStore(n_samples=8, seed=0)
+        assert store.admit("lo", n_samples=3).rows.shape[0] == 3
+        assert store.active_chains == 3
+        with pytest.raises(ValueError, match="ceiling"):
+            store.admit("hi", n_samples=9)
+        with pytest.raises(ValueError, match="floor"):
+            store.admit("zero", n_samples=0)
+
+    def test_engine_validation(self):
+        with pytest.raises(ValueError, match="threshold"):
+            _clf_engine(early_exit_threshold=-0.5)
+        with pytest.raises(ValueError, match="min_samples"):
+            _clf_engine(s=4, min_samples=5)
+        with pytest.raises(ValueError, match="min_samples"):
+            _clf_engine(min_samples=0)
+
+
+class TestRaggedLayoutIdentity:
+    """Mixed chain counts in one tick change nothing for any session."""
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("cell", ("lstm", "gru"))
+    def test_cobatched_mixed_s_equals_sequential(self, backend, cell):
+        """Same engine geometry, same admission order (so identical mask
+        rows): serving a full-S and a reduced-S session in one ragged
+        tick == serving each in its own tick, bit-identically."""
+        T = 9
+        sig_a, sig_b = _sig(1, T), _sig(2, T)
+        eng, params, cfg = _clf_engine(s=6, cell=cell, backend=backend,
+                                       max_sessions=2)
+        eng.open_session("a")                     # rows [0..5]
+        eng.open_session("b", n_samples=2)        # rows [6, 7]
+        both = eng.step({"a": sig_a, "b": sig_b})
+
+        solo = StreamingEngine(params, cfg, backend=backend, max_sessions=2)
+        solo.open_session("a")
+        solo.open_session("b", n_samples=2)
+        ra = solo.step({"a": sig_a})["a"]
+        rb = solo.step({"b": sig_b})["b"]
+        for got, want in ((both["a"], ra), (both["b"], rb)):
+            np.testing.assert_array_equal(np.asarray(got.summary.probs),
+                                          np.asarray(want.summary.probs))
+            np.testing.assert_array_equal(
+                np.asarray(got.summary.mutual_information),
+                np.asarray(want.summary.mutual_information))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_chunked_mixed_s_equals_unchunked(self, backend):
+        """Chunk boundaries stay invisible when the co-batch is ragged in
+        the chain dimension too."""
+        T = 11
+        sig_a, sig_b = _sig(3, T), _sig(4, T)
+
+        def serve(splits):
+            eng, _, _ = _clf_engine(s=5, backend=backend, max_sessions=2)
+            eng.open_session("a")
+            eng.open_session("b", n_samples=2)
+            out = {}
+            lo = 0
+            for n in splits:
+                out = eng.step({"a": sig_a[lo:lo + n],
+                                "b": sig_b[lo:lo + n]})
+                lo += n
+            return out
+
+        whole = serve([T])
+        for splits in ([4, 7], [1] * T, [2, 1, 8]):
+            split = serve(splits)
+            for sid in ("a", "b"):
+                np.testing.assert_array_equal(
+                    np.asarray(split[sid].summary.probs),
+                    np.asarray(whole[sid].summary.probs))
+
+    def test_uniform_below_ceiling_equals_lower_ceiling_engine(self):
+        """Every session at S' < ceiling is byte-identical to an engine
+        whose ceiling *is* S' — the rows allocator hands out the same ids
+        in admission order, so the Bayesian draw matches exactly."""
+        T = 7
+        sig_a, sig_b = _sig(5, T), _sig(6, T)
+        hi, _, _ = _clf_engine(s=8, max_sessions=2)
+        hi.open_session("a", n_samples=3)
+        hi.open_session("b", n_samples=3)
+        out_hi = hi.step({"a": sig_a, "b": sig_b})
+
+        lo, _, _ = _clf_engine(s=3, max_sessions=2)
+        lo.open_session("a")
+        lo.open_session("b")
+        out_lo = lo.step({"a": sig_a, "b": sig_b})
+        for sid in ("a", "b"):
+            np.testing.assert_array_equal(
+                np.asarray(out_hi[sid].summary.probs),
+                np.asarray(out_lo[sid].summary.probs))
+
+
+class TestRetirementBehaviour:
+    def test_flatline_halves_to_floor_random_keeps_all(self):
+        """threshold=0.0: a flatline stream (identical chains — zero
+        input × zero-init biases keeps every activation 0) halves once
+        per tick down to the floor; a random stream keeps every chain."""
+        eng, _, _ = _clf_engine(s=8, max_sessions=2,
+                                early_exit_threshold=0.0, min_samples=2)
+        eng.open_session("hard")
+        eng.open_session("easy")
+        hard = _sig(7, 24) * 3
+        expect_easy = [4, 2, 2]                   # 8 -> 4 -> 2, then floor
+        for t in range(3):
+            eng.step({"easy": jnp.zeros((8, 1)),
+                      "hard": hard[8 * t:8 * (t + 1)]})
+            assert int(eng.store.get("easy").rows.shape[0]) == \
+                expect_easy[t]
+            assert int(eng.store.get("hard").rows.shape[0]) == 8
+        assert sum(m.reclaimed_rows for m in eng.metrics) == 6
+        assert eng.store.active_chains == 10
+
+    def test_retained_stream_outputs_never_move(self):
+        """A neighbour's retirement must not perturb a retained stream:
+        per-chunk summaries match a no-early-exit engine bit-exactly."""
+        T, chunk = 16, 4
+        hard = _sig(8, T)
+        plain, params, cfg = _clf_engine(s=8, max_sessions=2)
+        plain.open_session("hard")
+        plain.open_session("easy")
+        eng = StreamingEngine(params, cfg, max_sessions=2,
+                              early_exit_threshold=0.0, min_samples=1)
+        eng.open_session("hard")
+        eng.open_session("easy")
+        for lo in range(0, T, chunk):
+            zeros = jnp.zeros((chunk, 1))
+            want = plain.step({"hard": hard[lo:lo + chunk],
+                               "easy": zeros})["hard"]
+            got = eng.step({"hard": hard[lo:lo + chunk],
+                            "easy": zeros})["hard"]
+            np.testing.assert_array_equal(np.asarray(got.summary.probs),
+                                          np.asarray(want.summary.probs))
+        assert int(eng.store.get("easy").rows.shape[0]) == 1
+        assert int(plain.store.get("easy").rows.shape[0]) == 8
+
+    def test_autoencoder_flatline_retires(self):
+        eng, _, _ = _ae_engine(s=8, max_sessions=1,
+                               early_exit_threshold=0.0, min_samples=2)
+        eng.open_session("z")
+        for _ in range(3):
+            eng.step({"z": jnp.zeros((5, 1))})
+        assert int(eng.store.get("z").rows.shape[0]) == 2
+
+    def test_min_samples_floor_binds_mid_halving(self):
+        """floor=3: 8 -> 4 -> 3 (the second stage clamps to the floor,
+        not to ceil(4/2)=2)."""
+        eng, _, _ = _clf_engine(s=8, max_sessions=1,
+                                early_exit_threshold=0.0, min_samples=3)
+        eng.open_session("z")
+        sizes = []
+        for _ in range(3):
+            eng.step({"z": jnp.zeros((4, 1))})
+            sizes.append(int(eng.store.get("z").rows.shape[0]))
+        assert sizes == [4, 3, 3]
+
+    def test_threshold_disabled_never_retires(self):
+        eng, _, _ = _clf_engine(s=4, max_sessions=1)
+        eng.open_session("z")
+        for _ in range(3):
+            eng.step({"z": jnp.zeros((4, 1))})
+        assert int(eng.store.get("z").rows.shape[0]) == 4
+        assert all(m.reclaimed_rows == 0 for m in eng.metrics)
+        assert all(m.active_chains == 4 for m in eng.metrics)
+
+
+class TestShardingGuards:
+    def test_mesh_refuses_early_exit(self):
+        from repro.launch.mesh import make_data_mesh
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        with pytest.raises(ValueError, match="shard"):
+            StreamingEngine(params, cfg, mesh=make_data_mesh(1),
+                            early_exit_threshold=0.0)
+
+
+class TestDurability:
+    def test_per_session_s_roundtrips_through_snapshot(self, tmp_path):
+        """Kill→snapshot→restore with a retired session: the reduced S
+        survives, and the resumed engine continues bit-identically to an
+        uninterrupted one."""
+        T, chunk = 16, 4
+        hard = _sig(9, T)
+
+        def open_serve(eng, lo, hi, out=None):
+            for a in range(lo, hi, chunk):
+                out = eng.step({"hard": hard[a:a + chunk],
+                                "easy": jnp.zeros((chunk, 1))})
+            return out
+
+        kw = dict(max_sessions=2, early_exit_threshold=0.0, min_samples=2)
+        gold, params, cfg = _clf_engine(s=8, **kw)
+        gold.open_session("hard")
+        gold.open_session("easy")
+        final_gold = open_serve(gold, 0, T)
+
+        victim = StreamingEngine(params, cfg, **kw)
+        victim.open_session("hard")
+        victim.open_session("easy")
+        open_serve(victim, 0, T // 2)
+        assert int(victim.store.get("easy").rows.shape[0]) == 2
+        victim.snapshot(str(tmp_path))
+        del victim
+
+        revived = StreamingEngine(params, cfg, **kw)
+        revived.restore(str(tmp_path))
+        sess = revived.store.get("easy")
+        assert int(sess.rows.shape[0]) == 2       # reduced S survived
+        np.testing.assert_array_equal(np.asarray(sess.rows), [8, 9])
+        final_res = open_serve(revived, T // 2, T)
+        for sid in ("hard", "easy"):
+            np.testing.assert_array_equal(
+                np.asarray(final_res[sid].summary.probs),
+                np.asarray(final_gold[sid].summary.probs))
+
+    def test_queued_ticket_n_samples_survives_snapshot(self, tmp_path):
+        eng, params, cfg = _clf_engine(s=8, max_sessions=1)
+        eng.open_session("live")
+        assert eng.admit("waiting", n_samples=3) is None   # queued
+        eng.step({"live": jnp.ones((2, 1))})
+        eng.snapshot(str(tmp_path))
+        revived = StreamingEngine(params, cfg, max_sessions=1)
+        revived.restore(str(tmp_path))
+        revived.close_session("live")              # frees the row quota
+        revived.step({})                           # drain tick
+        assert int(revived.store.get("waiting").rows.shape[0]) == 3
+
+
+class TestMetricsThreading:
+    def test_jsonl_sink_carries_chain_fields(self, tmp_path):
+        path = str(tmp_path / "ticks.jsonl")
+        sink = JsonlSink(path)
+        eng, _, _ = _clf_engine(s=8, max_sessions=1, metrics_sink=sink,
+                                early_exit_threshold=0.0, min_samples=2)
+        eng.open_session("z")
+        for _ in range(2):
+            eng.step({"z": jnp.zeros((4, 1))})
+        sink.close()
+        recs = [json.loads(ln) for ln in open(path)]
+        assert [r["active_chains"] for r in recs] == [4, 2]
+        assert [r["reclaimed_rows"] for r in recs] == [4, 2]
+        agg = summarize(eng.metrics)
+        assert agg["reclaimed_rows"] == 6
+        assert agg["active_chains_mean"] == pytest.approx(3.0)
+
+    def test_fleet_metrics_attribute_per_tenant(self, tmp_path):
+        """Two tenants in one launch group, only one with early exit off
+        the floor: the reclaimed rows land on the right tenant's records
+        and in its summarize() sub-block."""
+        cfg = _clf_cfg(s=4)
+        params = clf.init(jax.random.key(0), cfg)
+        path = str(tmp_path / "fleet.jsonl")
+        sink = JsonlSink(path)
+        fleet = FleetEngine([
+            TenantSpec(name="adaptive", cfg=cfg, params=params,
+                       early_exit_threshold=0.0, min_samples=1),
+            TenantSpec(name="fixed", cfg=cfg, params=params),
+        ], metrics_sink=sink)
+        assert len(fleet.groups) == 2              # thresholds split groups
+        fleet.admit("adaptive", "p")
+        fleet.admit("fixed", "p")
+        for _ in range(2):
+            fleet.step({"adaptive": {"p": jnp.zeros((3, 1))},
+                        "fixed": {"p": jnp.zeros((3, 1))}})
+        sink.close()
+        eng = fleet.group_of("adaptive").engine
+        assert int(eng.store.get("adaptive/p").rows.shape[0]) == 1
+        fixed_eng = fleet.group_of("fixed").engine
+        assert int(fixed_eng.store.get("fixed/p").rows.shape[0]) == 4
+        per_tenant = {}
+        for ln in open(path):
+            r = json.loads(ln)
+            if r.get("tenant"):
+                per_tenant.setdefault(r["tenant"], []).append(r)
+        assert sum(r["reclaimed_rows"]
+                   for r in per_tenant["adaptive"]) == 3
+        assert all(r["reclaimed_rows"] == 0 for r in per_tenant["fixed"])
+        agg = summarize(fleet.metrics)
+        assert agg["tenants"]["adaptive"]["reclaimed_rows"] == 3
+        assert agg["tenants"]["fixed"]["reclaimed_rows"] == 0
+
+
+class TestFleetDynamicS:
+    def test_shared_group_tenants_open_at_their_own_s(self):
+        """Tenants differing only in S fold into one group (signature
+        drops S when unsharded); each opens sessions at its own S and the
+        outputs match a dedicated engine bit-exactly."""
+        cfg = _clf_cfg(s=6)
+        params = clf.init(jax.random.key(0), cfg)
+        fleet = FleetEngine([
+            TenantSpec(name="big", cfg=cfg, params=params),
+            TenantSpec(name="small", cfg=cfg, params=params, n_samples=2),
+        ])
+        assert len(fleet.groups) == 1
+        eng = fleet.group_of("big").engine
+        assert eng.n_samples == 6
+        fleet.admit("big", "p")
+        fleet.admit("small", "p")
+        sig = _sig(11, 6)
+        out = fleet.step({"big": {"p": sig}, "small": {"p": sig}})
+        solo = StreamingEngine(params, cfg, max_sessions=2)
+        solo.open_session("big/p")
+        solo.open_session("small/p", n_samples=2)
+        want = solo.step({"big/p": sig, "small/p": sig})
+        for tenant in ("big", "small"):
+            np.testing.assert_array_equal(
+                np.asarray(out[tenant]["p"].summary.probs),
+                np.asarray(want[f"{tenant}/p"].summary.probs))
+
+    def test_reconfigure_never_resurrects_retired_chains(self):
+        """Downshift + upshift round-trip: a session that early-exited
+        below the old ceiling keeps its reduced S; sessions at the old
+        ceiling track the new one."""
+        from repro.serve import ServingConfig
+        cfg = _clf_cfg(s=8)
+        params = clf.init(jax.random.key(0), cfg)
+        fleet = FleetEngine([
+            TenantSpec(name="t", cfg=cfg, params=params,
+                       early_exit_threshold=0.0, min_samples=2),
+        ])
+        fleet.admit("t", "easy")
+        fleet.admit("t", "hard")
+        hard = _sig(12, 8) * 3
+        fleet.step({"t": {"easy": jnp.zeros((8, 1)), "hard": hard}})
+        store = fleet.group_of("t").engine.store
+        assert int(store.get("t/easy").rows.shape[0]) == 4
+        assert int(store.get("t/hard").rows.shape[0]) == 8
+        fleet.reconfigure_tenant("t", ServingConfig(n_samples=6))
+        store = fleet.group_of("t").engine.store
+        assert int(store.get("t/hard").rows.shape[0]) == 6   # at ceiling
+        assert int(store.get("t/easy").rows.shape[0]) == 4   # untouched
+        fleet.reconfigure_tenant("t", ServingConfig(n_samples=8))
+        store = fleet.group_of("t").engine.store
+        assert int(store.get("t/hard").rows.shape[0]) == 8   # tracks up
+        assert int(store.get("t/easy").rows.shape[0]) == 4   # never back

@@ -104,8 +104,10 @@ class TestTenantSpecAndGrouping:
         assert sorted(eng.active_sessions) == ["er/p1", "icu/p1"]
 
     def test_different_signatures_get_own_groups(self):
-        """S override, precision and cell each split the launch group."""
-        cfg = _clf_cfg()
+        """Precision splits the launch group; an S override does *not* —
+        S is per-session state now, so tenants differing only in S share
+        one group whose engine ceiling covers the larger tenant."""
+        cfg = _clf_cfg()                                  # S=3
         params = clf.init(jax.random.key(0), cfg)
         fleet = FleetEngine([
             TenantSpec(name="a", cfg=cfg, params=params, backend="reference"),
@@ -114,9 +116,16 @@ class TestTenantSpecAndGrouping:
             TenantSpec(name="c", cfg=cfg, params=params, precision="int8",
                        backend="pallas_seq"),
         ])
-        assert len(fleet.groups) == 3
-        assert fleet.group_of("b").engine.n_samples == 2
+        assert len(fleet.groups) == 2
+        eng = fleet.group_of("b").engine
+        assert eng is fleet.group_of("a").engine
+        assert eng.n_samples == 3                         # group ceiling
         assert fleet.group_of("c").engine.precision == "int8"
+        # Each tenant's sessions still open at the *tenant's* S.
+        fleet.admit("a", "p")
+        fleet.admit("b", "p")
+        assert int(eng.store.get("a/p").rows.shape[0]) == 3
+        assert int(eng.store.get("b/p").rows.shape[0]) == 2
 
     def test_per_tenant_capacity_enforced_inside_shared_group(self):
         """A tenant's own max_sessions binds even when the shared group

@@ -198,3 +198,70 @@ class TestPrecisionMismatch:
                              precision="int8")
         ok.restore(str(tmp_path))
         assert ok.active_sessions == ["a"]
+
+
+class TestDynamicSCompat:
+    """ISSUE 9: per-session S became durable state.  Pre-dynamic snapshots
+    are the uniform-S special case (every session at the writing engine's
+    ceiling), and new snapshots written after early exit must round-trip
+    the *reduced* per-session chain counts — including through a fleet
+    kill→restore."""
+
+    def test_pre_dynamic_fixtures_restore_at_uniform_s(self):
+        """The committed goldens predate per-session S: every restored
+        session must hold exactly the old engine-wide S chains."""
+        eng = _engine("lstm")
+        eng.restore(os.path.join(FIXTURES, "pr3_lstm"))
+        for sid in eng.store.active:
+            assert int(eng.store.get(sid).rows.shape[0]) == N_SAMPLES
+        assert eng.store.active_chains == N_SAMPLES * len(eng.store.active)
+
+    def test_fleet_kill_restore_preserves_per_session_s(self, tmp_path):
+        """A fleet tenant early-exits a stream, the fleet is killed and
+        restored: the reduced S survives and the resumed streams continue
+        bit-identically to a never-killed fleet."""
+        cfg = clf.ClassifierConfig(
+            hidden=HIDDEN, num_layers=NUM_LAYERS,
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=4,
+                              seed=SEED))
+        params = clf.init(jax.random.key(0), cfg)
+
+        def make_fleet():
+            return FleetEngine([TenantSpec(
+                name="t", cfg=cfg, params=params, max_sessions=2,
+                early_exit_threshold=0.0, min_samples=1)])
+
+        hard = np.asarray(jax.random.normal(jax.random.key(2), (16, 1)))
+
+        def serve(fleet, lo, hi, out=None):
+            for t in range(lo, hi):
+                out = fleet.step({"t": {
+                    "easy": jnp.zeros((4, 1)),
+                    "hard": jnp.asarray(hard[4 * t:4 * (t + 1)],
+                                        jnp.float32)}})
+            return out
+
+        gold = make_fleet()
+        gold.admit("t", "easy")
+        gold.admit("t", "hard")
+        final_gold = serve(gold, 0, 4)
+
+        victim = make_fleet()
+        victim.admit("t", "easy")
+        victim.admit("t", "hard")
+        serve(victim, 0, 2)
+        store = victim.group_of("t").engine.store
+        assert int(store.get("t/easy").rows.shape[0]) == 1   # retired
+        victim.snapshot(str(tmp_path))
+        del victim
+
+        revived = make_fleet()
+        revived.restore(str(tmp_path))
+        store = revived.group_of("t").engine.store
+        assert int(store.get("t/easy").rows.shape[0]) == 1
+        assert int(store.get("t/hard").rows.shape[0]) == 4
+        final_res = serve(revived, 2, 4)
+        for sid in ("easy", "hard"):
+            np.testing.assert_array_equal(
+                np.asarray(final_res["t"][sid].summary.probs),
+                np.asarray(final_gold["t"][sid].summary.probs))
