@@ -1,0 +1,204 @@
+"""Distilled fast path: what single-chain student serving buys.
+
+Three numbers the distillation stack (ISSUE 10) has to earn:
+
+* **throughput frontier** — steady-state tick cost and signal throughput
+  on confident traffic for the three serving modes: static S-chain MC,
+  early-exit at the floor, and the distilled student.  A student session
+  is ONE deterministic row against the MC engine's ``SESSIONS * S``, so
+  the whole store ticks on a fraction of the batch.  The acceptance bar
+  is >=3x student vs the S-chain MC engine.
+* **escalation identity** — when a student's predicted uncertainty
+  crosses the threshold, ``SessionStore.grow`` regrows fresh MC chains
+  from the student's carry.  Fresh rows mean no mask reuse, so the
+  escalated session must stream on *byte-identically* to an always-MC
+  engine serving a session attached with those rows and that carry.
+* **quality / calibration** — a student actually distilled from a
+  trained ECG teacher: prediction agreement with the S-chain teacher,
+  accuracy delta, and how well the uncertainty head tracks the
+  teacher's chain-axis MI (the escalation signal's calibration).
+
+Flatline traffic through a freshly-initialized stack is the "confident"
+workload (same convention as ``bench_early_exit``): every activation
+stays at zero, so MC chains agree exactly and the early-exit engine
+provably retires to the floor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import classifier as clf, distill, mcd
+from repro.serve import StreamingEngine
+from repro.serve.sessions import Session
+from repro.train import distill as distill_train
+
+S, FLOOR, SESSIONS = 8, 1, 8
+#: Same throughput geometry as bench_early_exit: per-chain compute must
+#: dominate per-tick fixed cost for the row shrink to show in wall time.
+BENCH_HIDDEN, BENCH_CHUNK = 128, 64
+#: Quality geometry: identity pins and calibration don't need the big model.
+QUAL_HIDDEN, QUAL_CHUNK = 8, 32
+
+
+def _cfg(hidden):
+    return clf.ClassifierConfig(
+        hidden=hidden, num_layers=2, num_classes=5,
+        mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=S, seed=3))
+
+
+def _engine(params, cfg, **kw):
+    return StreamingEngine(params, cfg, backend="pallas_seq",
+                           max_sessions=SESSIONS, **kw)
+
+
+def _open_all(eng, mode="mc"):
+    for k in range(SESSIONS):
+        eng.open_session(f"s{k}", mode=mode)
+
+
+def _tick_us(eng, chunks, iters=7):
+    ts = []
+    for _ in range(2):                       # warm the compiled graph
+        jax.block_until_ready(
+            [r.summary.probs for r in eng.step(chunks).values()])
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            [r.summary.probs for r in eng.step(chunks).values()])
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
+def bench_frontier():
+    """Steady-state tokens/s: student vs S-chain MC vs early-exit floor."""
+    cfg = _cfg(BENCH_HIDDEN)
+    params = clf.init(jax.random.key(0), cfg)
+    student = distill.init_student(jax.random.key(1), cfg, params)
+    zeros = {f"s{k}": jnp.zeros((BENCH_CHUNK, 1), jnp.float32)
+             for k in range(SESSIONS)}
+    tokens = SESSIONS * BENCH_CHUNK          # signal steps per tick
+
+    static = _engine(params, cfg)
+    _open_all(static)
+    us_mc = _tick_us(static, zeros)
+
+    adaptive = _engine(params, cfg, early_exit_threshold=0.0,
+                       min_samples=FLOOR)
+    _open_all(adaptive)
+    for _ in range(4):                       # staged halving to the floor
+        adaptive.step(zeros)
+    assert adaptive.store.active_chains == SESSIONS * FLOOR
+    us_ee = _tick_us(adaptive, zeros)
+
+    # No escalation threshold: the timed ticks must stay on the student
+    # path (a fresh unc head predicts MI ~ softplus(0) > 0 even here).
+    fast = _engine(params, cfg, student=student)
+    _open_all(fast, mode="student")
+    us_stu = _tick_us(fast, zeros)
+    assert fast.store.active_chains == SESSIONS
+    assert fast.last_metrics.student_rows == SESSIONS
+
+    for name, us, rows in (("mc_tick", us_mc, SESSIONS * S),
+                           ("early_exit_tick", us_ee, SESSIONS * FLOOR),
+                           ("student_tick", us_stu, SESSIONS)):
+        common.emit(f"distill/{name}", us,
+                    f"rows={rows} tokens/s={tokens / (us / 1e6):.0f}")
+    speedup = us_mc / us_stu
+    common.emit("distill/student_speedup", us_mc - us_stu,
+                f"x{speedup:.2f} vs S={S} MC (bar: >=3x), "
+                f"x{us_ee / us_stu:.2f} vs early-exit floor")
+    return speedup
+
+
+def bench_escalation_identity():
+    """Escalated session == always-MC session attached at the same carry."""
+    cfg = _cfg(QUAL_HIDDEN)
+    params = clf.init(jax.random.key(0), cfg)
+    student = distill.init_student(jax.random.key(1), cfg, params)
+    rng = np.random.default_rng(7)
+    sig = rng.normal(0, 2, (5 * QUAL_CHUNK, 1)).astype(np.float32)
+
+    def chunk(t):
+        return {"p0": jnp.asarray(sig[t * QUAL_CHUNK:(t + 1) * QUAL_CHUNK])}
+
+    # Fresh unc head: predicted MI > 0 on any input, so threshold 0.0
+    # escalates on the very first served chunk.
+    esc = _engine(params, cfg, student=student,
+                  student_escalate_threshold=0.0)
+    esc.open_session("p0", mode="student")
+    esc.step(chunk(0))
+    assert esc.last_metrics.escalations == 1
+    sess = esc.store.get("p0")
+    assert sess.mode == "mc" and int(sess.rows.shape[0]) == S
+
+    # The always-MC twin: same row ids, same (tiled) carry, no student.
+    plain = _engine(params, cfg)
+    plain.attach_session(dataclasses.replace(
+        sess, state=[tuple(layer) for layer in sess.state]))
+
+    exact = True
+    for t in range(1, 5):
+        a = esc.step(chunk(t))["p0"].summary
+        b = plain.step(chunk(t))["p0"].summary
+        for wa, wb in zip(a, b):
+            exact &= np.array_equal(np.asarray(wa), np.asarray(wb))
+    assert exact, "escalated session diverged from the attached MC twin"
+    common.emit("distill/escalation_identity", 0.0,
+                f"byte_identical={exact} ticks=4 rows={S}")
+
+
+def bench_distilled_quality():
+    """Distill from a trained ECG teacher; agreement + MI calibration."""
+    cfg, params = common.train_classifier("YN", hidden=QUAL_HIDDEN, steps=120)
+    tx, ty, ex, ey = common.data()
+    # cache_targets: 8 teacher sweeps total, then thousands of cheap
+    # dense-head steps over the cached features/targets.
+    dcfg = distill_train.DistillConfig(n_samples=S, lr=1e-2,
+                                       cache_targets=True)
+    xs = (jnp.asarray(tx[(i * 64) % max(tx.shape[0] - 64, 1):][:64])
+          for i in range(8))
+    student, hist = distill_train.distill_classifier(
+        params, cfg, xs, 2000, key=jax.random.key(2), dcfg=dcfg)
+
+    n_test = 512
+    x, yn = jnp.asarray(ex[:n_test]), np.asarray(ey[:n_test])
+    teacher = distill.classifier_teacher_targets(params, x, cfg, n_samples=S)
+    _, states = clf.apply(params, x, distill.det_rows(n_test), cfg,
+                          return_state=True)
+    stu = distill.classifier_student_summary(student, states[-1][0])
+
+    t_pred = np.asarray(teacher.probs).argmax(-1)
+    s_pred = np.asarray(stu.probs).argmax(-1)
+    acc_t = float((t_pred == yn).mean())
+    acc_s = float((s_pred == yn).mean())
+    agree = float((t_pred == s_pred).mean())
+    mi_t = np.asarray(teacher.mutual_information, dtype=np.float64)
+    mi_s = np.asarray(stu.mutual_information, dtype=np.float64)
+    mi_mae = float(np.abs(mi_s - mi_t).mean())
+    corr = (float(np.corrcoef(mi_s, mi_t)[0, 1])
+            if mi_t.std() > 0 and mi_s.std() > 0 else 0.0)
+    common.emit("distill/quality", 0.0,
+                f"teacher_acc={acc_t:.3f} student_acc={acc_s:.3f} "
+                f"agree={agree:.3f} mi_mae={mi_mae:.3f} mi_corr={corr:.2f} "
+                f"final_loss={float(hist[-1]['loss']):.4f}")
+    assert agree >= 0.9, f"student/teacher prediction agreement {agree:.3f}"
+
+
+def run():
+    speedup = bench_frontier()
+    bench_escalation_identity()
+    bench_distilled_quality()
+    if speedup < 3.0:
+        raise AssertionError(
+            f"student speedup x{speedup:.2f} below the 3x bar")
+
+
+if __name__ == "__main__":
+    run()

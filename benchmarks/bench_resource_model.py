@@ -52,7 +52,7 @@ def run():
         cell = SHAPES[r["shape"]]
         hw = tpu_model.TpuHwConfig(
             data=16, model=16,
-            fsdp=cfg.name.startswith(("jamba", "qwen3-32b", "internvl2")))
+            fsdp=cfg.name.startswith("jamba"))
         # Apples-to-apples: predict the *resident state* (params + opt
         # moments + caches) and compare to memory_analysis argument bytes —
         # exact on any backend.  temp bytes are reported alongside but are

@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV per benchmark line.
   controller   bench_controller      (decision overhead, SLO recovery)
   fleet        bench_fleet           (multi-tenant co-batching, fair drain)
   early_exit   bench_early_exit      (adaptive sampling speedup + quality)
+  distill      bench_distill         (student frontier, escalation, quality)
   roofline     roofline              (dry-run derived terms, all 40 cells)
 
 ``--only`` filters by suite name (substring, repeatable); ``--json PATH``
@@ -31,11 +32,11 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_controller, bench_controlplane,
-                            bench_dse_sweep, bench_early_exit, bench_fleet,
-                            bench_kernels, bench_latency, bench_opt_modes,
-                            bench_quantization, bench_resource_model,
-                            bench_sampling, bench_sharding, bench_streaming,
-                            common, roofline)
+                            bench_distill, bench_dse_sweep, bench_early_exit,
+                            bench_fleet, bench_kernels, bench_latency,
+                            bench_opt_modes, bench_quantization,
+                            bench_resource_model, bench_sampling,
+                            bench_sharding, bench_streaming, common, roofline)
     benches = [
         ("dse_sweep", bench_dse_sweep),
         ("sampling", bench_sampling),
@@ -50,6 +51,7 @@ def main() -> None:
         ("controller", bench_controller),
         ("fleet", bench_fleet),
         ("early_exit", bench_early_exit),
+        ("distill", bench_distill),
         ("roofline", roofline),
     ]
     ap = argparse.ArgumentParser()

@@ -46,6 +46,7 @@ bit-identical to a static-S engine's.
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke --precision int8
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke --controller
     PYTHONPATH=src python examples/ecg_monitoring.py --smoke --early-exit
+    PYTHONPATH=src python examples/ecg_monitoring.py --smoke --distill
 """
 
 import argparse
@@ -114,6 +115,13 @@ def main():
                     "retires its surplus MC chains mid-stream, a real "
                     "ECG stream keeps all of them, and the retained "
                     "outputs stay bit-identical to a static-S engine")
+    ap.add_argument("--distill", action="store_true",
+                    help="distilled fast-path demo: both streams serve on "
+                    "a single-row student; the flatline stream stays there "
+                    "while the anomalous beat's predicted MI crosses the "
+                    "threshold and escalates to full MC via fresh-chain "
+                    "regrowth, bit-identical to an always-MC session "
+                    "attached at that carry")
     ap.add_argument("--snapshot-dir", default=None,
                     help="where --kill-resume persists sessions "
                     "(default: a temp dir)")
@@ -194,6 +202,8 @@ def main():
         controller_demo(params, cfg, ex, picks, args)
     if args.early_exit:
         early_exit_demo(cfg, ex, picks, args)
+    if args.distill:
+        distill_demo(cfg, tx, ty, ex, picks, args)
 
 
 def kill_and_resume(params, cfg, ex, picks, args, total_t):
@@ -309,6 +319,129 @@ def early_exit_demo(cfg, ex, picks, args):
     assert retained_same, "early exit perturbed a retained stream's outputs"
     print("early-exit demo OK: confident stream at the floor, uncertain "
           "stream at full S, retained outputs bit-identical")
+
+
+def distill_demo(cfg, tx, ty, ex, picks, args):
+    """Distilled fast path: easy traffic on one row, MC fallback on demand.
+
+    Both streams open in ``mode="student"`` — a single deterministic row
+    (the kernels skip its masks in-register) decoded through heads
+    distilled right here from a quick-trained S-chain teacher.  The
+    teacher's chain-axis MI is low on a flatline (nothing for the
+    dropout ensemble to disagree about) and several times higher on a
+    real beat, and the cached-target distillation
+    (``DistillConfig.cache_targets``: one teacher sweep, thousands of
+    dense-head steps) teaches the uncertainty head that separation.
+    Served against a threshold placed between the student's own
+    predictions for the two regimes, the flatline stream stays on the
+    student forever while the anomalous beat escalates on its first
+    chunk: ``SessionStore.grow`` retires the student row and regrows S
+    fresh MC chains from the student's carry.  The demo then proves the
+    escalation contract — the regrown stream's summaries are
+    bit-identical to an always-MC engine serving a session attached with
+    those rows and that carry.
+    """
+    import dataclasses
+
+    from repro.core import distill
+    from repro.train import distill as distill_train
+
+    n_chunks, n_steps = 2, 6000
+    # The student needs a teacher whose uncertainty is worth predicting: a
+    # freshly-initialized stack is near-uniform everywhere (MI ~ 1e-3 on
+    # any input), so the demo trains its own quick teacher.
+    demo_params = train_quick(cfg, tx, ty, steps=max(args.steps, 120))
+    S = args.samples
+    rng = np.random.default_rng(2)
+    cand_ids = rng.choice(len(ex), size=16, replace=False)
+    cand = jnp.asarray(np.stack([ex[i][:args.chunk_len] for i in cand_ids]),
+                       jnp.float32)
+    # Of the held-out candidates, keep the four the TEACHER is most
+    # epistemically uncertain about on their first chunk (a trained
+    # monitor's flatline MI stays low at these horizons; abnormal beats'
+    # is several times higher) — the regime the head must learn to flag.
+    teacher_mi = np.asarray(distill.classifier_teacher_targets(
+        demo_params, cand, cfg, n_samples=S).mutual_information)
+    top = np.argsort(-teacher_mi)[:4]
+    beats = cand[top]
+    # The distillation stream: the first-chunk flatline window SHARES a
+    # batch with the beats (per-batch Adam steps equalize gradients per
+    # batch, not per sample — separate batches would let the two flatline
+    # windows outvote the beats 2:1), plus the longer flatline prefix the
+    # student will also be asked about (the det trunk is
+    # chunking-invariant, so the served tick-k feature equals the
+    # from-scratch prefix feature).
+    xs = [jnp.concatenate([jnp.zeros((1, args.chunk_len, 1), jnp.float32),
+                           beats]),
+          jnp.zeros((1, n_chunks * args.chunk_len, 1), jnp.float32)]
+    dcfg = distill_train.DistillConfig(n_samples=S, lr=3e-2,
+                                       cache_targets=True)
+    student, hist = distill_train.distill_classifier(
+        demo_params, cfg, xs, n_steps, key=jax.random.key(1), dcfg=dcfg)
+
+    # The distilled head must separate the exact traffic being served:
+    # every flatline prefix the student will score vs an anomalous
+    # beat's first chunk.  The anomalous stream is the beat the STUDENT
+    # itself flags hardest, the alarm goes in between — the threshold
+    # crossing is then the head's own call end to end.
+    def mi_hat(x):
+        _, states = clf.apply(demo_params, x, distill.det_rows(x.shape[0]),
+                              cfg, return_state=True)
+        return np.asarray(distill.classifier_student_summary(
+            student, states[-1][0]).mutual_information)
+
+    mi_flat = max(float(mi_hat(
+        jnp.zeros((1, k * args.chunk_len, 1), jnp.float32))[0])
+        for k in range(1, n_chunks + 1))
+    stu_mi = mi_hat(beats)
+    worst = int(np.argmax(stu_mi))
+    anomaly = ex[cand_ids[top[worst]]]
+    mi_anom = float(stu_mi[worst])
+    assert mi_flat < mi_anom, "uncertainty head failed to separate regimes"
+    thr = 0.5 * (mi_flat + mi_anom)
+    print(f"\ndistill demo: S={S} student MI flatline<={mi_flat:.4f} "
+          f"anomalous beat={mi_anom:.4f} threshold={thr:.4f} "
+          f"(distilled {n_steps} steps, final loss={hist[-1]['loss']:.4f})")
+
+    eng = StreamingEngine(demo_params, cfg, backend=args.backend,
+                          max_sessions=2, student=student,
+                          student_escalate_threshold=thr)
+    eng.open_session("flatline", mode="student")
+    eng.open_session("anomaly", mode="student")
+    plain, identical = None, True
+    for t in range(n_chunks):
+        lo = t * args.chunk_len
+        res = eng.step({
+            "flatline": jnp.zeros((args.chunk_len, 1)),
+            "anomaly": jnp.asarray(anomaly[lo:lo + args.chunk_len],
+                                   jnp.float32)})
+        m = eng.last_metrics
+        print(f"  tick {t}: student_rows={m.student_rows} "
+              f"escalations={m.escalations} active={m.active_chains} "
+              f"anomaly_MI={float(res['anomaly'].summary.mutual_information):.4f}")
+        if t == 0:
+            # The anomalous beat must escalate on its very first chunk.
+            assert m.escalations == 1 and m.student_rows == 2
+            sess = eng.store.get("anomaly")
+            assert sess.mode == "mc" and int(sess.rows.shape[0]) == S
+            plain = StreamingEngine(demo_params, cfg, backend=args.backend,
+                                    max_sessions=1)
+            plain.attach_session(dataclasses.replace(
+                sess, state=[tuple(layer) for layer in sess.state]))
+        else:
+            assert m.escalations == 0 and m.student_rows == 1
+            want = plain.step({"anomaly": jnp.asarray(
+                anomaly[lo:lo + args.chunk_len], jnp.float32)})["anomaly"]
+            identical &= np.array_equal(
+                np.asarray(res["anomaly"].summary.probs),
+                np.asarray(want.summary.probs))
+    assert eng.store.get("flatline").mode == "student", \
+        "flatline stream should have stayed on the student fast path"
+    print(f"  escalated stream vs always-MC engine attached at the carry: "
+          f"bit-identical={identical}")
+    assert identical, "escalation diverged from the always-MC twin"
+    print("distill demo OK: easy stream on one student row, anomalous "
+          "stream escalated to full MC, regrown chains bit-identical")
 
 
 def controller_demo(params, cfg, ex, picks, args):

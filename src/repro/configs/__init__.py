@@ -10,30 +10,22 @@ from __future__ import annotations
 import importlib
 
 ARCH_IDS = (
-    "deepseek_7b",
-    "qwen3_32b",
     "llama3_8b",
     "qwen3_1p7b",
     "jamba_1p5_large_398b",
     "mamba2_370m",
-    "whisper_medium",
     "deepseek_v2_lite_16b",
     "olmoe_1b_7b",
-    "internvl2_26b",
 )
 
 # accept the assignment-sheet spellings too
 ALIASES = {
-    "deepseek-7b": "deepseek_7b",
-    "qwen3-32b": "qwen3_32b",
     "llama3-8b": "llama3_8b",
     "qwen3-1.7b": "qwen3_1p7b",
     "jamba-1.5-large-398b": "jamba_1p5_large_398b",
     "mamba2-370m": "mamba2_370m",
-    "whisper-medium": "whisper_medium",
     "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
     "olmoe-1b-7b": "olmoe_1b_7b",
-    "internvl2-26b": "internvl2_26b",
 }
 
 

@@ -72,7 +72,7 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
           cfg: AutoencoderConfig, *, backend: str = "reference",
           initial_state=None, lengths: jax.Array | None = None,
           return_state: bool = False, mesh=None, policy=None,
-          precision: str | None = None):
+          precision: str | None = None, return_decoded: bool = False):
     """Forward pass for one set of MCD masks.
 
     Args:
@@ -91,6 +91,10 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
         None = native dtypes) — input cast to the activation dtype up front
         (reference masks then sample in it), fp32 master weights
         quantized/cast in-graph; the dense head stays fp32.
+      return_decoded: also return the decoder's hidden sequence ``dec_out``
+        [B, W, H] (before the dense head) — the feature the distilled
+        student's per-position uncertainty head reads
+        (:mod:`repro.core.distill`).  Appended after ``log_var``.
     Returns:
       (mean [B, W, I], log_var [B, W, I] or None)[, encoder states], where
       ``W = min(T, cfg.decode_window or T)`` — the full T unless the config
@@ -151,6 +155,8 @@ def apply(params: dict[str, Any], x_seq: jax.Array, rows: jax.Array,
         out = mean, jnp.clip(log_var, -10.0, 10.0)
     else:
         out = y, None
+    if return_decoded:
+        out = (*out, dec_out)
     return (*out, enc_states) if return_state else out
 
 

@@ -93,13 +93,16 @@ def _pin_operands(*ops):
 
 def lstm_step(params: LSTMParams, h: jax.Array, c: jax.Array, x: jax.Array,
               zx: jax.Array | None, zh: jax.Array | None, p: float,
-              compute_dtype=None):
+              compute_dtype=None, det: jax.Array | None = None):
     """One LSTM time step with per-gate MCD masks (paper's Eq. block + DX units).
 
     Args:
       h, c: [B, H] carry.  x: [B, I] input at time t.
       zx: [B, 4, I] or None; zh: [B, 4, H] or None — keep-masks tied across T.
       p: dropout probability (for inverted scaling).
+      det: [B] bool or None — True rows run deterministic (student fast path):
+        the mask·scale is replaced by the raw view for that row only, exactly
+        as the kernels do for rows carrying :data:`repro.core.mcd.STUDENT_ROW_FLAG`.
     Returns:
       (h_new, c_new), each [B, H].  c is accumulated in fp32 (the paper keeps
       c in 32-bit while everything else is 16-bit — same policy here).
@@ -107,10 +110,13 @@ def lstm_step(params: LSTMParams, h: jax.Array, c: jax.Array, x: jax.Array,
     cd = compute_dtype or x.dtype
     wx, wh, b = params
     # Per-gate masked views: [B, 4, I] and [B, 4, H].
-    xg = jnp.broadcast_to(x[:, None, :], (x.shape[0], 4, x.shape[1])).astype(cd)
-    hg = jnp.broadcast_to(h[:, None, :], (h.shape[0], 4, h.shape[1])).astype(cd)
-    xg = mcd.apply_mask(xg, zx, p)
-    hg = mcd.apply_mask(hg, zh, p)
+    xr = jnp.broadcast_to(x[:, None, :], (x.shape[0], 4, x.shape[1])).astype(cd)
+    hr = jnp.broadcast_to(h[:, None, :], (h.shape[0], 4, h.shape[1])).astype(cd)
+    xg = mcd.apply_mask(xr, zx, p)
+    hg = mcd.apply_mask(hr, zh, p)
+    if det is not None:
+        xg = jnp.where(det[:, None, None], xr, xg)
+        hg = jnp.where(det[:, None, None], hr, hg)
     xg, hg, wxc, whc = _pin_operands(xg, hg, wx.astype(cd), wh.astype(cd))
     gates = (jnp.einsum("bgi,gih->bgh", xg, wxc,
                         preferred_element_type=jnp.float32)
@@ -145,7 +151,7 @@ def init_gru(key: jax.Array, in_dim: int, hidden: int,
 
 def gru_step(params: GRUParams, h: jax.Array, x: jax.Array,
              zx: jax.Array | None, zh: jax.Array | None, p: float,
-             compute_dtype=None):
+             compute_dtype=None, det: jax.Array | None = None):
     """GRU step with per-gate masks (paper §III-A notes GRU drops in directly).
 
     Args:
@@ -154,6 +160,8 @@ def gru_step(params: GRUParams, h: jax.Array, x: jax.Array,
       zx: [B, 3, I] or None; zh: [B, 3, H] or None — keep-masks tied across T,
         gate order (r, z, n).
       p: dropout probability (for inverted scaling).
+      det: [B] bool or None — True rows run deterministic (student fast path),
+        mirroring the kernels' :data:`repro.core.mcd.STUDENT_ROW_FLAG` rows.
     Returns:
       h_new [B, H].  Same dtype policy as :func:`lstm_step`: inputs and
       weights compute in ``compute_dtype`` (default: x's dtype, so bf16 in →
@@ -162,10 +170,13 @@ def gru_step(params: GRUParams, h: jax.Array, x: jax.Array,
     """
     cd = compute_dtype or x.dtype
     wx, wh, b = params
-    xg = jnp.broadcast_to(x[:, None, :], (x.shape[0], 3, x.shape[1])).astype(cd)
-    hg = jnp.broadcast_to(h[:, None, :], (h.shape[0], 3, h.shape[1])).astype(cd)
-    xg = mcd.apply_mask(xg, zx, p)
-    hg = mcd.apply_mask(hg, zh, p)
+    xr = jnp.broadcast_to(x[:, None, :], (x.shape[0], 3, x.shape[1])).astype(cd)
+    hr = jnp.broadcast_to(h[:, None, :], (h.shape[0], 3, h.shape[1])).astype(cd)
+    xg = mcd.apply_mask(xr, zx, p)
+    hg = mcd.apply_mask(hr, zh, p)
+    if det is not None:
+        xg = jnp.where(det[:, None, None], xr, xg)
+        hg = jnp.where(det[:, None, None], hr, hg)
     xg, hg, wxc, whc = _pin_operands(xg, hg, wx.astype(cd), wh.astype(cd))
     gx = jnp.einsum("bgi,gih->bgh", xg, wxc,
                     preferred_element_type=jnp.float32)

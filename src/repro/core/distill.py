@@ -1,0 +1,148 @@
+"""Distilled single-chain student: deterministic trunk + uncertainty head.
+
+The MC-dropout teacher prices every prediction at S stochastic passes.  The
+student collapses that to one: the *same* RNN trunk run deterministic (every
+mask replaced by the identity — rows carrying
+:data:`repro.core.mcd.STUDENT_ROW_FLAG` take the raw view in every kernel and
+oracle), the teacher's own dense head for the prediction, and a small
+*uncertainty head* regressed against the teacher's chain-axis uncertainty:
+
+* classifier — the head predicts the BALD mutual information (epistemic
+  nats) from the trunk's final hidden state ``h_T``;
+* autoencoder — the head predicts the per-position epistemic variance
+  ``Var_s[mu]`` from the decoder's hidden sequence ``dec_out``.
+
+Nothing here owns a forward pass: the trunk is the existing
+:mod:`repro.core.classifier` / :mod:`repro.core.autoencoder` apply with
+flagged rows, so a student row co-batches with MC rows in the same per-layer
+kernel launches (the serving fast path — ``repro.serve.stream``).  Teacher
+targets reuse the ``Running*Summary`` accumulators from
+:mod:`repro.core.uncertainty`, i.e. the exact estimator serving reports.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autoencoder, classifier, linear, mcd, uncertainty
+
+
+def det_rows(n: int, base: int = 0) -> jax.Array:
+    """``n`` distinct student (deterministic) row ids: flagged ``base+i``."""
+    return (jnp.arange(base, base + n, dtype=jnp.uint32)
+            | jnp.uint32(mcd.STUDENT_ROW_FLAG))
+
+
+def _is_classifier(cfg) -> bool:
+    if isinstance(cfg, classifier.ClassifierConfig):
+        return True
+    if isinstance(cfg, autoencoder.AutoencoderConfig):
+        return False
+    raise TypeError(f"expected ClassifierConfig or AutoencoderConfig, "
+                    f"got {type(cfg).__name__}")
+
+
+def init_student(key: jax.Array, cfg, params: dict[str, Any] | None = None,
+                 dtype=jnp.float32) -> dict[str, Any]:
+    """Student head params: ``{"head": DenseParams, "unc": DenseParams}``.
+
+    ``head`` maps the trunk feature to the prediction — initialized from the
+    teacher's own head when ``params`` is given (the natural starting point:
+    at init the student's mean prediction is the teacher's deterministic
+    pass), fresh Glorot otherwise.  ``unc`` maps the same feature to the
+    epistemic estimate — always fresh (the teacher has no such head):
+    ``H → 1`` (MI) for the classifier, ``H → I`` (per-feature Var_s[mu]) for
+    the autoencoder.  A softplus keeps both outputs non-negative
+    (:func:`classifier_student_summary` / :func:`autoencoder_student_summary`).
+    """
+    k_head, k_unc = jax.random.split(key)
+    if _is_classifier(cfg):
+        head = (params["head"] if params is not None else
+                linear.init_dense(k_head, cfg.hidden, cfg.num_classes, dtype))
+        unc = linear.init_dense(k_unc, cfg.hidden, 1, dtype)
+    else:
+        out_dim = 2 * cfg.input_dim if cfg.heteroscedastic else cfg.input_dim
+        head = (params["head"] if params is not None else
+                linear.init_dense(k_head, cfg.hidden, out_dim, dtype))
+        unc = linear.init_dense(k_unc, cfg.hidden, cfg.input_dim, dtype)
+    return {"head": head, "unc": unc}
+
+
+def classifier_student_summary(student: dict[str, Any], h_T: jax.Array
+                               ) -> uncertainty.ClassificationSummary:
+    """One-pass summary from the deterministic trunk's ``h_T`` [B, H].
+
+    The student's probs play the ensemble mean; its predicted MI is the
+    epistemic estimate, and expected entropy is derived as
+    ``predictive - MI`` so the summary obeys the same decomposition identity
+    the S-chain estimator does.
+    """
+    logits = linear.dense(student["head"], h_T)
+    probs = jax.nn.softmax(logits, axis=-1)
+    pred_h = uncertainty._entropy(probs)
+    mi_hat = jax.nn.softplus(linear.dense(student["unc"], h_T))[..., 0]
+    return uncertainty.ClassificationSummary(probs, pred_h, pred_h - mi_hat,
+                                             mi_hat)
+
+
+def autoencoder_student_summary(student: dict[str, Any], dec_out: jax.Array,
+                                heteroscedastic: bool = True
+                                ) -> uncertainty.RegressionSummary:
+    """One-pass summary from the decoder hidden sequence ``dec_out`` [B, W, H].
+
+    Mean/aleatoric come from the (teacher-shaped) head; the predicted
+    epistemic variance comes from the uncertainty head, so
+    ``total = aleatoric + epistemic`` holds exactly as in the MC estimator.
+    """
+    y = linear.dense(student["head"], dec_out)
+    if heteroscedastic:
+        mean, log_var = jnp.split(y, 2, axis=-1)
+        aleatoric = jnp.exp(jnp.clip(log_var, -10.0, 10.0))
+    else:
+        mean, aleatoric = y, jnp.zeros_like(y)
+    eps_hat = jax.nn.softplus(linear.dense(student["unc"], dec_out))
+    return uncertainty.RegressionSummary(mean, aleatoric, eps_hat,
+                                         aleatoric + eps_hat)
+
+
+def classifier_teacher_targets(params: dict[str, Any], x_seq: jax.Array,
+                               cfg, *, n_samples: int | None = None,
+                               backend: str = "reference", base_row: int = 0,
+                               **apply_kw) -> uncertainty.ClassificationSummary:
+    """S-chain teacher summary for a training batch — the distill target.
+
+    Broadcasts ``x_seq`` [B, T, I] to S·B rows (chain-major, matching the
+    serving engine's row layout) and runs **one** launch; the chain axis is
+    folded through :class:`~repro.core.uncertainty.RunningClassificationSummary`
+    so the targets are the exact estimator serving reports.
+    """
+    S = int(n_samples if n_samples is not None else cfg.mcd.n_samples)
+    B = x_seq.shape[0]
+    rows = jnp.arange(base_row, base_row + S * B, dtype=jnp.uint32)
+    xb = jnp.tile(x_seq, (S, 1, 1))
+    logits = classifier.apply(params, xb, rows, cfg, backend=backend,
+                              **apply_kw)
+    acc = uncertainty.RunningClassificationSummary()
+    acc.update(jnp.reshape(logits, (S, B, -1)))
+    return acc.finalize()
+
+
+def autoencoder_teacher_targets(params: dict[str, Any], x_seq: jax.Array,
+                                cfg, *, n_samples: int | None = None,
+                                backend: str = "reference", base_row: int = 0,
+                                **apply_kw) -> uncertainty.RegressionSummary:
+    """S-chain teacher summary for an autoencoder batch (see classifier twin)."""
+    S = int(n_samples if n_samples is not None else cfg.mcd.n_samples)
+    B = x_seq.shape[0]
+    rows = jnp.arange(base_row, base_row + S * B, dtype=jnp.uint32)
+    xb = jnp.tile(x_seq, (S, 1, 1))
+    mean, log_var = autoencoder.apply(params, xb, rows, cfg, backend=backend,
+                                      **apply_kw)
+    acc = uncertainty.RunningRegressionSummary()
+    lv = (jnp.reshape(log_var, (S, B) + log_var.shape[1:])
+          if log_var is not None else None)
+    acc.update(jnp.reshape(mean, (S, B) + mean.shape[1:]), lv)
+    return acc.finalize()

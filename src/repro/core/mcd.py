@@ -161,3 +161,34 @@ def sample_rows(batch: int, n_samples: int) -> jax.Array:
     forward pass recovers the per-sample axis.
     """
     return jnp.arange(n_samples * batch, dtype=jnp.uint32)
+
+
+#: High bit of a row id marks a *deterministic* (distilled-student) row: the
+#: RNN stack runs it with dropout off (identity instead of mask·scale) while
+#: normal rows in the same launch keep their Bayesian draw untouched.  Row
+#: allocators therefore stay below 2^31, and stripping the flag recovers the
+#: allocation-order id.  Part of the snapshot contract, like the KIND_* ids.
+STUDENT_ROW_FLAG = 0x8000_0000
+
+
+def student_row(row: int) -> int:
+    """Tag an allocator row id as deterministic (student fast path)."""
+    return int(row) | STUDENT_ROW_FLAG
+
+
+def base_row(row: int) -> int:
+    """Strip a possible student flag, recovering the allocator id."""
+    return int(row) & (STUDENT_ROW_FLAG - 1)
+
+
+def is_student_row(row: int) -> bool:
+    return bool(int(row) & STUDENT_ROW_FLAG)
+
+
+def det_row_mask(rows: jax.Array) -> jax.Array:
+    """Boolean [rows...] — True where the row id carries the student flag.
+
+    Kernels view rows as int32, where the flag is simply the sign bit; this
+    helper is the host/reference-side equivalent.
+    """
+    return jnp.asarray(rows, jnp.uint32) >= jnp.uint32(STUDENT_ROW_FLAG)

@@ -207,6 +207,10 @@ def run_stack(params: Sequence, x_seq: jax.Array,
     varlen = lengths is not None
     lens = lengths.astype(jnp.int32) if varlen else None
     gru = cell == "gru"
+    # Student rows (mcd.STUDENT_ROW_FLAG) run deterministic on every backend;
+    # the kernels read the flag off the int32 sign bit, the reference threads
+    # an explicit per-row boolean into the cell steps.
+    det = mcd.det_row_mask(rows) if rows is not None else None
 
     def step(carry, xt):
         x_t, t = xt
@@ -215,14 +219,15 @@ def run_stack(params: Sequence, x_seq: jax.Array,
         for state, layer_params, (zx, zh) in zip(carry, params, masks):
             if gru:
                 (h,) = state
-                h_new = cells.gru_step(layer_params, h, inp, zx, zh, p)
+                h_new = cells.gru_step(layer_params, h, inp, zx, zh, p,
+                                       det=det)
                 if varlen:
                     h_new = cells.freeze_rows_h(t, lens, h_new, h)
                 new_state = (h_new,)
             else:
                 h, c = state
                 h_new, c_new = cells.lstm_step(layer_params, h, c, inp,
-                                               zx, zh, p)
+                                               zx, zh, p, det=det)
                 if varlen:
                     h_new, c_new = cells.freeze_rows(t, lens, h_new, c_new,
                                                      h, c)

@@ -47,6 +47,9 @@ def _gru_update(x, h, h_prev, rows, keys_ref, wx_ref, wh_ref, b_ref, *,
     (bit-identity across the kernels hinges on this single definition).
     """
     gx, gh = [], []
+    # int32 rows: a negative id carries mcd.STUDENT_ROW_FLAG — run that row
+    # deterministic (dropout off) without touching its neighbours' draw.
+    det = (rows < 0)[:, None]
     scale = jnp.asarray(1.0 / (1.0 - p_drop), x.dtype) if p_drop > 0 else None
     for g in range(3):
         xg, hg = x, h
@@ -57,6 +60,8 @@ def _gru_update(x, h, h_prev, rows, keys_ref, wx_ref, wh_ref, b_ref, *,
             mh = _gate_mask(kh, rows, 0, h.shape, hidden, p_drop)
             xg = jnp.where(mx, x * scale, jnp.zeros_like(x))
             hg = jnp.where(mh, h * scale, jnp.zeros_like(h))
+            xg = jnp.where(det, x, xg)
+            hg = jnp.where(det, h, hg)
         # x- and h-side accumulators stay separate: the reset gate scales
         # gh[2] alone, before the candidate bias lands (cells.gru_step).
         gx.append(jnp.dot(xg, wx_ref[:, g, :],

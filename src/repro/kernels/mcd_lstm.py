@@ -41,6 +41,10 @@ def _kernel(rows_ref, keys_ref, x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
     rows = rows_ref[...][:, 0]
     x = x_ref[...]                  # [bb, I]
     h = h_ref[...]                  # [bb, H]
+    # Rows are int32 in-kernel, so the student flag (mcd.STUDENT_ROW_FLAG,
+    # the uint32 high bit) is simply the sign bit: negative row = run this
+    # row deterministic (dropout off), leaving every other row's draw alone.
+    det = (rows < 0)[:, None]
     gates = []
     scale = jnp.asarray(1.0 / (1.0 - p_drop), x.dtype) if p_drop > 0 else None
     for g in range(4):
@@ -52,6 +56,8 @@ def _kernel(rows_ref, keys_ref, x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
             mh = _gate_mask(kh, rows, 0, h.shape, hidden, p_drop)
             xg = jnp.where(mx, x * scale, jnp.zeros_like(x))
             hg = jnp.where(mh, h * scale, jnp.zeros_like(h))
+            xg = jnp.where(det, x, xg)
+            hg = jnp.where(det, h, hg)
         acc = jnp.dot(xg, wx_ref[:, g, :], preferred_element_type=jnp.float32)
         acc += jnp.dot(hg, wh_ref[:, g, :], preferred_element_type=jnp.float32)
         gates.append(acc + b_ref[g, :].astype(jnp.float32))

@@ -89,6 +89,9 @@ def _kernel(*refs,
         whv = quantize.kernel_weight(wh_ref[...], sh_ref[...], weight_bits,
                                      hidden=hidden, act_dtype=x.dtype)
     gates = []
+    # int32 rows: a negative id carries mcd.STUDENT_ROW_FLAG — that row runs
+    # deterministic (dropout off), co-batched with the Bayesian rows.
+    det = (rows < 0)[:, None]
     scale = jnp.asarray(1.0 / (1.0 - p_drop), x.dtype) if p_drop > 0 else None
     for g in range(4):
         xg, hg = x, h
@@ -101,6 +104,8 @@ def _kernel(*refs,
             mh = _gate_mask(kh, rows, 0, h.shape, hidden, p_drop)
             xg = jnp.where(mx, x * scale, jnp.zeros_like(x))
             hg = jnp.where(mh, h * scale, jnp.zeros_like(h))
+            xg = jnp.where(det, x, xg)
+            hg = jnp.where(det, h, hg)
         acc = jnp.dot(xg, wxv[:, g, :], preferred_element_type=jnp.float32)
         acc += jnp.dot(hg, whv[:, g, :], preferred_element_type=jnp.float32)
         gates.append(acc + b_ref[g, :].astype(jnp.float32))

@@ -124,6 +124,7 @@ def mcd_gru_seq(x_seq, wx, wh, b, rows, keys, p_drop: float,
 def mcd_gru_step(x, h, wx, wh, b, rows, keys, p_drop: float):
     """wx: [I, 3, H]; wh: [H, 3, H]; b: [3, H]; keys: [1, 6] (r, z, n)."""
     gx, gh = [], []
+    det = (rows.astype(jnp.int32) < 0)[:, None]   # student (deterministic)
     for g in range(3):
         if p_drop > 0.0:
             sx = jnp.asarray(1.0 / (1.0 - p_drop), x.dtype)
@@ -131,6 +132,8 @@ def mcd_gru_step(x, h, wx, wh, b, rows, keys, p_drop: float):
                            x * sx, 0.0)
             hg = jnp.where(_mask(keys[0, 3 + g], rows, h.shape[1], p_drop),
                            h * sx, 0.0)
+            xg = jnp.where(det, x, xg)
+            hg = jnp.where(det, h, hg)
         else:
             xg, hg = x, h
         gx.append(jnp.dot(xg, wx[:, g, :], preferred_element_type=jnp.float32))
@@ -145,6 +148,7 @@ def mcd_gru_step(x, h, wx, wh, b, rows, keys, p_drop: float):
 def mcd_lstm_step(x, h, c, wx, wh, b, rows, keys, p_drop: float):
     """wx: [I, 4, H]; wh: [H, 4, H]; b: [4, H]; keys: [1, 8]."""
     gates = []
+    det = (rows.astype(jnp.int32) < 0)[:, None]   # student (deterministic)
     for g in range(4):
         if p_drop > 0.0:
             sx = jnp.asarray(1.0 / (1.0 - p_drop), x.dtype)
@@ -152,6 +156,8 @@ def mcd_lstm_step(x, h, c, wx, wh, b, rows, keys, p_drop: float):
                            x * sx, 0.0)
             hg = jnp.where(_mask(keys[0, 4 + g], rows, h.shape[1], p_drop),
                            h * sx, 0.0)
+            xg = jnp.where(det, x, xg)
+            hg = jnp.where(det, h, hg)
         else:
             xg, hg = x, h
         acc = jnp.dot(xg, wx[:, g, :], preferred_element_type=jnp.float32) \

@@ -48,7 +48,7 @@ def make_policy(mesh, cfg: ArchConfig) -> shardings.Policy:
     dp = mesh_lib.dp_axes(mesh)
     # FSDP for archs whose TP-sharded params would not fit a 16 GB chip:
     # params_bytes / tp_size > ~4 GB → shard over data too.
-    big = cfg.name.startswith(("jamba", "qwen3-32b", "internvl2"))
+    big = cfg.name.startswith("jamba")
     return shardings.Policy(axes=axes, dp=dp, tp="model", fsdp=big, zero=True)
 
 

@@ -70,6 +70,9 @@ class Ticket:
     n_samples: int | None = None    # fresh admissions: chains to open with
                                     # (None: the store ceiling; ignored for
                                     # re-attach — the Session carries its own)
+    mode: str | None = None         # fresh admissions: "mc" | "student"
+                                    # (None: "mc"; ignored for re-attach —
+                                    # the Session carries its own mode)
 
 
 class AdmissionQueue:
@@ -91,12 +94,14 @@ class AdmissionQueue:
 
     def submit(self, sid: str, *, priority: int = 0,
                session: Session | None = None,
-               n_samples: int | None = None) -> Ticket:
+               n_samples: int | None = None,
+               mode: str | None = None) -> Ticket:
         """Queue an admission (or, with ``session``, a re-attach) request.
 
         ``n_samples`` rides the ticket for a fresh admission: the session
         opens with that many MC chains when it goes live (None: the store
-        ceiling).  Validated at drain time against the store it lands in.
+        ceiling).  ``mode`` likewise ("student" opens a single-row distilled
+        session).  Both validated at drain time against the store.
         """
         if session is not None and session.sid != sid:
             raise ValueError(f"ticket sid {sid!r} != session.sid "
@@ -110,7 +115,7 @@ class AdmissionQueue:
         ticket = Ticket(sid=sid, priority=int(priority), seq=self._seq,
                         session=session, submitted_at=time.monotonic(),
                         n_samples=None if n_samples is None
-                        else int(n_samples))
+                        else int(n_samples), mode=mode)
         self._seq += 1
         self._pending[sid] = ticket
         heapq.heappush(self._heap, (-ticket.priority, ticket.seq, ticket))
@@ -153,7 +158,8 @@ class AdmissionQueue:
                     admitted.append(store.attach(ticket.session))
                 else:
                     admitted.append(store.admit(
-                        ticket.sid, n_samples=ticket.n_samples))
+                        ticket.sid, n_samples=ticket.n_samples,
+                        mode=ticket.mode or "mc"))
             except (ValueError, CapacityError) as err:
                 rejected.append((ticket, err))
         if rejected:
@@ -255,7 +261,8 @@ class WeightedFairQueue:
         self._sids: set[str] = set()
 
     def submit(self, tenant: str, sid: str, *, priority: int = 0,
-               session: Session | None = None) -> FleetTicket:
+               session: Session | None = None,
+               mode: str | None = None) -> FleetTicket:
         """Queue an admission (or re-attach) request for ``tenant``."""
         if tenant not in self._fifos:
             raise KeyError(f"unknown tenant {tenant!r} "
@@ -271,7 +278,7 @@ class WeightedFairQueue:
                 "shed load upstream or raise max_pending")
         ticket = FleetTicket(sid=sid, priority=int(priority), seq=self._seq,
                              session=session,
-                             submitted_at=time.monotonic(),
+                             submitted_at=time.monotonic(), mode=mode,
                              tenant=tenant, enqueued_round=self._round)
         self._seq += 1
         self._sids.add(sid)

@@ -87,6 +87,15 @@ class TenantSpec:
                                    # the launch-group signature — tenants
                                    # sharing an engine share the policy
     min_samples: int = 1           # early-exit floor for this tenant
+    student: Any = None            # distilled student heads enabling
+                                   # mode="student" admissions for this
+                                   # tenant (repro.core.distill); identity
+                                   # is part of the launch-group signature
+                                   # like params
+    student_escalate_threshold: float | None = None  # MC fallback trigger
+                                   # (StreamingEngine docstring); group
+                                   # signature too — co-batched tenants
+                                   # share the escalation policy
 
     def __post_init__(self):
         if "/" in self.name:
@@ -172,7 +181,9 @@ class FleetEngine:
                 cfg, mcd=cfg.mcd.replace(n_samples=1))
             sig = (id(spec.params), cfg_key, spec.backend,
                    spec.precision, spec.chunk_capacity,
-                   spec.early_exit_threshold, spec.min_samples)
+                   spec.early_exit_threshold, spec.min_samples,
+                   id(spec.student) if spec.student is not None else None,
+                   spec.student_escalate_threshold)
             by_sig.setdefault(sig, []).append(spec)
         for members in by_sig.values():
             self._make_group([m.name for m in members])
@@ -224,6 +235,8 @@ class FleetEngine:
                 precision=lead.precision,
                 early_exit_threshold=lead.early_exit_threshold,
                 min_samples=min(lead.min_samples, ceiling),
+                student=lead.student,
+                student_escalate_threshold=lead.student_escalate_threshold,
                 interpret=self._interpret)
         group = _Group(name=gname, engine=engine, tenants=list(members))
         self.groups[gname] = group
@@ -255,7 +268,8 @@ class FleetEngine:
 
     # -- session lifecycle ---------------------------------------------------
     def admit(self, tenant: str, sid: str, *, priority: int = 0,
-              session: Session | None = None) -> Session | None:
+              session: Session | None = None,
+              mode: str | None = None) -> Session | None:
         """Queue a stream for a tenant (and, unless rate-limited, drain).
 
         Mirrors ``StreamingEngine.admit``: returns the live
@@ -265,13 +279,17 @@ class FleetEngine:
         queue here and the budgeted weighted-fair drain runs at the next
         tick boundary.  ``session`` makes it a re-attach (an evicted carry
         resumes the same draw; its sid is re-namespaced into the tenant's
-        group).
+        group).  ``mode="student"`` queues a distilled fast-path admission
+        (the tenant's spec must carry ``student`` heads).
         """
         engine = self.group_of(tenant).engine
         gsid = self._gsid(tenant, sid)
         if gsid in engine.store:
             raise ValueError(f"session {sid!r} already admitted "
                              f"for tenant {tenant!r}")
+        if mode == "student" or (session is not None
+                                 and session.mode == "student"):
+            engine._check_student(gsid)
         if session is not None:
             # Same eager checks as StreamingEngine.admit — fail the caller
             # now, not whichever tick happens to drain the ticket.
@@ -287,7 +305,8 @@ class FleetEngine:
                     f"{tenant!r}'s ceiling is {self._resolved_s(tenant)}")
             if session.sid != gsid:
                 session = dataclasses.replace(session, sid=gsid)
-        self.queue.submit(tenant, gsid, priority=priority, session=session)
+        self.queue.submit(tenant, gsid, priority=priority, session=session,
+                          mode=mode)
         if self.admit_per_tick is not None:
             # Rate-limited mode: admissions happen only at tick boundaries,
             # where the budget is split weighted-fair — an immediate drain
@@ -323,11 +342,14 @@ class FleetEngine:
         """Route one drained ticket into its tenant's launch group.
 
         Fresh sessions open at the *tenant's* ceiling, which may sit below
-        the group engine's (the group ceiling is the max member S).
+        the group engine's (the group ceiling is the max member S); student
+        tickets open one deterministic row instead.
         """
         store = self.group_of(ticket.tenant).engine.store
         if ticket.session is not None:
             return store.attach(ticket.session)
+        if ticket.mode == "student":
+            return store.admit(ticket.sid, mode="student")
         return store.admit(ticket.sid,
                            n_samples=self._resolved_s(ticket.tenant))
 
@@ -436,6 +458,10 @@ class FleetEngine:
                               for gsid, L in lens.items())
             reclaimed = sum(n for gsid, n in engine._last_reclaimed.items()
                             if gsid in lens)
+            stu_rows = sum(n for gsid, n in
+                           engine._last_student_rows.items() if gsid in lens)
+            escal = sum(n for gsid, n in engine._last_escalated.items()
+                        if gsid in lens)
             live = int(sum(lens.values()))
             self.metrics_sink.emit(dataclasses.replace(
                 gm, tick=self.tick, tenant=tenant,
@@ -447,7 +473,8 @@ class FleetEngine:
                 queue_wait_s=waits[tenant],
                 dropped=self._take_dropped(tenant),
                 active_chains=self._active_chains(tenant),
-                reclaimed_rows=reclaimed))
+                reclaimed_rows=reclaimed,
+                student_rows=stu_rows, escalations=escal))
         for tenant in self.specs:
             if tenant in tenant_lens:
                 continue
@@ -624,7 +651,8 @@ class FleetEngine:
         for entry in meta["queue"]:
             self.queue.submit(entry["tenant"], entry["sid"],
                               priority=entry["priority"],
-                              session=entry.get("session_obj"))
+                              session=entry.get("session_obj"),
+                              mode=entry.get("mode"))
         self.tick = int(meta.get("tick", 0))
         return meta
 
@@ -653,7 +681,8 @@ class FleetEngine:
                 sess = dataclasses.replace(
                     sess, sid=self._gsid(tenant, sess.sid))
             self.queue.submit(tenant, self._gsid(tenant, ticket.sid),
-                              priority=ticket.priority, session=sess)
+                              priority=ticket.priority, session=sess,
+                              mode=ticket.mode)
         self.tick = engine.tick
         return {"tenants": {tenant: {"group": self._tenant_group[tenant]}},
                 "tick": self.tick, "extra": extra}

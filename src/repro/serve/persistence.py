@@ -82,6 +82,10 @@ def _session_meta(sess: Session) -> dict:
         # Carry arity per layer ((h, c) → 2, (h,) → 1); absent in pre-GRU
         # snapshots, which were all 2-part LSTM carries.
         meta["parts"] = len(sess.state[0])
+    if sess.mode != "mc":
+        # Written only off the default, so pre-distill snapshots are
+        # byte-identical to this format and restore as all-MC.
+        meta["mode"] = sess.mode
     return meta
 
 
@@ -100,7 +104,8 @@ def _rebuild_session(sid: str, meta: dict, arrays: dict, seed) -> Session:
                  for layer in arrays["state"]]
     return Session(sid=sid, rows=jnp.asarray(arrays["rows"]), seed=seed,
                    state=state, steps=int(meta["steps"]),
-                   chunks=int(meta["chunks"]))
+                   chunks=int(meta["chunks"]),
+                   mode=meta.get("mode", "mc"))
 
 
 def _store_tree_meta(store: SessionStore, used: set[str],
@@ -155,6 +160,10 @@ def snapshot_store(directory: str, store: SessionStore, *,
                 # stream at the ceiling.  (Absent in pre-dynamic-S
                 # snapshots; restore_store's .get() defaults to None.)
                 entry["n_samples"] = int(ticket.n_samples)
+            if ticket.mode is not None:
+                # Same contract as n_samples: a fresh student ticket must
+                # still open as a student after the crash.
+                entry["mode"] = ticket.mode
             if ticket.session is not None:
                 # A queued re-attach carries live state — it must survive
                 # the crash with the same fidelity as an admitted session.
@@ -243,7 +252,8 @@ def restore_store(directory: str, *, step: int | None = None,
                 sess = _rebuild_session(entry["sid"], entry["session"],
                                         arrays[entry["sid"]], meta["seed"])
             queue.submit(entry["sid"], priority=entry["priority"],
-                         session=sess, n_samples=entry.get("n_samples"))
+                         session=sess, n_samples=entry.get("n_samples"),
+                         mode=entry.get("mode"))
     return store, meta
 
 
@@ -298,6 +308,8 @@ def snapshot_fleet(directory: str, *, groups, tenants: dict, queue,
         entry = {"tenant": tenant, "sid": ticket.sid,
                  "priority": ticket.priority,
                  "attached": ticket.session is not None}
+        if ticket.mode is not None:
+            entry["mode"] = ticket.mode
         if ticket.session is not None:
             key = _tree_key(ticket.sid, used_by_group.setdefault(gname,
                                                                  set()))

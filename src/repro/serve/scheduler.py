@@ -80,6 +80,12 @@ class TickMetrics:
                                # (dse.calibrate) reads
     reclaimed_rows: int = 0    # chain rows retired by early exit this tick
                                # (freed batch capacity; row ids stay burned)
+    student_rows: int = 0      # rows served on the distilled fast path this
+                               # tick (one per student session — the rest of
+                               # the batch is MC chains)
+    escalations: int = 0       # student sessions that crossed the
+                               # uncertainty threshold this tick and regrew
+                               # to S fresh MC chains (store.grow)
     tenant: str | None = None  # owning tenant when the record came from a
                                # FleetEngine tick (None: single-tenant
                                # engine); summarize() groups on it
@@ -264,6 +270,11 @@ def summarize(metrics: Sequence[TickMetrics]) -> dict:
         "active_chains_mean": (sum(m.active_chains for m in metrics)
                                / len(metrics)),
         "reclaimed_rows": sum(m.reclaimed_rows for m in metrics),
+        # Distill observables: rows on the single-chain fast path (gauge —
+        # mean over the window) and total MC escalations (counter).
+        "student_rows_mean": (sum(m.student_rows for m in metrics)
+                              / len(metrics)),
+        "escalations": sum(m.escalations for m in metrics),
     }
     tenants = sorted({m.tenant for m in metrics if m.tenant is not None})
     if tenants:

@@ -31,6 +31,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mcd as _mcd
+
+#: Session serving modes: ``"mc"`` runs S Bayesian chains; ``"student"``
+#: runs one deterministic row (the distilled fast path — its row id carries
+#: :data:`repro.core.mcd.STUDENT_ROW_FLAG`, so the kernels skip its masks).
+MODES = ("mc", "student")
+
 
 class CapacityError(RuntimeError):
     """Admission refused: the store already holds ``max_sessions`` sessions."""
@@ -44,11 +51,14 @@ class Session:
     rows: jax.Array            # [s] uint32 mask-stream row ids; s is *this
                                # session's* chain count — allocated once at
                                # admission, only ever trimmed to a prefix
-                               # (retire); ids never reassigned
+                               # (retire) or regrown fresh (grow); ids never
+                               # reassigned
     seed: Any                  # counter-PRNG base seed (shared, engine-wide)
     state: list | None = None  # per-layer [(h [S,H], c [S,H]), ...] or fresh
     steps: int = 0             # timesteps consumed so far
     chunks: int = 0            # chunks served so far
+    mode: str = "mc"           # "mc" | "student" (MODES); student sessions
+                               # carry exactly one flagged deterministic row
 
     @property
     def fresh(self) -> bool:
@@ -82,30 +92,62 @@ class SessionStore:
         self._next_row = int(first_row)
         self._sessions: dict[str, Session] = {}
 
-    def admit(self, sid: str, *, n_samples: int | None = None) -> Session:
+    def admit(self, sid: str, *, n_samples: int | None = None,
+              mode: str = "mc") -> Session:
         """Register a new stream; allocates its mask rows for life.
 
         ``n_samples`` opens the session with fewer chains than the store
         ceiling (None: the ceiling) — a cheap tenant or an operator who
         already knows the traffic is easy; it can never exceed the ceiling,
         which is what co-batched launch shapes are sized against.
+
+        ``mode="student"`` opens the distilled fast path instead: one
+        deterministic row whose id carries the
+        :data:`repro.core.mcd.STUDENT_ROW_FLAG` high bit (the kernels run it
+        dropout-off in the same launch as its MC neighbours).  The allocator
+        burns one base id for it, so :meth:`grow` can later escalate the
+        session to fresh MC rows without any id collision.
         """
         if sid in self._sessions:
             raise ValueError(f"session {sid!r} already admitted")
         if len(self._sessions) >= self.max_sessions:
             raise CapacityError(
                 f"store full ({self.max_sessions} sessions); evict first")
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        if mode == "student":
+            if n_samples not in (None, 1):
+                raise ValueError(
+                    f"session {sid!r}: student sessions run exactly one "
+                    f"deterministic row, got n_samples={n_samples}")
+            self._check_allocator(1)
+            rows = jnp.asarray([_mcd.student_row(self._next_row)],
+                               dtype=jnp.uint32)
+            self._next_row += 1
+            sess = Session(sid=sid, rows=rows, seed=self.seed,
+                           mode="student")
+            self._sessions[sid] = sess
+            return sess
         s = self.n_samples if n_samples is None else int(n_samples)
         if not 1 <= s <= self.n_samples:
             raise ValueError(
                 f"session {sid!r} wants {s} MC chains, store ceiling is "
                 f"{self.n_samples} (floor 1)")
+        self._check_allocator(s)
         rows = jnp.arange(self._next_row, self._next_row + s,
                           dtype=jnp.uint32)
         self._next_row += s
         sess = Session(sid=sid, rows=rows, seed=self.seed)
         self._sessions[sid] = sess
         return sess
+
+    def _check_allocator(self, count: int) -> None:
+        # Base row ids must stay below the student-flag bit, or a flagged id
+        # would be ambiguous with a plain one (and the masks would collide).
+        if self._next_row + count > _mcd.STUDENT_ROW_FLAG:
+            raise RuntimeError(
+                f"row allocator exhausted ({self._next_row} ids burned; "
+                f"ceiling {_mcd.STUDENT_ROW_FLAG})")
 
     def retire(self, sid: str, keep: int) -> int:
         """Shrink a live session to its first ``keep`` MC chains.
@@ -134,6 +176,59 @@ class SessionStore:
             sess.state = [tuple(part[:keep] for part in layer)
                           for layer in sess.state]
         return s_old - keep
+
+    def grow(self, sid: str, n: int) -> int:
+        """Grow a live session to ``n`` total MC chains with fresh rows.
+
+        The reverse of :meth:`retire`, and the student-escalation
+        primitive.  ``n`` is the *target* chain count (mirror of retire's
+        ``keep``).  Fresh rows come from the monotone allocator — never a
+        reused id, so the new chains are genuinely new Bayesian draws and
+        no mask is ever repeated.
+
+        * An MC session gains ``n - s`` chains; the newcomers start from
+          zero carries (a fresh chain has seen none of the signal — same
+          semantics as a config-swap upshift in
+          ``repro.serve.controller.convert_session``).
+        * A student session is *replaced*: its single deterministic row
+          retires (a det row's masks are the identity — it cannot become an
+          MC chain) and ``n`` fresh MC rows take over, every one resuming a
+          tiled copy of the student's carry.  The escalated session is
+          bit-identical to an always-MC session :meth:`attach`-ed with
+          those row ids and that tiled state — the distill fallback pin in
+          ``tests/test_streaming.py``.  Mode flips to ``"mc"``.
+
+        Returns the number of fresh rows allocated (0 if already at ``n``).
+        """
+        sess = self.get(sid)
+        s_old = int(sess.rows.shape[0])
+        n = int(n)
+        student = sess.mode == "student"
+        if not (1 if student else s_old) <= n <= self.n_samples:
+            raise ValueError(
+                f"session {sid!r}: grow target {n} must be in "
+                f"[{s_old}, {self.n_samples}]")
+        count = n if student else n - s_old
+        if count == 0:
+            return 0
+        self._check_allocator(count)
+        fresh = jnp.arange(self._next_row, self._next_row + count,
+                           dtype=jnp.uint32)
+        self._next_row += count
+        if student:
+            sess.rows = fresh
+            if sess.state is not None:
+                sess.state = [tuple(jnp.repeat(part, n, axis=0)
+                                    for part in layer)
+                              for layer in sess.state]
+            sess.mode = "mc"
+        else:
+            sess.rows = jnp.concatenate([sess.rows, fresh])
+            if sess.state is not None:
+                sess.state = [tuple(jnp.concatenate(
+                    [part, jnp.zeros((count,) + part.shape[1:], part.dtype)])
+                    for part in layer) for layer in sess.state]
+        return count
 
     def attach(self, session: Session) -> Session:
         """Re-admit a previously evicted :class:`Session` object.
@@ -166,7 +261,10 @@ class SessionStore:
                     f"session {live.sid!r} — same (seed, rows) would "
                     "correlate their Bayesian draws")
         # Future admissions must not re-allocate the attached rows either.
-        self._next_row = max(self._next_row, max(attached) + 1)
+        # Student rows carry the high flag bit — strip it, or one attached
+        # student session would blow the base-id cursor past the ceiling.
+        self._next_row = max(self._next_row,
+                             max(_mcd.base_row(r) for r in attached) + 1)
         self._sessions[session.sid] = session
         return session
 

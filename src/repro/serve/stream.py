@@ -48,7 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autoencoder as _ae, classifier as _clf, mcd as _mcd
+from repro.core import (autoencoder as _ae, classifier as _clf,
+                        distill as _distill, mcd as _mcd)
 from repro.kernels import quantize as _quant
 from repro.core.uncertainty import (ClassificationSummary, RegressionSummary,
                                     RunningClassificationSummary,
@@ -224,6 +225,25 @@ class StreamingEngine:
       min_samples: the early-exit floor — no session is ever retired
         below this many chains (the ``SLOPolicy.min_samples`` uncertainty
         floor, enforced in the data plane).
+      student: distilled student heads (``repro.core.distill.init_student``)
+        enabling ``mode="student"`` sessions — one deterministic row
+        (``STUDENT_ROW_FLAG``: the kernels skip its masks in-register)
+        co-batched in the same per-layer launches as the MC chains, decoded
+        through the student heads instead of the chain-axis estimator.
+        None (default): student admissions are refused and the engine is
+        bit-identical to the pre-distill engine.  Incompatible with
+        ``mesh`` (single-row sessions would break the whole-sessions-per-
+        shard placement).
+      student_escalate_threshold: MC fallback trigger.  After each served
+        chunk, a student session whose *predicted* epistemic uncertainty
+        (classifier: MI nats; autoencoder: mean epistemic variance) exceeds
+        this value escalates: ``SessionStore.grow`` retires the student row
+        and regrows ``n_samples`` fresh MC chains from the student's carry,
+        so from the next chunk the session runs the full Bayesian
+        estimator.  Fresh rows mean no mask reuse — the escalated session
+        is bit-identical to an always-MC session attached at that carry.
+        None: students never escalate (still serviceable via an explicit
+        ``store.grow``).
       interpret: forwarded to the Pallas backends (default: auto off-TPU).
     """
 
@@ -237,6 +257,8 @@ class StreamingEngine:
                  mesh=None, policy=None, precision: str | None = None,
                  early_exit_threshold: float | None = None,
                  min_samples: int = 1,
+                 student=None,
+                 student_escalate_threshold: float | None = None,
                  interpret: bool | None = None):
         if isinstance(cfg, _clf.ClassifierConfig):
             self.kind = "classifier"
@@ -298,13 +320,33 @@ class StreamingEngine:
                 f"min_samples must be in [1, {self.n_samples}], "
                 f"got {min_samples}")
         self.min_samples = int(min_samples)
+        if student is not None and mesh is not None:
+            raise ValueError(
+                "student= is incompatible with mesh= — single-row student "
+                "sessions would break the whole-sessions-per-shard "
+                "placement; serve the distilled fast path unsharded")
+        self.student = student
+        if student_escalate_threshold is not None:
+            if student is None:
+                raise ValueError("student_escalate_threshold needs student= "
+                                 "heads — there is nothing to escalate from")
+            if not float(student_escalate_threshold) >= 0.0:
+                raise ValueError(
+                    f"student_escalate_threshold must be >= 0, "
+                    f"got {student_escalate_threshold}")
+        self.student_escalate_threshold = (
+            None if student_escalate_threshold is None
+            else float(student_escalate_threshold))
         self.store = SessionStore(self.n_samples, cfg.mcd.seed,
                                   max_sessions=max_sessions)
         # Per-tick attribution for the fleet sink: sid -> chains served /
-        # rows retired on the most recent step() (read by FleetEngine to
-        # split active_chains/reclaimed_rows across tenant records).
+        # rows retired / student rows / escalations on the most recent
+        # step() (read by FleetEngine to split the tick-level counts
+        # across tenant records).
         self._last_served_chains: dict[str, int] = {}
         self._last_reclaimed: dict[str, int] = {}
+        self._last_student_rows: dict[str, int] = {}
+        self._last_escalated: dict[str, int] = {}
         self.queue = AdmissionQueue(max_pending)
         self.tick = 0
         # Pluggable, bounded: the engine is built for unbounded streams —
@@ -324,16 +366,27 @@ class StreamingEngine:
         self._dropped_unreported = 0
 
     # -- session lifecycle ---------------------------------------------------
-    def open_session(self, sid: str, *, n_samples: int | None = None):
+    def open_session(self, sid: str, *, n_samples: int | None = None,
+                     mode: str = "mc"):
         """Admit a stream *now* or fail fast with ``CapacityError``.
 
         The synchronous path — callers that would rather wait for a freed
         row than handle the error use :meth:`admit`.  Its mask rows are
         fixed here, for life; ``n_samples`` opens below the engine ceiling
-        (None: the ceiling).
+        (None: the ceiling).  ``mode="student"`` opens on the distilled
+        fast path (one deterministic row; needs ``student=`` heads).
         """
-        self._check_chain_count(sid, n_samples)
-        return self.store.admit(sid, n_samples=n_samples)
+        if mode == "student":
+            self._check_student(sid)
+        else:
+            self._check_chain_count(sid, n_samples)
+        return self.store.admit(sid, n_samples=n_samples, mode=mode)
+
+    def _check_student(self, sid: str) -> None:
+        if self.student is None:
+            raise ValueError(
+                f"session {sid!r}: mode='student' needs an engine built "
+                "with student= head params (repro.core.distill)")
 
     def _check_chain_count(self, sid: str, n_samples: int | None) -> None:
         # Sharded engines place whole sessions per shard assuming one S —
@@ -348,7 +401,8 @@ class StreamingEngine:
 
     def admit(self, sid: str, *, priority: int = 0,
               session: Session | None = None,
-              n_samples: int | None = None):
+              n_samples: int | None = None,
+              mode: str | None = None):
         """Queue a stream for admission; drain it into any free row now.
 
         The asynchronous path: never raises ``CapacityError`` — at capacity
@@ -356,9 +410,12 @@ class StreamingEngine:
         that) and goes live when an eviction or tick boundary frees a row,
         highest ``priority`` first, FIFO within a class.  ``session`` makes
         it a re-attach request (an evicted carry resumes the same draw).
+        ``mode="student"`` queues a distilled fast-path admission.
         Returns the live :class:`Session` if admitted immediately, else
         None (it is queued; watch ``queued_sessions``).
         """
+        if mode == "student":
+            self._check_student(sid)
         if sid in self.store:
             raise ValueError(f"session {sid!r} already admitted")
         if session is not None:
@@ -377,10 +434,12 @@ class StreamingEngine:
             if (self._shards > 1
                     and int(session.rows.shape[0]) != self.n_samples):
                 self._check_chain_count(sid, int(session.rows.shape[0]))
-        else:
+            if session.mode == "student":
+                self._check_student(sid)
+        elif mode != "student":
             self._check_chain_count(sid, n_samples)
         self.queue.submit(sid, priority=priority, session=session,
-                          n_samples=n_samples)
+                          n_samples=n_samples, mode=mode)
         try:
             self.queue.drain(self.store)
         except DrainRejected as err:
@@ -409,7 +468,10 @@ class StreamingEngine:
 
     def attach_session(self, session):
         """Re-admit an evicted Session (same draw: state + (seed, rows))."""
-        self._check_chain_count(session.sid, int(session.rows.shape[0]))
+        if session.mode == "student":
+            self._check_student(session.sid)
+        else:
+            self._check_chain_count(session.sid, int(session.rows.shape[0]))
         return self.store.attach(session)
 
     def _drain(self):
@@ -574,6 +636,17 @@ class StreamingEngine:
     def _adopt(self, store: SessionStore, queue: AdmissionQueue,
                engine_meta: dict) -> None:
         """Take over a restored store/queue + validated engine meta."""
+        # A student session decodes through the student heads — adopting
+        # one into an engine that has none would silently misserve it
+        # (pre-distill snapshots carry no modes and restore everywhere).
+        if self.student is None:
+            stu = ([s.sid for s in store.sessions() if s.mode == "student"]
+                   + [t.sid for t in queue.waiting()
+                      if getattr(t, "mode", None) == "student"])
+            if stu:
+                raise ValueError(
+                    f"snapshot carries student-mode sessions {sorted(stu)}; "
+                    "this engine was built without student= heads")
         # The engine's own ceiling governs from here on (meta check pinned
         # them equal) — restored sessions keep whatever per-session S their
         # rows arrays carry.
@@ -668,7 +741,7 @@ class StreamingEngine:
         if self.kind == "classifier":
             (logits,) = outs
         else:
-            mean, log_var = outs
+            mean, log_var, dec_out = outs
 
         # Batched summaries over [s, group, ...] — per-session results are
         # indexed out, not recomputed per session.  A uniform tick (the
@@ -677,12 +750,18 @@ class StreamingEngine:
         # sequence.  Ragged ticks group sessions by chain count (staged
         # halving keeps distinct counts at most log2(S)+1) and gather each
         # group's rows; values are launch-layout-invariant either way.
+        # Student sessions sit outside the chain-axis estimator entirely:
+        # their single deterministic row is decoded through the student
+        # heads below, and only the MC sessions group.
         k_n = len(sessions)
         summaries: list = [None] * k_n
-        groups = ([(s_list[0], list(range(k_n)))] if len(set(s_list)) == 1
-                  else sorted({si: [k for k in range(k_n)
-                                    if s_list[k] == si]
-                               for si in set(s_list)}.items()))
+        stu_ks = [k for k in range(k_n) if sessions[k].mode == "student"]
+        mc_ks = [k for k in range(k_n) if sessions[k].mode != "student"]
+        mc_s = [s_list[k] for k in mc_ks]
+        groups = ([(s_list[0], list(range(k_n)))]
+                  if not stu_ks and len(set(s_list)) == 1
+                  else sorted({si: [k for k in mc_ks if s_list[k] == si]
+                               for si in set(mc_s)}.items()))
         for si, ks in groups:
             if len(ks) == k_n:
                 sel = lambda a: a.reshape((-1, si) + a.shape[1:])[:k_n]  # noqa: E731
@@ -708,6 +787,24 @@ class StreamingEngine:
                     summaries[k] = RegressionSummary(
                         *(v[j] for v in batched))
 
+        # Distilled fast path: a student session's summary comes from the
+        # student heads on its one deterministic row's features — h_T for
+        # the classifier, the decoder hidden sequence for the autoencoder.
+        # One batched head call over every student row, indexed out like
+        # the MC groups — per-session calls would put O(sessions) tiny
+        # dispatches back on the tick.
+        if stu_ks:
+            idx = jnp.asarray([offsets[k] for k in stu_ks])
+            if self.kind == "classifier":
+                batched = _distill.classifier_student_summary(
+                    self.student, states[-1][0][idx])
+            else:
+                batched = _distill.autoencoder_student_summary(
+                    self.student, dec_out[idx],
+                    getattr(self.cfg, "heteroscedastic", True))
+            for j, k in enumerate(stu_ks):
+                summaries[k] = type(batched)(*(v[j] for v in batched))
+
         # Windowed-decoder AEs reconstruct only min(L, W) positions per chunk
         # — the valid slice is capped by the decode window, not the chunk.
         win = getattr(self.cfg, "decode_window", None)
@@ -730,8 +827,13 @@ class StreamingEngine:
 
         self._last_served_chains = {sess.sid: si for sess, si
                                     in zip(sessions, s_list)}
+        self._last_student_rows = {sessions[k].sid: 1 for k in stu_ks}
         reclaimed = self._early_exit(sessions, lens, s_list, offsets, outs,
                                      win)
+        # Escalation runs *after* state writeback: grow() tiles the carry
+        # the tick just stored, so the regrown chains resume exactly the
+        # student's post-chunk state.
+        escalations = self._escalate(sessions, results)
 
         # Control-plane observables (host wall-clock; on CPU interpret the
         # dispatch is effectively synchronous, on TPU it's a dispatch proxy).
@@ -751,7 +853,8 @@ class StreamingEngine:
             compiles=stack_compile_count() - compiles_before,
             dropped=self._take_dropped(),
             active_chains=self.store.active_chains,
-            reclaimed_rows=reclaimed)
+            reclaimed_rows=reclaimed,
+            student_rows=len(stu_ks), escalations=escalations)
         self.metrics_sink.emit(m)
         self.tick += 1
         return results
@@ -789,7 +892,7 @@ class StreamingEngine:
                     np.asarray(full.finalize().mutual_information)
                     - np.asarray(prefix.finalize().mutual_information))[0])
             else:
-                mean, log_var = outs
+                mean, log_var = outs[0], outs[1]
                 valid = L if win is None else min(L, win)
                 mu = np.asarray(mean[off:off + si, :valid])
                 lv = (None if log_var is None
@@ -807,6 +910,37 @@ class StreamingEngine:
                     reclaimed += n_ret
                     self._last_reclaimed[sess.sid] = n_ret
         return reclaimed
+
+    def _escalate(self, sessions, results) -> int:
+        """Regrow student sessions whose predicted uncertainty crossed the
+        threshold (the MC fallback).
+
+        Reads each student session's *served* summary — the student heads'
+        predicted MI (classifier) / mean epistemic variance (autoencoder) —
+        and a strict ``>`` compare against ``student_escalate_threshold``
+        triggers ``SessionStore.grow(sid, n_samples)``: the det row retires
+        and the engine-ceiling count of fresh MC chains resumes the tiled
+        carry.  From the next chunk the session is indistinguishable from
+        an always-MC session attached at that carry (fresh rows ⇒ fresh
+        masks; pinned bit-identical in tests).  Returns escalation count.
+        """
+        self._last_escalated = {}
+        if self.student_escalate_threshold is None:
+            return 0
+        n = 0
+        for sess in sessions:
+            if sess.mode != "student":
+                continue
+            summ = results[sess.sid].summary
+            if self.kind == "classifier":
+                u = float(np.asarray(summ.mutual_information))
+            else:
+                u = float(np.mean(np.asarray(summ.epistemic)))
+            if u > self.student_escalate_threshold:
+                self.store.grow(sess.sid, self.n_samples)
+                self._last_escalated[sess.sid] = 1
+                n += 1
+        return n
 
     def _take_dropped(self) -> int:
         """Drops accumulated since the last metrics record (and reset)."""
@@ -835,7 +969,12 @@ class StreamingEngine:
         Factored out of :meth:`step` so :func:`repro.serve.scheduler.prewarm`
         can drive the *exact* serving graph (same shapes, dtypes and state
         pytree) at boot, compiling every ladder rung before traffic arrives.
-        Returns ``(model outputs tuple, per-layer states)``.
+        Returns ``(model outputs tuple, per-layer states)`` — for the
+        autoencoder the outputs are ``(mean, log_var, dec_out)``: the
+        decoder hidden sequence is requested unconditionally (``_ae.apply``
+        is not itself jitted, so the extra return changes no numerics and
+        keeps the graph independent of whether any student row is present;
+        the student summary path reads it).
         """
         if self.kind == "classifier":
             logits, states = _clf.apply(
@@ -844,12 +983,12 @@ class StreamingEngine:
                 return_state=True, mesh=self.mesh, policy=self.policy,
                 precision=self.precision)
             return (logits,), states
-        mean, log_var, states = _ae.apply(
+        mean, log_var, dec_out, states = _ae.apply(
             self.params, x_batch, rows, self.cfg, backend=self.backend,
             initial_state=initial_state, lengths=lengths,
-            return_state=True, mesh=self.mesh, policy=self.policy,
-            precision=self.precision)
-        return (mean, log_var), states
+            return_state=True, return_decoded=True, mesh=self.mesh,
+            policy=self.policy, precision=self.precision)
+        return (mean, log_var, dec_out), states
 
     def _gather_states(self, sessions, dtype, n_pad: int = 0):
         """Concatenate per-session carries into batch-aligned layer states.

@@ -1,0 +1,128 @@
+"""Distillation trainer: roll the MC teacher over a stream, fit the student.
+
+The trunk is frozen — only the student's two dense heads
+(:func:`repro.core.distill.init_student`) train.  That makes each batch two
+phases:
+
+1. **Teacher pass** (no grad): one S·B-row launch produces the chain-axis
+   summary via the ``Running*`` accumulators — the mean prediction and the
+   epistemic target (MI / Var_s[mu]).  In the same sweep the trunk runs once
+   more with *flagged* (deterministic) rows to cache the student's feature
+   (``h_T`` / ``dec_out``) — the same values the serving fast path computes.
+2. **Student step** (jitted): heads-only loss on the cached features —
+   KL(teacher probs ‖ student softmax) + MSE on the uncertainty head for the
+   classifier; mean/log-var matching + epistemic MSE for the autoencoder.
+
+Because the features are precomputed, the jitted train step never touches the
+recurrent stack: distillation costs one teacher sweep over the stream plus a
+dense-head regression, not S epochs of BPTT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import autoencoder, classifier, distill
+from repro.train import optimizer, trainer
+
+
+@dataclasses.dataclass(frozen=True)
+class DistillConfig:
+    n_samples: int | None = None   # teacher chain count (None: cfg.mcd.n_samples)
+    unc_weight: float = 1.0        # weight of the uncertainty-regression term
+    lr: float = 1e-2               # heads-only — far stiffer than trunk training
+    backend: str = "reference"     # teacher/trunk execution path
+    log_every: int = 0
+    #: Materialize the teacher feed once and cycle it: ``xs`` must then be
+    #: finite, and training literally costs one teacher sweep however many
+    #: head steps follow (the targets are deterministic in ``(params, x)``,
+    #: so re-sweeping identical batches buys nothing).
+    cache_targets: bool = False
+
+    def train_config(self) -> trainer.TrainConfig:
+        return trainer.TrainConfig(
+            adamw=optimizer.AdamWConfig(lr=self.lr, weight_decay=0.0),
+            log_every=self.log_every)
+
+
+def classifier_batches(params: dict[str, Any], cfg, xs: Iterable[jax.Array],
+                       dcfg: DistillConfig):
+    """Yield ``{"feat", "probs", "mi"}`` per input batch (teacher pass)."""
+    for x in xs:
+        t = distill.classifier_teacher_targets(
+            params, x, cfg, n_samples=dcfg.n_samples, backend=dcfg.backend)
+        _, states = classifier.apply(params, x, distill.det_rows(x.shape[0]),
+                                     cfg, backend=dcfg.backend,
+                                     return_state=True)
+        yield {"feat": states[-1][0], "probs": t.probs,
+               "mi": t.mutual_information}
+
+
+def autoencoder_batches(params: dict[str, Any], cfg, xs: Iterable[jax.Array],
+                        dcfg: DistillConfig):
+    """Yield ``{"feat", "mean", "eps"}`` per input batch (teacher pass)."""
+    for x in xs:
+        t = distill.autoencoder_teacher_targets(
+            params, x, cfg, n_samples=dcfg.n_samples, backend=dcfg.backend)
+        out = autoencoder.apply(params, x, distill.det_rows(x.shape[0]), cfg,
+                                backend=dcfg.backend, return_decoded=True)
+        yield {"feat": out[-1], "mean": t.mean, "eps": t.epistemic}
+
+
+def _kl(p: jax.Array, q: jax.Array) -> jax.Array:
+    """Mean KL(p ‖ q) over the batch, probabilities in, nats out."""
+    p = jnp.clip(p, 1e-12, 1.0)
+    q = jnp.clip(q, 1e-12, 1.0)
+    return jnp.mean(jnp.sum(p * (jnp.log(p) - jnp.log(q)), axis=-1))
+
+
+def distill_classifier(params: dict[str, Any], cfg, xs: Iterable[jax.Array],
+                       num_steps: int, *, key: jax.Array | None = None,
+                       dcfg: DistillConfig = DistillConfig(),
+                       student: dict[str, Any] | None = None):
+    """Fit a classifier student on ``xs`` batches.  Returns (student, history)."""
+    if student is None:
+        student = distill.init_student(
+            key if key is not None else jax.random.PRNGKey(0), cfg, params)
+
+    def loss_fn(stu, batch, step):
+        summ = distill.classifier_student_summary(stu, batch["feat"])
+        kl = _kl(batch["probs"], summ.probs)
+        unc = jnp.mean((summ.mutual_information - batch["mi"]) ** 2)
+        return kl + dcfg.unc_weight * unc, {"kl": kl, "unc_mse": unc}
+
+    tr = trainer.Trainer(loss_fn, student, dcfg.train_config())
+    feed = classifier_batches(params, cfg, xs, dcfg)
+    if dcfg.cache_targets:
+        feed = itertools.cycle(list(feed))
+    hist = tr.run(feed, num_steps)
+    return tr.params, hist
+
+
+def distill_autoencoder(params: dict[str, Any], cfg, xs: Iterable[jax.Array],
+                        num_steps: int, *, key: jax.Array | None = None,
+                        dcfg: DistillConfig = DistillConfig(),
+                        student: dict[str, Any] | None = None):
+    """Fit an autoencoder student on ``xs`` batches.  Returns (student, history)."""
+    if student is None:
+        student = distill.init_student(
+            key if key is not None else jax.random.PRNGKey(0), cfg, params)
+
+    def loss_fn(stu, batch, step):
+        summ = distill.autoencoder_student_summary(stu, batch["feat"],
+                                                   cfg.heteroscedastic)
+        mse = jnp.mean((summ.mean - batch["mean"]) ** 2)
+        unc = jnp.mean((summ.epistemic - batch["eps"]) ** 2)
+        return mse + dcfg.unc_weight * unc, {"mse": mse, "unc_mse": unc}
+
+    tr = trainer.Trainer(loss_fn, student, dcfg.train_config())
+    feed = autoencoder_batches(params, cfg, xs, dcfg)
+    if dcfg.cache_targets:
+        feed = itertools.cycle(list(feed))
+    hist = tr.run(feed, num_steps)
+    return tr.params, hist

@@ -16,6 +16,11 @@ still loads them:
   one manifest holding per-group store trees plus the tenant table, the
   shared queue and the fairness ledger.  Written at the layout's birth so
   later fleet-format evolution keeps a restore path for it.
+* ``distill_v1/`` — the distilled fast-path layout at its birth: a
+  ``mode: "student"`` session meta (written only off the default, so
+  pre-distill snapshots stay byte-identical) whose single row carries the
+  deterministic high-bit flag, next to a plain MC session and a queued
+  fresh student ticket.
 
 Arrays are seeded, so re-running reproduces the same bytes:
 
@@ -100,6 +105,40 @@ def _write_fleet():
     return root
 
 
+def _write_distill():
+    """The distill_v1 layout: student sessions inside a normal snapshot."""
+    rng = np.random.default_rng(91011)
+    root = os.path.join(HERE, "snapshots", "distill_v1")
+    if os.path.exists(root):
+        shutil.rmtree(root)
+    student_row = np.uint32(0x8000_0000 | N_SAMPLES)   # allocator id 2
+    tree = {
+        "ward_1": {"rows": np.arange(N_SAMPLES, dtype=np.uint32),
+                   "state": _carry(rng, 2)},
+        "ward_2": {"rows": np.array([student_row], np.uint32),
+                   "state": [[rng.standard_normal((1, HIDDEN))
+                              .astype(np.float32) for _ in range(2)]
+                             for _ in range(NUM_LAYERS)]},
+    }
+    sessions = {
+        "ward_1": {"steps": 7, "chunks": 2, "layers": NUM_LAYERS,
+                   "parts": 2, "key": "ward_1"},
+        "ward_2": {"steps": 7, "chunks": 2, "layers": NUM_LAYERS,
+                   "parts": 2, "key": "ward_2", "mode": "student"},
+    }
+    meta = {"format": 1, "n_samples": N_SAMPLES, "seed": SEED,
+            "max_sessions": 4, "next_row": N_SAMPLES + 1,
+            "sessions": sessions,
+            "queue": [{"sid": "ward_3", "priority": 0, "attached": False,
+                       "mode": "student"}],
+            "extra": {"tick": 2, "kind": "classifier",
+                      "backend": "pallas_seq", "cell": "lstm",
+                      "precision": None, "data_shards": 1,
+                      "mcd": {"p": 0.125, "placement": "YN"}}}
+    ckpt.save(root, 0, tree, meta=meta)
+    return root
+
+
 def main():
     _write("pr3_lstm", parts=2, include_parts_key=False,
            extra={"tick": 2, "kind": "classifier", "backend": "pallas_seq"})
@@ -108,6 +147,7 @@ def main():
                   "cell": "gru",
                   "mcd": {"p": 0.125, "placement": "YN"}})
     _write_fleet()
+    _write_distill()
     print("fixtures written under", os.path.join(HERE, "snapshots"))
 
 

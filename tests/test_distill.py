@@ -1,0 +1,372 @@
+"""Distilled fast path (ISSUE 10): single-chain student + uncertainty head.
+
+Covers the distillation stack end to end:
+
+* ``repro.core.distill`` — deterministic (flagged) rows are the identity
+  draw in every backend, student heads adopt the teacher's prediction head,
+  the one-pass summaries obey the same decomposition identities as the
+  S-chain estimator, and the teacher targets are exactly the ``Running*``
+  accumulators' output.
+* ``repro.train.distill`` — the heads-only trainer actually fits, and
+  ``cache_targets`` (one teacher sweep, cycled head steps) is equivalent to
+  re-feeding the same batches.
+* serving integration — a ``mode="student"`` session's summary equals the
+  student heads on a solo deterministic pass, co-batching with MC sessions
+  changes nothing, and ``student_rows``/``escalations`` thread through
+  ``JsonlSink``/``summarize``/fleet attribution.
+
+The escalation/regrowth bit-identity pin (``SessionStore.grow``) lives in
+``tests/test_streaming.py``; snapshot durability of session modes in
+``tests/test_snapshot_compat.py``.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autoencoder as ae, classifier as clf, distill, mcd
+from repro.core.uncertainty import RunningClassificationSummary
+from repro.serve import (FleetEngine, JsonlSink, StreamingEngine, TenantSpec,
+                         summarize)
+from repro.train import distill as distill_train
+
+BACKENDS = ("reference", "pallas_step", "pallas_seq")
+
+
+def _clf_cfg(s=4, seed=3, placement="YN"):
+    return clf.ClassifierConfig(
+        hidden=8, num_layers=2, num_classes=4,
+        mcd=mcd.MCDConfig(p=0.25, placement=placement, n_samples=s,
+                          seed=seed))
+
+
+def _ae_cfg(s=4, heteroscedastic=True):
+    return ae.AutoencoderConfig(
+        hidden=8, num_layers=1, heteroscedastic=heteroscedastic,
+        mcd=mcd.MCDConfig(p=0.25, placement="Y", n_samples=s, seed=1))
+
+
+def _x(b=3, t=6, key=0):
+    return jax.random.normal(jax.random.key(key), (b, t, 1))
+
+
+class TestDetRows:
+    def test_flag_roundtrip(self):
+        rows = np.asarray(distill.det_rows(3, base=5))
+        assert [mcd.base_row(r) for r in rows] == [5, 6, 7]
+        assert all(mcd.is_student_row(r) for r in rows)
+        assert not mcd.is_student_row(mcd.base_row(rows[0]))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_det_row_is_the_identity_draw(self, backend):
+        """A flagged row's masks are the identity: its output equals the
+        same trunk with MC dropout placed nowhere — for any base id.
+        (Allclose against the no-placement graph: it skips the mask
+        multiply entirely, a different op order at float epsilon.)"""
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        x = _x()
+        out = clf.apply(params, x, distill.det_rows(3), cfg, backend=backend)
+        cfg_off = dataclasses.replace(
+            cfg, mcd=cfg.mcd.replace(placement="NN"))
+        want = clf.apply(params, x, jnp.arange(3, dtype=jnp.uint32), cfg_off,
+                         backend=backend)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-6)
+        shifted = clf.apply(params, x, distill.det_rows(3, base=17), cfg,
+                            backend=backend)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(shifted))
+
+    def test_det_rows_agree_across_backends(self):
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        x = _x()
+        outs = [np.asarray(clf.apply(params, x, distill.det_rows(3), cfg,
+                                     backend=b)) for b in BACKENDS]
+        for got in outs[1:]:
+            np.testing.assert_allclose(got, outs[0], atol=1e-5)
+
+
+class TestStudentHeads:
+    def test_init_adopts_teacher_head(self):
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        student = distill.init_student(jax.random.key(1), cfg, params)
+        assert set(student) == {"head", "unc"}
+        for a, b in zip(jax.tree_util.tree_leaves(student["head"]),
+                        jax.tree_util.tree_leaves(params["head"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the uncertainty head is H -> 1 and always fresh
+        w = jax.tree_util.tree_leaves(student["unc"])
+        assert any(lf.shape == (cfg.hidden, 1) for lf in w)
+
+    def test_classifier_summary_decomposition(self):
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        student = distill.init_student(jax.random.key(1), cfg, params)
+        h = jax.random.normal(jax.random.key(2), (5, cfg.hidden))
+        summ = distill.classifier_student_summary(student, h)
+        probs = np.asarray(summ.probs)
+        np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-6)
+        assert (np.asarray(summ.mutual_information) >= 0).all()
+        np.testing.assert_allclose(
+            np.asarray(summ.expected_entropy),
+            np.asarray(summ.predictive_entropy)
+            - np.asarray(summ.mutual_information), atol=1e-6)
+
+    @pytest.mark.parametrize("het", (True, False))
+    def test_autoencoder_summary_decomposition(self, het):
+        cfg = _ae_cfg(heteroscedastic=het)
+        params = ae.init(jax.random.key(0), cfg)
+        student = distill.init_student(jax.random.key(1), cfg, params)
+        dec = jax.random.normal(jax.random.key(2), (2, 6, cfg.hidden))
+        summ = distill.autoencoder_student_summary(student, dec, het)
+        np.testing.assert_allclose(
+            np.asarray(summ.total),
+            np.asarray(summ.aleatoric) + np.asarray(summ.epistemic),
+            atol=1e-6)
+        assert (np.asarray(summ.epistemic) >= 0).all()
+        if not het:
+            assert (np.asarray(summ.aleatoric) == 0).all()
+
+
+class TestTeacherTargets:
+    def test_classifier_targets_are_the_running_estimator(self):
+        """The distill target is exactly what serving reports: S chains
+        folded through RunningClassificationSummary, chain-major rows."""
+        cfg = _clf_cfg(s=3)
+        params = clf.init(jax.random.key(0), cfg)
+        x = _x(b=2)
+        got = distill.classifier_teacher_targets(params, x, cfg)
+        S, B = 3, 2
+        logits = clf.apply(params, jnp.tile(x, (S, 1, 1)),
+                           jnp.arange(S * B, dtype=jnp.uint32), cfg)
+        acc = RunningClassificationSummary()
+        acc.update(jnp.reshape(logits, (S, B, -1)))
+        want = acc.finalize()
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_n_samples_and_base_row_override(self):
+        cfg = _clf_cfg(s=4)
+        params = clf.init(jax.random.key(0), cfg)
+        x = _x(b=1)
+        a = distill.classifier_teacher_targets(params, x, cfg, n_samples=2)
+        b = distill.classifier_teacher_targets(params, x, cfg, n_samples=2,
+                                               base_row=64)
+        # different rows, different draws — same estimator, different value
+        assert not np.array_equal(np.asarray(a.probs), np.asarray(b.probs))
+
+    def test_autoencoder_targets_shapes(self):
+        cfg = _ae_cfg(s=3)
+        params = ae.init(jax.random.key(0), cfg)
+        x = _x(b=2, t=5)
+        t = distill.autoencoder_teacher_targets(params, x, cfg)
+        assert np.asarray(t.mean).shape[0] == 2
+        assert (np.asarray(t.epistemic) >= 0).all()
+
+
+class TestDistillTrainer:
+    def test_classifier_heads_fit(self):
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        xs = [_x(b=4, key=k) for k in range(2)]
+        dcfg = distill_train.DistillConfig(lr=3e-2, cache_targets=True)
+        student, hist = distill_train.distill_classifier(
+            params, cfg, xs, 60, key=jax.random.key(1), dcfg=dcfg)
+        assert len(hist) == 60
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+    def test_autoencoder_heads_fit(self):
+        cfg = _ae_cfg()
+        params = ae.init(jax.random.key(0), cfg)
+        xs = [_x(b=4, t=5)]
+        dcfg = distill_train.DistillConfig(lr=3e-2, cache_targets=True)
+        student, hist = distill_train.distill_autoencoder(
+            params, cfg, xs, 40, key=jax.random.key(1), dcfg=dcfg)
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+    def test_cache_targets_equals_refeeding(self):
+        """Cycling one cached teacher batch must produce the same student
+        as feeding the identical batch again (targets are deterministic in
+        (params, x) — re-sweeping buys nothing)."""
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        x = _x(b=4)
+        cached, _ = distill_train.distill_classifier(
+            params, cfg, [x], 4, key=jax.random.key(1),
+            dcfg=distill_train.DistillConfig(cache_targets=True))
+        refed, _ = distill_train.distill_classifier(
+            params, cfg, [x, x, x, x], 4, key=jax.random.key(1),
+            dcfg=distill_train.DistillConfig())
+        for a, b in zip(jax.tree_util.tree_leaves(cached),
+                        jax.tree_util.tree_leaves(refed)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _student_engine(cfg_fn=_clf_cfg, init_fn=clf.init, **kw):
+    cfg = cfg_fn()
+    params = init_fn(jax.random.key(0), cfg)
+    student = distill.init_student(jax.random.key(1), cfg, params)
+    eng = StreamingEngine(params, cfg, backend="pallas_seq", student=student,
+                          **kw)
+    return eng, params, cfg, student
+
+
+class TestStudentServing:
+    def test_admission_requires_heads(self):
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        eng = StreamingEngine(params, cfg, backend="pallas_seq")
+        with pytest.raises(ValueError, match="student"):
+            eng.open_session("s", mode="student")
+        with pytest.raises(ValueError, match="student"):
+            StreamingEngine(params, cfg, backend="pallas_seq",
+                            student_escalate_threshold=0.1)
+        student = distill.init_student(jax.random.key(1), cfg, params)
+        with pytest.raises(ValueError, match=">= 0"):
+            StreamingEngine(params, cfg, backend="pallas_seq",
+                            student=student,
+                            student_escalate_threshold=-1.0)
+
+    def test_classifier_summary_matches_direct_student_pass(self):
+        """A served student chunk == the student heads on a solo
+        deterministic trunk pass over the same signal."""
+        eng, params, cfg, student = _student_engine(max_sessions=1)
+        eng.open_session("s", mode="student")
+        x = np.asarray(_x(b=1, t=6, key=5)[0], np.float32)
+        got = eng.step({"s": jnp.asarray(x)})["s"].summary
+        _, states = clf.apply(params, jnp.asarray(x)[None],
+                              distill.det_rows(1), cfg,
+                              backend="pallas_seq", return_state=True)
+        want = distill.classifier_student_summary(student, states[-1][0])
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w[0]))
+
+    def test_autoencoder_student_session_serves(self):
+        eng, params, cfg, student = _student_engine(
+            cfg_fn=_ae_cfg, init_fn=ae.init, max_sessions=1)
+        eng.open_session("s", mode="student")
+        x = np.asarray(_x(b=1, t=5, key=6)[0], np.float32)
+        got = eng.step({"s": jnp.asarray(x)})["s"].summary
+        assert np.asarray(got.mean).shape[0] == 5
+        np.testing.assert_allclose(
+            np.asarray(got.total),
+            np.asarray(got.aleatoric) + np.asarray(got.epistemic), atol=1e-6)
+        assert eng.last_metrics.student_rows == 1
+
+    def test_cobatching_with_mc_sessions_changes_nothing(self):
+        """Student rows fold into the same per-layer launches as the MC
+        sessions; neither side's outputs move.  The student side is
+        allclose-pinned: its h_T rides a different batch geometry solo vs
+        co-batched (XLA batches the matmul differently at float epsilon),
+        unlike MC rows whose summary reductions are layout-invariant."""
+        solo, params, cfg, student = _student_engine(max_sessions=1)
+        solo.open_session("s", mode="student")
+        mixed = StreamingEngine(params, cfg, backend="pallas_seq",
+                                student=student, max_sessions=3)
+        mc_solo = StreamingEngine(params, cfg, backend="pallas_seq",
+                                  max_sessions=2)
+        # admission order: MC first so the MC engines hand out identical
+        # row ids; the student row's id is compute-irrelevant either way
+        mixed.open_session("mc0")
+        mixed.open_session("mc1")
+        mixed.open_session("s", mode="student")
+        mc_solo.open_session("mc0")
+        mc_solo.open_session("mc1")
+        for t in range(3):
+            x = {sid: _sig(10 + 3 * t + i, 4)
+                 for i, sid in enumerate(("mc0", "mc1", "s"))}
+            got = mixed.step(x)
+            want_s = solo.step({"s": x["s"]})["s"]
+            want_mc = mc_solo.step({k: x[k] for k in ("mc0", "mc1")})
+            assert mixed.last_metrics.student_rows == 1
+            np.testing.assert_allclose(
+                np.asarray(got["s"].summary.probs),
+                np.asarray(want_s.summary.probs), atol=1e-6)
+            for sid in ("mc0", "mc1"):
+                np.testing.assert_array_equal(
+                    np.asarray(got[sid].summary.probs),
+                    np.asarray(want_mc[sid].summary.probs))
+
+
+def _sig(key, t):
+    return jax.random.normal(jax.random.key(key), (t, 1))
+
+
+class TestMetricsThreading:
+    def test_jsonl_sink_carries_student_fields(self, tmp_path):
+        """Tick 0: both rows on the student, the noisy one escalates.
+        Tick 1 onward: the quiet stream stays a student row, no further
+        escalations.  The unc head is crafted, not trained: its weight
+        vector points along the noisy chunk's h_T, so the noisy stream
+        predicts softplus(|h|) while the quiet (flatline through a
+        zero-bias fresh init) predicts exactly softplus(0) — a threshold
+        of softplus(0) separates them by construction under strict >."""
+        from repro.core import linear
+
+        path = str(tmp_path / "ticks.jsonl")
+        sink = JsonlSink(path)
+        eng, params, cfg, student = _student_engine(
+            max_sessions=2, metrics_sink=sink,
+            student_escalate_threshold=float(jax.nn.softplus(0.0)))
+        _, states = clf.apply(params, jnp.asarray(_sig(20, 4))[None],
+                              distill.det_rows(1), cfg,
+                              backend="pallas_seq", return_state=True)
+        h = np.asarray(states[-1][0][0])
+        student["unc"] = linear.DenseParams(
+            jnp.asarray(h[:, None] / np.linalg.norm(h)),
+            jnp.zeros((1,), jnp.float32))
+        eng.open_session("quiet", mode="student")
+        eng.open_session("noisy", mode="student")
+        for t in range(2):
+            eng.step({"quiet": jnp.zeros((4, 1)),
+                      "noisy": _sig(20 + t, 4)})
+        sink.close()
+        recs = [json.loads(ln) for ln in open(path)]
+        assert [r["student_rows"] for r in recs] == [2, 1]
+        assert [r["escalations"] for r in recs] == [1, 0]
+        assert eng.store.get("noisy").mode == "mc"
+        assert eng.store.get("quiet").mode == "student"
+        agg = summarize(eng.metrics)
+        assert agg["escalations"] == 1
+        assert agg["student_rows_mean"] == pytest.approx(1.5)
+
+    def test_fleet_metrics_attribute_per_tenant(self, tmp_path):
+        """A student tenant next to a plain MC tenant: the student rows
+        and the escalation land on the right tenant's records."""
+        cfg = _clf_cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        student = distill.init_student(jax.random.key(1), cfg, params)
+        path = str(tmp_path / "fleet.jsonl")
+        sink = JsonlSink(path)
+        fleet = FleetEngine([
+            TenantSpec(name="fast", cfg=cfg, params=params, student=student,
+                       student_escalate_threshold=0.0),
+            TenantSpec(name="plain", cfg=cfg, params=params),
+        ], metrics_sink=sink)
+        assert len(fleet.groups) == 2            # student policy splits
+        fleet.admit("fast", "p", mode="student")
+        fleet.admit("plain", "p")
+        for t in range(2):
+            fleet.step({"fast": {"p": _sig(30 + t, 4)},
+                        "plain": {"p": _sig(40 + t, 4)}})
+        sink.close()
+        store = fleet.group_of("fast").engine.store
+        assert store.get("fast/p").mode == "mc"  # threshold 0.0 escalated
+        per_tenant = {}
+        for ln in open(path):
+            r = json.loads(ln)
+            if r.get("tenant"):
+                per_tenant.setdefault(r["tenant"], []).append(r)
+        assert [r["student_rows"] for r in per_tenant["fast"]] == [1, 0]
+        assert sum(r["escalations"] for r in per_tenant["fast"]) == 1
+        assert all(r["student_rows"] == 0 and r["escalations"] == 0
+                   for r in per_tenant["plain"])
+        agg = summarize(fleet.metrics)
+        assert agg["tenants"]["fast"]["escalations"] == 1
+        assert agg["tenants"]["plain"]["escalations"] == 0

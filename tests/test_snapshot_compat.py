@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import classifier as clf, mcd
+from repro.core import classifier as clf, distill, mcd
 from repro.serve import (FleetEngine, StreamingEngine, TenantSpec,
                          load_fleet_meta, load_snapshot_meta)
 
@@ -198,6 +198,143 @@ class TestPrecisionMismatch:
                              precision="int8")
         ok.restore(str(tmp_path))
         assert ok.active_sessions == ["a"]
+
+
+class TestDistillCompat:
+    """ISSUE 10: session ``mode`` became durable state.  The ``mode`` key is
+    written only off the default, so pre-distill snapshots stay
+    byte-identical to the current format and restore as all-MC; the
+    ``distill_v1`` golden pins that student sessions (flagged single row,
+    student-heads decode) and queued student tickets keep restoring; and a
+    student snapshot must be refused by an engine built without heads."""
+
+    def _cfg(self):
+        return clf.ClassifierConfig(
+            hidden=HIDDEN, num_layers=NUM_LAYERS,
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=N_SAMPLES,
+                              seed=SEED))
+
+    def _student_engine(self, **kw):
+        cfg = self._cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        student = distill.init_student(jax.random.key(1), cfg, params)
+        return StreamingEngine(params, cfg, backend="pallas_seq",
+                               student=student, **kw), params, student
+
+    def test_pre_distill_fixtures_restore_all_mc(self):
+        eng = _engine("lstm")
+        eng.restore(os.path.join(FIXTURES, "pr3_lstm"))
+        assert all(eng.store.get(sid).mode == "mc"
+                   for sid in eng.store.active)
+
+    def test_all_mc_snapshot_writes_no_mode_key(self, tmp_path):
+        """The byte-compat claim itself: an all-MC store's session metas
+        must not grow a ``mode`` key (old readers never look for one)."""
+        eng = _engine("lstm")
+        eng.open_session("a")
+        eng.step({"a": jnp.ones((3, 1))})
+        eng.snapshot(str(tmp_path))
+        meta = load_snapshot_meta(str(tmp_path))
+        assert all("mode" not in m for m in meta["sessions"].values())
+
+    def test_distill_v1_restores_and_serves(self):
+        eng, _, _ = self._student_engine()
+        eng.restore(os.path.join(FIXTURES, "distill_v1"))
+        sess = eng.store.get("ward_2")
+        assert sess.mode == "student"
+        rows = np.asarray(sess.rows)
+        assert rows.shape == (1,) and int(rows[0]) == 0x8000_0000 | N_SAMPLES
+        assert eng.store.get("ward_1").mode == "mc"
+        # the queued fresh student ticket survived with its mode
+        assert [t.mode for t in eng.queue.waiting()] == ["student"]
+        # and the student session actually serves on the fast path
+        out = eng.step({"ward_2": jnp.ones((3, 1)), "ward_1": jnp.ones((3, 1))})
+        assert out["ward_2"].steps_total == 10
+        assert eng.last_metrics.student_rows == 1
+
+    def test_student_snapshot_refused_without_student_heads(self):
+        with pytest.raises(ValueError, match="student= heads"):
+            _engine("lstm").restore(os.path.join(FIXTURES, "distill_v1"))
+
+    def test_engine_student_round_trip_bit_identical(self, tmp_path):
+        """Kill→restore around live student + MC sessions: modes survive
+        and the resumed streams continue bit-identically."""
+        gold, params, student = self._student_engine(max_sessions=4)
+        sig = np.asarray(jax.random.normal(jax.random.key(3), (12, 1)),
+                         np.float32)
+
+        def serve(eng, lo, hi, out=None):
+            for t in range(lo, hi):
+                out = eng.step({
+                    "stu": jnp.asarray(sig[3 * t:3 * (t + 1)]),
+                    "mc": jnp.asarray(sig[3 * t:3 * (t + 1)])})
+            return out
+
+        gold.open_session("stu", mode="student")
+        gold.open_session("mc")
+        final_gold = serve(gold, 0, 4)
+
+        victim, *_ = self._student_engine(max_sessions=4)
+        victim.student = student          # same heads as gold
+        victim.open_session("stu", mode="student")
+        victim.open_session("mc")
+        serve(victim, 0, 2)
+        victim.snapshot(str(tmp_path))
+        del victim
+
+        revived, *_ = self._student_engine(max_sessions=4)
+        revived.student = student
+        revived.restore(str(tmp_path))
+        assert revived.store.get("stu").mode == "student"
+        assert revived.store.get("mc").mode == "mc"
+        final_res = serve(revived, 2, 4)
+        for sid in ("stu", "mc"):
+            np.testing.assert_array_equal(
+                np.asarray(final_res[sid].summary.probs),
+                np.asarray(final_gold[sid].summary.probs))
+
+    def test_fleet_student_round_trip_bit_identical(self, tmp_path):
+        """Same contract through a fleet manifest: a tenant's student
+        session survives the fleet kill→restore, mode intact."""
+        cfg = self._cfg()
+        params = clf.init(jax.random.key(0), cfg)
+        student = distill.init_student(jax.random.key(1), cfg, params)
+
+        def make_fleet():
+            return FleetEngine([TenantSpec(name="t", cfg=cfg, params=params,
+                                           max_sessions=4, student=student)])
+
+        sig = np.asarray(jax.random.normal(jax.random.key(4), (12, 1)),
+                         np.float32)
+
+        def serve(fleet, lo, hi, out=None):
+            for t in range(lo, hi):
+                out = fleet.step({"t": {
+                    "stu": jnp.asarray(sig[3 * t:3 * (t + 1)]),
+                    "mc": jnp.asarray(sig[3 * t:3 * (t + 1)])}})
+            return out
+
+        gold = make_fleet()
+        gold.admit("t", "stu", mode="student")
+        gold.admit("t", "mc")
+        final_gold = serve(gold, 0, 4)
+
+        victim = make_fleet()
+        victim.admit("t", "stu", mode="student")
+        victim.admit("t", "mc")
+        serve(victim, 0, 2)
+        victim.snapshot(str(tmp_path))
+        del victim
+
+        revived = make_fleet()
+        revived.restore(str(tmp_path))
+        store = revived.group_of("t").engine.store
+        assert store.get("t/stu").mode == "student"
+        final_res = serve(revived, 2, 4)
+        for sid in ("stu", "mc"):
+            np.testing.assert_array_equal(
+                np.asarray(final_res["t"][sid].summary.probs),
+                np.asarray(final_gold["t"][sid].summary.probs))
 
 
 class TestDynamicSCompat:

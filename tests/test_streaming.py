@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import autoencoder as ae, classifier as clf, mcd, rnn
+from repro.core import autoencoder as ae, classifier as clf, distill, mcd, rnn
 from repro.core.uncertainty import classification_summary
 from repro.serve import (CapacityError, SessionStore, StreamingEngine)
 
@@ -344,6 +344,88 @@ class TestSessionStore:
             fresh2 = SessionStore(n_samples=2, seed=7, max_sessions=4)
             fresh2.admit("live")                     # rows [0, 1]
             fresh2.attach(colliding)
+
+
+class TestStudentFallback:
+    """``SessionStore.grow`` and the distill fallback pin (the grow
+    docstring's contract): an escalated student session must stream on
+    bit-identically to an always-MC session attached with the regrown
+    rows and the tiled carry."""
+
+    def test_grow_mc_appends_fresh_zero_carry_chains(self):
+        store = SessionStore(n_samples=6, seed=0)
+        sess = store.admit("a", n_samples=2)            # rows [0, 1]
+        sess.state = [(np.full((2, 3), 5.0, np.float32),
+                       np.full((2, 3), 9.0, np.float32))]
+        assert store.grow("a", 5) == 3
+        np.testing.assert_array_equal(np.asarray(sess.rows),
+                                      [0, 1, 2, 3, 4])  # fresh, never reused
+        h, c = sess.state[0]
+        np.testing.assert_array_equal(np.asarray(h[:2]), 5.0 * np.ones((2, 3)))
+        np.testing.assert_array_equal(np.asarray(h[2:]),
+                                      np.zeros((3, 3)))  # newcomers fresh
+        np.testing.assert_array_equal(np.asarray(c[2:]), np.zeros((3, 3)))
+        assert store.grow("a", 5) == 0                   # no-op at target
+        with pytest.raises(ValueError, match="grow target"):
+            store.grow("a", 7)                           # above the ceiling
+        with pytest.raises(ValueError, match="grow target"):
+            store.grow("a", 4)                           # chains never shrink
+
+    def test_grow_student_replaces_row_tiles_carry_flips_mode(self):
+        store = SessionStore(n_samples=4, seed=0)
+        sess = store.admit("s", mode="student")          # one flagged row
+        assert sess.mode == "student"
+        assert mcd.is_student_row(int(np.asarray(sess.rows)[0]))
+        carry = np.arange(3.0, dtype=np.float32)[None]   # (1, H)
+        sess.state = [(carry, carry + 10.0)]
+        assert store.grow("s", 4) == 4
+        rows = np.asarray(sess.rows)
+        assert rows.shape == (4,)
+        assert not any(mcd.is_student_row(int(r)) for r in rows)
+        assert sess.mode == "mc"
+        for part, base in zip(sess.state[0], (carry, carry + 10.0)):
+            np.testing.assert_array_equal(np.asarray(part),
+                                          np.tile(base, (4, 1)))
+        # the det row's base id stays burned; fresh rows follow it
+        later = store.admit("next")
+        assert int(np.asarray(later.rows)[0]) == int(rows[-1]) + 1
+
+    @pytest.mark.parametrize("backend", ("reference", "pallas_seq"))
+    def test_escalated_session_bit_identical_to_attached_mc_twin(self,
+                                                                 backend):
+        """The distill fallback pin: fresh rows ⇒ fresh masks, so from the
+        first post-escalation chunk the regrown session is byte-for-byte
+        an always-MC session attached at the student's carry."""
+        cfg = clf.ClassifierConfig(
+            hidden=8, num_layers=2, num_classes=4,
+            mcd=mcd.MCDConfig(p=0.125, placement="YN", n_samples=4, seed=3))
+        params = clf.init(jax.random.key(0), cfg)
+        student = distill.init_student(jax.random.key(1), cfg, params)
+        sig = np.asarray(jax.random.normal(jax.random.key(2), (16, 1)),
+                         np.float32)
+
+        def chunk(t):
+            return {"p": jnp.asarray(sig[4 * t:4 * (t + 1)])}
+
+        # threshold 0.0: a fresh unc head predicts softplus-positive MI on
+        # any input, so the first served chunk escalates
+        esc = StreamingEngine(params, cfg, backend=backend, max_sessions=1,
+                              student=student,
+                              student_escalate_threshold=0.0)
+        esc.open_session("p", mode="student")
+        esc.step(chunk(0))
+        assert esc.last_metrics.escalations == 1
+        sess = esc.store.get("p")
+        assert sess.mode == "mc" and int(sess.rows.shape[0]) == 4
+
+        plain = StreamingEngine(params, cfg, backend=backend, max_sessions=1)
+        plain.attach_session(dataclasses.replace(
+            sess, state=[tuple(layer) for layer in sess.state]))
+        for t in range(1, 4):
+            got = esc.step(chunk(t))["p"].summary
+            want = plain.step(chunk(t))["p"].summary
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
 class TestStreamingEngine:
